@@ -1,0 +1,49 @@
+"""Example 1 (paper Sec. 4.1 / App. A): the alternating ring controls
+neighborhood heterogeneity regardless of cluster separation m.
+
+Validates: tau_bar^2 stays <= 4*sigma~^2 for every m while zeta_bar^2 = 4m^2
+diverges; D-SGD on the ring converges at an m-independent rate.
+"""
+
+import time
+
+import numpy as np
+
+from .common import emit, save_rows
+from repro.core import topology as T
+from repro.core.heterogeneity import (
+    local_heterogeneity,
+    neighborhood_heterogeneity_mc,
+)
+from repro.data.synthetic import MeanEstimationTask
+from repro.train.trainer import run_mean_estimation
+
+
+def main() -> None:
+    n, sig2 = 20, 1.0
+    W = T.alternating_ring(n)
+    rows = []
+    t0 = time.perf_counter()
+    for m in (0.0, 1.0, 5.0, 25.0, 125.0):
+        task = MeanEstimationTask(
+            n_nodes=n, K=2, cluster_means=np.array([m, -m]), sigma_tilde2=sig2
+        )
+        G = task.expected_grads(0.0)
+        zeta2 = local_heterogeneity(G)
+
+        def sampler(rng, task=task):
+            z = rng.normal(task.node_means, np.sqrt(sig2))
+            return (-2.0 * z)[:, None]
+
+        H = neighborhood_heterogeneity_mc(W, sampler, n_samples=1000, seed=0)
+        out = run_mean_estimation(task, W, steps=60, lr=0.2, seed=0)
+        rows.append([m, zeta2, H, 4 * sig2, out["mean_sq_error"][-1]])
+    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+    save_rows("example1.csv", ["m", "zeta2", "H_measured", "tau2_bound", "final_mse"], rows)
+    # derived: max measured H across m (must stay below the 4*sigma~^2 bound)
+    max_h = max(r[2] for r in rows)
+    emit("example1_ring_vs_m", us, f"maxH={max_h:.3f}<=bound4.0;zeta2(m=125)={rows[-1][1]:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Kernel micro-benchmarks: Pallas (interpret mode on CPU) vs jnp oracle.
+
+NOTE: interpret mode executes the kernel body in Python -- wall-clock here
+measures the CPU stand-in, not TPU performance; correctness deltas and the
+XLA-path timings are the meaningful numbers. TPU timing comes from the
+roofline analysis (launch/roofline.py).
+"""
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit, timeit
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.gossip_mix import gossip_mix, gossip_mix_ref
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+
+    # gossip mix: n=16 nodes, 8M flat params
+    theta = jnp.asarray(rng.normal(size=(16, 1 << 21)), jnp.float32)
+    W = np.abs(rng.normal(size=(16, 16)))
+    W = jnp.asarray(W / W.sum(1, keepdims=True), jnp.float32)
+    ref_us = timeit(lambda: gossip_mix_ref(theta, W).block_until_ready())
+    ker_us = timeit(lambda: gossip_mix(theta, W).block_until_ready())
+    err = float(jnp.max(jnp.abs(gossip_mix(theta, W) - gossip_mix_ref(theta, W))))
+    emit("gossip_mix_16x2M_ref_xla", ref_us, f"maxerr={err:.1e}")
+    emit("gossip_mix_16x2M_pallas_interpret", ker_us, "interpret-mode")
+
+    # flash attention: S=512, H=8/4, D=128
+    q = jnp.asarray(rng.normal(size=(1, 512, 8, 128)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 512, 4, 128)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 512, 4, 128)), jnp.float32)
+    ref_us = timeit(lambda: flash_attention_ref(q, k, v).block_until_ready())
+    ker_us = timeit(
+        lambda: flash_attention(q, k, v).block_until_ready(), iters=1, warmup=1
+    )
+    err = float(jnp.max(jnp.abs(flash_attention(q, k, v) - flash_attention_ref(q, k, v))))
+    emit("flash_attention_512_ref_xla", ref_us, f"maxerr={err:.1e}")
+    emit("flash_attention_512_pallas_interpret", ker_us, "interpret-mode")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Tables 1-3 (paper App. D.2): statistics of the used topologies.
+
+Per topology: in/out degree (mean +- std), classes in neighborhood, bias
+(the label-skew neighborhood bias of Eq. 7) and 1-p.
+"""
+
+import time
+
+import numpy as np
+
+from .common import emit, save_rows
+from repro.core import topology as T
+from repro.core.dcliques import d_cliques
+from repro.core.heterogeneity import classes_in_neighborhood, label_skew_bias
+from repro.core.stl_fw import learn_topology
+from repro.data.partition import shard_partition
+from repro.data.synthetic import gaussian_blobs
+
+
+def stats_row(name: str, W: np.ndarray, Pi: np.ndarray) -> list:
+    ind = T.in_degrees(W)
+    outd = T.out_degrees(W)
+    cls = classes_in_neighborhood(W, Pi)
+    bias = label_skew_bias(W, Pi)
+    one_minus_p = 1.0 - T.mixing_parameter(W)
+    return [
+        name,
+        f"{ind.mean():.2f}+-{ind.std():.2f}",
+        f"{outd.mean():.2f}+-{outd.std():.2f}",
+        f"{cls.mean():.2f}+-{cls.std():.2f}",
+        f"{bias:.5f}",
+        f"{one_minus_p:.3f}",
+    ]
+
+
+def main() -> None:
+    t0 = time.perf_counter()
+    n = 100
+    X, y = gaussian_blobs(n_samples=10000, num_classes=10, dim=32, seed=0)
+    _, Pi = shard_partition(y, n, shards_per_node=2, seed=0)
+
+    rows = []
+    derived = []
+    for budget in (2, 5, 10):
+        Ws = learn_topology(Pi, budget=budget, lam=0.1).W
+        Wr = T.random_d_regular(n, budget, seed=0)
+        rows.append([f"d{budget}"] + stats_row(f"stl-fw(d{budget})", Ws, Pi)[1:])
+        rows[-1][0] = f"stl-fw(d{budget})"
+        rows.append(stats_row(f"random(d{budget})", Wr, Pi))
+        if budget == 10:
+            derived.append(
+                f"bias_stlfw_d10={label_skew_bias(Ws, Pi):.5f}"
+                f";bias_rnd_d10={label_skew_bias(Wr, Pi):.5f}"
+            )
+    rows.append(stats_row("d-cliques", d_cliques(Pi, clique_size=10, seed=0), Pi))
+    rows.append(stats_row("exponential", T.exponential_graph(n), Pi))
+    save_rows(
+        "tables.csv",
+        ["topology", "in_degree", "out_degree", "classes_in_nbhd", "bias", "1-p"],
+        rows,
+    )
+    for r in rows:
+        print("# table:", ",".join(str(x) for x in r))
+    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+    emit("tables_topology_stats", us, ";".join(derived))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+RESULT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The harness CSV contract: ``name,us_per_call,derived``."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timeit(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(*args)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def save_rows(filename: str, header: list[str], rows: list[list]) -> str:
+    os.makedirs(RESULT_DIR, exist_ok=True)
+    path = os.path.join(RESULT_DIR, filename)
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for row in rows:
+            f.write(",".join(str(x) for x in row) + "\n")
+    return path

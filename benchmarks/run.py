@@ -1,0 +1,54 @@
+"""Benchmark harness: one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract) and saves the
+full data tables under experiments/bench/.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only fig2
+"""
+
+import argparse
+import sys
+import traceback
+
+from . import (
+    bench_example1,
+    bench_fig1,
+    bench_fig2,
+    bench_kernels,
+    bench_tables,
+    bench_theory,
+    bench_thm2,
+)
+
+BENCHES = {
+    "example1": bench_example1.main,
+    "fig1": bench_fig1.main,
+    "fig2": bench_fig2.main,
+    "tables": bench_tables.main,
+    "thm2": bench_thm2.main,
+    "theory": bench_theory.main,
+    "kernels": bench_kernels.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        try:
+            BENCHES[name]()
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Quickstart: learn a sparse topology with STL-FW and train with D-SGD.
+
+Reproduces the paper's core loop in ~30 lines of user code:
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import learn_topology, topology as T
+from repro.data.synthetic import mean_estimation_clusters
+from repro.train.trainer import run_mean_estimation
+
+
+def main() -> None:
+    # 100 agents, 10 latent data clusters, heterogeneity level m = 5
+    task = mean_estimation_clusters(n_nodes=100, K=10, m=5.0)
+
+    # STL-FW: learn a sparse mixing matrix from the class proportions Pi.
+    # budget = 9 edges per node (the paper's elbow: K - 1).
+    result = learn_topology(task.Pi, budget=9, lam=0.5)
+    print(f"learned topology: d_max = {T.max_degree(result.W)}, "
+          f"bias = {result.bias_trace[-1]:.2e}, "
+          f"1-p = {1 - T.mixing_parameter(result.W):.3f}")
+
+    # run D-SGD (Algorithm 1) on the learned topology vs a random baseline
+    out_stl = run_mean_estimation(task, result.W, steps=60, lr=0.2)
+    out_rnd = run_mean_estimation(task, T.random_d_regular(100, 9, seed=0),
+                                  steps=60, lr=0.2)
+    print(f"final error  STL-FW: {out_stl['mean_sq_error'][-1]:.5f}")
+    print(f"final error  random: {out_rnd['mean_sq_error'][-1]:.5f}")
+    print(f"worst node   STL-FW: {out_stl['max_sq_error'][-1]:.5f}")
+    print(f"worst node   random: {out_rnd['max_sq_error'][-1]:.5f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Serving demo: batched prefill + decode across architecture families.
+
+Greedy-generates from randomly initialized reduced models (weights are
+untrained; the demo shows the engine API: batched requests, KV/window/
+recurrent caches, long-context mode).
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import init_model
+from repro.serve.engine import generate
+
+
+def main() -> None:
+    for name, kwargs in [
+        ("qwen3-0.6b", {}),
+        ("gemma2-2b", {}),  # alternating local/global attention
+        ("xlstm-350m", {}),  # recurrent state decode
+        ("recurrentgemma-2b", {"long_context": True}),  # sub-quadratic mode
+    ]:
+        cfg = get_smoke_config(name)
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        prompt = jax.random.randint(jax.random.PRNGKey(1), (4, 12), 0, cfg.vocab_size)
+        t0 = time.time()
+        out = generate(params, cfg, prompt, max_new_tokens=16, **kwargs)
+        dt = time.time() - t0
+        print(f"{name:20s} batch=4 prompt=12 -> +16 tokens in {dt:.2f}s "
+              f"(first request: {out[0][:8].tolist()}...)")
+
+    # VLM: image patches prepended
+    cfg = get_smoke_config("llava-next-mistral-7b")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
+    img = jax.random.normal(jax.random.PRNGKey(2), (2, cfg.vision.num_patches, cfg.d_model)) * 0.1
+    out = generate(params, cfg, prompt, max_new_tokens=8, image_embeds=img)
+    print(f"{'llava (vlm)':20s} image+text decode ok: {out.shape}")
+
+    # audio enc-dec
+    cfg = get_smoke_config("whisper-small")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    frames = jax.random.normal(jax.random.PRNGKey(3), (2, cfg.encoder.num_frames, cfg.d_model)) * 0.1
+    prompt = jax.random.randint(jax.random.PRNGKey(4), (2, 4), 0, cfg.vocab_size)
+    out = generate(params, cfg, prompt, max_new_tokens=8, frames=frames)
+    print(f"{'whisper (audio)':20s} enc-dec decode ok: {out.shape}")
+
+
+if __name__ == "__main__":
+    main()

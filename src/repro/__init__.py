@@ -1,0 +1,8 @@
+"""repro: Decentralized SGD with learned topologies (STL-FW) on JAX/TPU.
+
+Reproduction + systems extension of "Refined Convergence and Topology
+Learning for Decentralized SGD with Heterogeneous Data" (Le Bars et al.,
+2022). See DESIGN.md for the system map.
+"""
+
+__version__ = "0.1.0"

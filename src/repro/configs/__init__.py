@@ -1,0 +1,70 @@
+"""Architecture configs: one module per assigned architecture.
+
+``get_config(name)`` returns the exact full config; ``get_smoke_config(name)``
+returns the reduced same-family variant used by CPU smoke tests
+(<= 2 layers, d_model <= 512, <= 4 experts).
+
+Input shapes (assigned):
+  train_4k     seq 4096,   global batch 256   (train_step)
+  prefill_32k  seq 32768,  global batch 32    (serve prefill)
+  decode_32k   seq 32768,  global batch 128   (serve decode: 1 new token)
+  long_500k    seq 524288, global batch 1     (sub-quadratic decode)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.common import ModelConfig
+
+ARCH_NAMES = (
+    "qwen3_moe_30b_a3b",
+    "gemma_2b",
+    "qwen2_5_14b",
+    "xlstm_350m",
+    "deepseek_v2_236b",
+    "gemma2_2b",
+    "qwen3_0_6b",
+    "whisper_small",
+    "llava_next_mistral_7b",
+    "recurrentgemma_2b",
+)
+
+# canonical ids as assigned (hyphenated) -> module names
+ARCH_IDS = {
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "gemma-2b": "gemma_2b",
+    "qwen2.5-14b": "qwen2_5_14b",
+    "xlstm-350m": "xlstm_350m",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "gemma2-2b": "gemma2_2b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "whisper-small": "whisper_small",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+}
+
+INPUT_SHAPES = {
+    "train_4k": {"seq_len": 4096, "global_batch": 256, "kind": "train"},
+    "prefill_32k": {"seq_len": 32768, "global_batch": 32, "kind": "prefill"},
+    "decode_32k": {"seq_len": 32768, "global_batch": 128, "kind": "decode"},
+    "long_500k": {"seq_len": 524288, "global_batch": 1, "kind": "decode_long"},
+}
+
+
+def _module(name: str):
+    mod = ARCH_IDS.get(name, name).replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).config()
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return _module(name).smoke_config()
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {name: get_config(name) for name in ARCH_IDS}

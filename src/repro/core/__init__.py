@@ -1,0 +1,38 @@
+"""Core library: the paper's contribution (topology learning for D-SGD)."""
+
+from . import assignment, dcliques, dsgd, heterogeneity, mixing, stl_fw, theory, topology
+from .dsgd import DSGDState, dsgd_init, dsgd_step_sharded, dsgd_step_stacked
+from .mixing import (
+    BirkhoffSchedule,
+    mix_allreduce,
+    mix_dense,
+    mix_ppermute,
+    schedule_from_matrix,
+    schedule_from_result,
+)
+from .stl_fw import STLFWResult, fw_upper_bound, learn_topology, stl_fw_objective
+
+__all__ = [
+    "assignment",
+    "dcliques",
+    "dsgd",
+    "heterogeneity",
+    "mixing",
+    "stl_fw",
+    "theory",
+    "topology",
+    "DSGDState",
+    "dsgd_init",
+    "dsgd_step_sharded",
+    "dsgd_step_stacked",
+    "BirkhoffSchedule",
+    "mix_allreduce",
+    "mix_dense",
+    "mix_ppermute",
+    "schedule_from_matrix",
+    "schedule_from_result",
+    "STLFWResult",
+    "fw_upper_bound",
+    "learn_topology",
+    "stl_fw_objective",
+]

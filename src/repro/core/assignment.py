@@ -1,0 +1,108 @@
+"""Linear assignment (the Frank-Wolfe LMO over the Birkhoff polytope).
+
+The linear minimization oracle of STL-FW (Algorithm 2) is
+
+    P* = argmin_{P in A} <P, G>
+
+over the set ``A`` of permutation matrices -- the classical assignment
+problem, solvable in O(n^3) with the Hungarian algorithm.
+
+We use ``scipy.optimize.linear_sum_assignment`` (Jonker-Volgenant) when
+scipy is importable, with a self-contained O(n^3) Hungarian implementation
+as a fallback so the core library has no hard scipy dependency.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["linear_assignment", "assignment_to_permutation", "solve_lmo", "hungarian"]
+
+try:  # pragma: no cover - exercised implicitly
+    from scipy.optimize import linear_sum_assignment as _scipy_lsa
+except Exception:  # pragma: no cover
+    _scipy_lsa = None
+
+
+def hungarian(cost: np.ndarray) -> np.ndarray:
+    """O(n^3) Hungarian algorithm (shortest augmenting path / JV variant).
+
+    Returns ``col_of_row`` such that ``sum(cost[i, col_of_row[i]])`` is
+    minimal. Self-contained numpy implementation.
+    """
+    cost = np.asarray(cost, dtype=np.float64)
+    n, m = cost.shape
+    if n != m:
+        raise ValueError("hungarian expects a square cost matrix")
+    INF = np.inf
+    # Standard potentials formulation, 1-indexed internally.
+    u = np.zeros(n + 1)
+    v = np.zeros(n + 1)
+    p = np.zeros(n + 1, dtype=np.int64)  # p[j] = row matched to column j
+    way = np.zeros(n + 1, dtype=np.int64)
+    for i in range(1, n + 1):
+        p[0] = i
+        j0 = 0
+        minv = np.full(n + 1, INF)
+        used = np.zeros(n + 1, dtype=bool)
+        while True:
+            used[j0] = True
+            i0 = p[j0]
+            delta = INF
+            j1 = -1
+            for j in range(1, n + 1):
+                if used[j]:
+                    continue
+                cur = cost[i0 - 1, j - 1] - u[i0] - v[j]
+                if cur < minv[j]:
+                    minv[j] = cur
+                    way[j] = j0
+                if minv[j] < delta:
+                    delta = minv[j]
+                    j1 = j
+            for j in range(n + 1):
+                if used[j]:
+                    u[p[j]] += delta
+                    v[j] -= delta
+                else:
+                    minv[j] -= delta
+            j0 = j1
+            if p[j0] == 0:
+                break
+        while j0 != 0:
+            j1 = way[j0]
+            p[j0] = p[j1]
+            j0 = j1
+    col_of_row = np.zeros(n, dtype=np.int64)
+    for j in range(1, n + 1):
+        if p[j] > 0:
+            col_of_row[p[j] - 1] = j - 1
+    return col_of_row
+
+
+def linear_assignment(cost: np.ndarray) -> np.ndarray:
+    """``col_of_row`` minimizing ``sum_i cost[i, col_of_row[i]]``."""
+    cost = np.asarray(cost, dtype=np.float64)
+    if _scipy_lsa is not None:
+        rows, cols = _scipy_lsa(cost)
+        out = np.empty(cost.shape[0], dtype=np.int64)
+        out[rows] = cols
+        return out
+    return hungarian(cost)
+
+
+def assignment_to_permutation(col_of_row: np.ndarray) -> np.ndarray:
+    """Permutation matrix ``P`` with ``P[i, col_of_row[i]] = 1``."""
+    n = len(col_of_row)
+    P = np.zeros((n, n))
+    P[np.arange(n), col_of_row] = 1.0
+    return P
+
+
+def solve_lmo(grad: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Frank-Wolfe LMO over the Birkhoff polytope.
+
+    Returns ``(P, col_of_row)`` where ``P = argmin_{P perm} <P, grad>``.
+    """
+    col_of_row = linear_assignment(grad)
+    return assignment_to_permutation(col_of_row), col_of_row

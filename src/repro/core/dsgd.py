@@ -1,0 +1,101 @@
+"""D-SGD (paper, Algorithm 1) as a composable JAX optimizer transform.
+
+The algorithm, per node i at step t:
+
+    theta_i^{t+1/2} = theta_i^t - eta_t * grad F_i(theta_i^t, Z_i^t)
+    theta_i^{t+1}   = sum_j W_ij^t theta_j^{t+1/2}
+
+This module provides the *stacked* form used by the n-node simulator
+(leaves carry a leading node axis and the mixing is a dense ``W`` product)
+and the *per-shard* form used inside shard_map on a device mesh (the mixing
+is a Birkhoff ppermute schedule). Both support optional heavy-ball momentum
+(applied locally, as in decentralized momentum SGD variants), though the
+paper's experiments use plain SGD.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .mixing import BirkhoffSchedule, mix_allreduce, mix_dense, mix_ppermute
+
+__all__ = ["DSGDState", "dsgd_init", "dsgd_step_stacked", "dsgd_step_sharded"]
+
+PyTree = Any
+
+
+class DSGDState(NamedTuple):
+    """Optimizer state: step count and (optional) per-node momentum."""
+
+    step: jax.Array
+    momentum: PyTree | None
+
+
+def dsgd_init(params: PyTree, momentum: float = 0.0) -> DSGDState:
+    mom = None
+    if momentum > 0.0:
+        mom = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return DSGDState(step=jnp.zeros((), jnp.int32), momentum=mom)
+
+
+def _local_update(params, grads, state, lr, momentum):
+    """The local gradient half-step theta^{t+1/2} (shared by both forms)."""
+    if state.momentum is not None:
+        new_mom = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g, state.momentum, grads
+        )
+        half = jax.tree_util.tree_map(lambda p, m: p - lr * m, params, new_mom)
+    else:
+        new_mom = None
+        half = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    return half, new_mom
+
+
+def dsgd_step_stacked(
+    params_stack: PyTree,
+    grads_stack: PyTree,
+    state: DSGDState,
+    W: jax.Array,
+    lr: float | jax.Array,
+    momentum: float = 0.0,
+    use_kernel: bool = False,
+) -> tuple[PyTree, DSGDState]:
+    """One D-SGD iteration on stacked per-node parameters (simulator form).
+
+    Args:
+      params_stack / grads_stack: pytrees with leading node axis n.
+      W: (n, n) doubly-stochastic mixing matrix (may differ per call --
+        time-varying topologies are supported by just passing a different W).
+      lr: stepsize eta_t.
+      momentum: heavy-ball coefficient (0 = the paper's plain D-SGD).
+      use_kernel: route the mixing through the Pallas gossip kernel.
+    """
+    half, new_mom = _local_update(params_stack, grads_stack, state, lr, momentum)
+    mixed = mix_dense(half, W, use_kernel=use_kernel)
+    return mixed, DSGDState(step=state.step + 1, momentum=new_mom)
+
+
+def dsgd_step_sharded(
+    params: PyTree,
+    grads: PyTree,
+    state: DSGDState,
+    schedule: BirkhoffSchedule | None,
+    axis_name: str,
+    lr: float | jax.Array,
+    momentum: float = 0.0,
+) -> tuple[PyTree, DSGDState]:
+    """One D-SGD iteration inside shard_map (one node per mesh index).
+
+    ``schedule=None`` selects complete-graph mixing (C-PSGD all-reduce),
+    which is both the paper's baseline and the degenerate W = 11^T/n case.
+    """
+    half, new_mom = _local_update(params, grads, state, lr, momentum)
+    if schedule is None:
+        mixed = mix_allreduce(half, axis_name)
+    else:
+        mixed = mix_ppermute(half, schedule, axis_name)
+    return mixed, DSGDState(step=state.step + 1, momentum=new_mom)

@@ -1,0 +1,113 @@
+"""Time-varying mixing matrices (paper Sec. 3 + App. C.1 extensions).
+
+The paper's analysis allows a different doubly-stochastic ``W^(t)`` per
+iteration (and random ``W ~ W^(t)`` with the expectations of App. C.1).
+This module provides the useful schedules:
+
+* ``PeriodicGossip``   -- W on every k-th step, I otherwise ("local SGD"
+  flavored D-SGD): amortizes communication by 1/k. Assumption 3/4 hold per
+  window with the k-step composite matrix.
+* ``RandomMatching``   -- a random perfect matching each step (classic
+  pairwise gossip): d_max = 1 per step, satisfies Assumption 3 in
+  expectation with p = 1/2 * (pairing probability) -- App. C.1 setting.
+* ``AtomCycling``      -- cycles through the Birkhoff atoms of a learned
+  STL-FW topology one atom per step: per-step communication cost of ONE
+  permutation while the k-step composite approximates the full W. This is
+  the beyond-paper schedule evaluated in EXPERIMENTS.md §Perf.
+
+All schedules expose ``matrix(t) -> np.ndarray`` and are directly usable
+with the simulator (`run_mean_estimation(..., W=schedule)` accepts a
+callable) and convertible per-step to Birkhoff ppermute schedules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .mixing import BirkhoffSchedule
+from .stl_fw import STLFWResult
+
+__all__ = ["PeriodicGossip", "RandomMatching", "AtomCycling", "composite_matrix"]
+
+
+@dataclasses.dataclass
+class PeriodicGossip:
+    """W every ``period`` steps, identity otherwise."""
+
+    W: np.ndarray
+    period: int = 2
+
+    def matrix(self, t: int) -> np.ndarray:
+        n = self.W.shape[0]
+        return self.W if t % self.period == 0 else np.eye(n)
+
+    def amortized_comm_atoms(self, schedule: BirkhoffSchedule) -> float:
+        return schedule.n_communication_atoms / self.period
+
+
+@dataclasses.dataclass
+class RandomMatching:
+    """Random perfect matching per step with weight 1/2 per edge.
+
+    W^(t) = (I + P_match)/2 with P_match a random involutive permutation:
+    doubly stochastic, symmetric, d_max = 1.
+    """
+
+    n: int
+    seed: int = 0
+
+    def matrix(self, t: int) -> np.ndarray:
+        rng = np.random.default_rng(
+            np.random.SeedSequence(entropy=self.seed, spawn_key=(t,))
+        )
+        perm = rng.permutation(self.n)
+        W = np.eye(self.n) * 0.5
+        # pair consecutive entries of the random order
+        for a, b in zip(perm[0::2], perm[1::2]):
+            W[a, b] = W[b, a] = 0.5
+        # odd node count: the unpaired node keeps weight 1 on itself
+        if self.n % 2 == 1:
+            W[perm[-1], perm[-1]] = 1.0
+        return W
+
+
+@dataclasses.dataclass
+class AtomCycling:
+    """Cycle through a learned topology's Birkhoff atoms, one per step.
+
+    Step t applies ``(1 - g) I + g P_{atoms[t mod L]}`` where ``g`` is the
+    atom's renormalized weight -- per-step cost of a single ppermute.
+    """
+
+    result: STLFWResult
+
+    def __post_init__(self) -> None:
+        n = self.result.W.shape[0]
+        identity = np.arange(n)
+        self._atoms = [
+            (float(c), perm)
+            for c, perm in self.result.active_atoms()
+            if not np.array_equal(perm, identity)
+        ]
+        if not self._atoms:
+            self._atoms = [(0.0, identity)]
+        total = sum(c for c, _ in self._atoms)
+        self._gammas = [min(0.5, c / total) if total > 0 else 0.0 for c, _ in self._atoms]
+
+    def matrix(self, t: int) -> np.ndarray:
+        n = self.result.W.shape[0]
+        gamma, perm = self._atoms[t % len(self._atoms)][0], self._atoms[t % len(self._atoms)][1]
+        g = self._gammas[t % len(self._atoms)]
+        W = np.eye(n) * (1.0 - g)
+        W[np.arange(n), perm] += g
+        return W
+
+
+def composite_matrix(schedule, steps: int) -> np.ndarray:
+    """Product W^(k-1) ... W^(0) -- the effective k-step mixing matrix."""
+    W = schedule.matrix(0)
+    for t in range(1, steps):
+        W = schedule.matrix(t) @ W
+    return W

@@ -1,0 +1,190 @@
+"""Gossip-mixing executions of a doubly-stochastic matrix W, in JAX.
+
+Three interchangeable transports for the D-SGD averaging step
+``Theta <- Theta W^T`` (i.e. ``theta_i <- sum_j W_ij theta_j``):
+
+1. ``mix_dense``      -- stacked einsum over a leading node axis. Used by the
+                         single-host n-node simulator (vmap trainer). Can
+                         optionally route flat parameter blocks through the
+                         Pallas ``gossip_mix`` kernel.
+2. ``mix_ppermute``   -- Birkhoff-decomposed schedule of
+                         ``jax.lax.ppermute`` collectives, for use *inside*
+                         ``shard_map`` where each mesh index along
+                         ``axis_name`` holds one node's parameters. This is
+                         the TPU-native transport: a sparse learned topology
+                         with d_max atoms costs exactly d_max
+                         collective-permutes per mixing step.
+3. ``mix_allreduce``  -- ``W = 11^T/n`` (C-PSGD baseline) via ``lax.pmean``.
+
+All three act on arbitrary parameter pytrees.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "BirkhoffSchedule",
+    "mix_dense",
+    "mix_ppermute",
+    "mix_allreduce",
+    "schedule_from_result",
+    "schedule_from_matrix",
+]
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class BirkhoffSchedule:
+    """A mixing matrix as a convex combination of permutations.
+
+    ``coeffs[l]`` weights atom ``l``; ``perms[l][i] = j`` means node ``i``
+    receives node ``j``'s parameters in atom ``l`` (i.e. ``P_l[i, j] = 1``,
+    so ``W = sum_l coeffs[l] P_l``). Atom arrays are static python tuples so
+    the schedule is hashable and can close over a jitted step function.
+    """
+
+    coeffs: tuple[float, ...]
+    perms: tuple[tuple[int, ...], ...]
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.perms[0])
+
+    @property
+    def n_atoms(self) -> int:
+        return len(self.coeffs)
+
+    @property
+    def n_communication_atoms(self) -> int:
+        """Atoms that move data (non-identity permutations)."""
+        return sum(1 for p in self.perms if tuple(p) != tuple(range(len(p))))
+
+    def to_matrix(self) -> np.ndarray:
+        n = self.n_nodes
+        W = np.zeros((n, n))
+        for c, perm in zip(self.coeffs, self.perms):
+            W[np.arange(n), list(perm)] += c
+        return W
+
+
+def schedule_from_result(result) -> BirkhoffSchedule:
+    """Build a schedule from an ``STLFWResult`` (drops zero-weight atoms)."""
+    coeffs, perms = [], []
+    for c, perm in result.active_atoms():
+        coeffs.append(float(c))
+        perms.append(tuple(int(x) for x in perm))
+    return BirkhoffSchedule(coeffs=tuple(coeffs), perms=tuple(perms))
+
+
+def schedule_from_matrix(W: np.ndarray, max_atoms: int | None = None, tol: float = 1e-9) -> BirkhoffSchedule:
+    """Greedy Birkhoff-von-Neumann decomposition of an arbitrary doubly-
+    stochastic matrix (used for baseline topologies like rings/regular
+    graphs so they can ride the same ppermute transport).
+
+    Repeatedly extracts the permutation supported on the largest entries via
+    a max-weight assignment, removing ``min`` of its entries each time.
+    """
+    from .assignment import linear_assignment
+
+    W = np.asarray(W, dtype=np.float64).copy()
+    n = W.shape[0]
+    coeffs: list[float] = []
+    perms: list[tuple[int, ...]] = []
+    remaining = W.copy()
+    limit = max_atoms if max_atoms is not None else n * n
+    for _ in range(limit):
+        total = remaining.sum()
+        if total <= tol * n:
+            break
+        # max-weight perfect matching on the remaining mass: forbid zeros.
+        cost = np.where(remaining > tol, -remaining, 1e6)
+        perm = linear_assignment(cost)
+        vals = remaining[np.arange(n), perm]
+        if np.any(vals <= tol):
+            break
+        gamma = float(vals.min())
+        coeffs.append(gamma)
+        perms.append(tuple(int(x) for x in perm))
+        remaining[np.arange(n), perm] -= gamma
+    if not coeffs:
+        coeffs, perms = [1.0], [tuple(range(n))]
+    # Renormalize tiny residual mass into the coefficients.
+    s = sum(coeffs)
+    coeffs = [c / s for c in coeffs]
+    return BirkhoffSchedule(coeffs=tuple(coeffs), perms=tuple(perms))
+
+
+# ---------------------------------------------------------------------------
+# Transports
+# ---------------------------------------------------------------------------
+
+def mix_dense(params_stack: PyTree, W: jax.Array, use_kernel: bool = False) -> PyTree:
+    """Dense mixing over a leading node axis: ``out[i] = sum_j W[i,j] x[j]``.
+
+    Args:
+      params_stack: pytree whose leaves have shape (n, ...).
+      W: (n, n) mixing matrix.
+      use_kernel: route 2D-flattened leaves through the Pallas gossip_mix
+        kernel (interpret-mode on CPU) instead of einsum.
+    """
+    if use_kernel:
+        from repro.kernels.gossip_mix import ops as gossip_ops
+
+        def mix_leaf(x):
+            n = x.shape[0]
+            flat = x.reshape(n, -1)
+            out = gossip_ops.gossip_mix(flat, W.astype(flat.dtype))
+            return out.reshape(x.shape)
+
+        return jax.tree_util.tree_map(mix_leaf, params_stack)
+
+    def mix_leaf(x):
+        return jnp.tensordot(W.astype(x.dtype), x, axes=([1], [0]))
+
+    return jax.tree_util.tree_map(mix_leaf, params_stack)
+
+
+def mix_ppermute(params: PyTree, schedule: BirkhoffSchedule, axis_name: str) -> PyTree:
+    """Birkhoff ppermute mixing, for use inside ``shard_map``.
+
+    Each index along ``axis_name`` holds one node's parameter pytree. The
+    mixed parameters are ``sum_l gamma_l * ppermute(params, P_l)`` where the
+    identity atom short-circuits to a local scale (no communication).
+
+    ``ppermute`` pairs are (source, destination): node ``i`` receives from
+    ``perm[i]``, so we emit pairs ``(perm[i], i)``.
+    """
+    n = schedule.n_nodes
+    identity = tuple(range(n))
+
+    def mix_leaf(x):
+        acc = None
+        for gamma, perm in zip(schedule.coeffs, schedule.perms):
+            if perm == identity:
+                contrib = x * gamma
+            else:
+                pairs = [(int(perm[i]), i) for i in range(n)]
+                contrib = jax.lax.ppermute(x, axis_name, pairs) * gamma
+            acc = contrib if acc is None else acc + contrib
+        return acc
+
+    return jax.tree_util.tree_map(mix_leaf, params)
+
+
+def mix_allreduce(params: PyTree, axis_name: str) -> PyTree:
+    """Complete-graph mixing (C-PSGD): ``theta_i <- mean_j theta_j``.
+
+    The reduction runs in f32: numerically safer for bf16 parameters, and it
+    sidesteps an XLA-CPU AllReducePromotion crash on bf16 all-reduces.
+    """
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.pmean(x.astype(jnp.float32), axis_name).astype(x.dtype),
+        params,
+    )

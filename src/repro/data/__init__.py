@@ -1,0 +1,26 @@
+"""Data substrate: heterogeneous partitioners + synthetic datasets/pipelines."""
+
+from . import partition, synthetic, tokens
+from .partition import (
+    cluster_partition,
+    dirichlet_partition,
+    proportions_from_labels,
+    shard_partition,
+)
+from .synthetic import MeanEstimationTask, gaussian_blobs, mean_estimation_clusters
+from .tokens import DomainSkewCorpus, TokenBatcher
+
+__all__ = [
+    "partition",
+    "synthetic",
+    "tokens",
+    "cluster_partition",
+    "dirichlet_partition",
+    "proportions_from_labels",
+    "shard_partition",
+    "MeanEstimationTask",
+    "gaussian_blobs",
+    "mean_estimation_clusters",
+    "DomainSkewCorpus",
+    "TokenBatcher",
+]

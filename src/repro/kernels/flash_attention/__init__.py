@@ -1,0 +1,6 @@
+from . import ops, ref
+from .flash_attention import flash_attention_pallas
+from .ops import flash_attention
+from .ref import flash_attention_ref
+
+__all__ = ["ops", "ref", "flash_attention", "flash_attention_pallas", "flash_attention_ref"]

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for flash attention (causal / sliding-window, GQA)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_NEG_INF = -2.0e9
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float = 0.0,
+) -> jnp.ndarray:
+    """Reference attention. q: (B, S, H, D); k/v: (B, S, Hkv, D).
+
+    Hkv must divide H (GQA). Returns (B, S, H, D).
+    """
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    groups = H // Hkv
+    qg = q.reshape(B, S, Hkv, groups, D).astype(jnp.float32)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32)) * (D**-0.5)
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    logits = jnp.where(mask[None, None, None], logits, _NEG_INF)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)

@@ -1,0 +1,6 @@
+from . import ops, ref
+from .gossip_mix import gossip_mix_pallas
+from .ops import gossip_mix
+from .ref import gossip_mix_ref
+
+__all__ = ["ops", "ref", "gossip_mix", "gossip_mix_pallas", "gossip_mix_ref"]

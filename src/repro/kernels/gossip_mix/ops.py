@@ -1,0 +1,43 @@
+"""Jitted public wrapper for the gossip mixing kernel (padding + dispatch)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .gossip_mix import DEFAULT_BLOCK_P, gossip_mix_pallas
+from .ref import gossip_mix_ref
+
+__all__ = ["gossip_mix"]
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret", "use_ref"))
+def gossip_mix(
+    theta: jax.Array,
+    W: jax.Array,
+    *,
+    block_p: int = DEFAULT_BLOCK_P,
+    interpret: bool = True,
+    use_ref: bool = False,
+) -> jax.Array:
+    """Mixing step ``out[i] = sum_j W[i, j] theta[j]`` for (n, P) theta.
+
+    Pads the parameter axis to a multiple of ``block_p`` (the kernel's VMEM
+    tile width), dispatches to the Pallas kernel, and strips the padding.
+    ``use_ref=True`` routes to the pure-jnp oracle (for A/B testing).
+    """
+    if use_ref:
+        return gossip_mix_ref(theta, W)
+    n, P = theta.shape
+    # Small parameter axes are cheaper as one einsum than one padded tile.
+    if P < block_p:
+        return gossip_mix_ref(theta, W)
+    pad = (-P) % block_p
+    if pad:
+        theta_p = jnp.pad(theta, ((0, 0), (0, pad)))
+    else:
+        theta_p = theta
+    out = gossip_mix_pallas(theta_p, W.astype(theta.dtype), block_p=block_p, interpret=interpret)
+    return out[:, :P]

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the gossip mixing kernel: ``out = W @ theta``.
+
+``theta``: (n, P) stacked per-node flat parameters; ``W``: (n, n) mixing
+matrix. ``out[i] = sum_j W[i, j] theta[j]`` -- the D-SGD averaging step
+(Algorithm 1, line 4) over all nodes at once.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gossip_mix_ref(theta: jnp.ndarray, W: jnp.ndarray) -> jnp.ndarray:
+    if theta.ndim != 2 or W.ndim != 2 or W.shape[0] != W.shape[1]:
+        raise ValueError(f"bad shapes theta={theta.shape} W={W.shape}")
+    if W.shape[1] != theta.shape[0]:
+        raise ValueError("W columns must match theta rows")
+    return jnp.einsum(
+        "ij,jp->ip", W.astype(jnp.float32), theta.astype(jnp.float32)
+    ).astype(theta.dtype)

@@ -1,0 +1,6 @@
+from . import ops, ref
+from .ops import rglru_scan
+from .ref import rglru_scan_ref
+from .rglru_scan import rglru_scan_pallas
+
+__all__ = ["ops", "ref", "rglru_scan", "rglru_scan_ref", "rglru_scan_pallas"]

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the RG-LRU linear scan: h_t = a_t * h_{t-1} + b_t."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Elementwise linear recurrence over axis 1.
+
+    a, b: (B, S, D) coefficients; h0: optional (B, D) initial state.
+    Returns h: (B, S, D) with h_t = a_t * h_{t-1} + b_t, h_{-1} = h0 or 0.
+    """
+    if a.shape != b.shape or a.ndim != 3:
+        raise ValueError(f"bad shapes a={a.shape} b={b.shape}")
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(prev, cur):
+        a1, b1 = prev
+        a2, b2 = cur
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h

@@ -1,0 +1,219 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) this derives the three roofline terms for TPU v5e:
+
+    compute    = FLOPs_step / (chips * 197e12)
+    memory     = bytes_step / (chips * 819e9)
+    collective = collective_bytes_per_device / 50e9
+
+Sources and caveats (documented in EXPERIMENTS.md):
+  * FLOPs: XLA's ``cost_analysis()`` counts while-loop bodies ONCE, so with
+    the layer-scan the raw number under-counts by ~num_groups. The primary
+    compute numerator is therefore the ANALYTIC model-FLOPs estimate
+    (6*N_active*T for training [+ attention S^2 term], 2*N_active*B for
+    decode); the raw HLO value is reported alongside, and the ratio
+    MODEL_FLOPS / (HLO_FLOPs * scan_trip) is the remat/loop sanity check.
+  * bytes: analytic traffic model (params + activation streams + cache);
+    raw HLO bytes-accessed reported alongside.
+  * collective bytes: parsed from the post-SPMD HLO by the dry-run with
+    loop-body x trip weighting; shapes in the partitioned module are
+    per-device, so the value divides by the link bandwidth directly.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.roofline \
+        --dryrun experiments/dryrun --out experiments/roofline.md
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import numpy as np
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch.mesh import V5E
+
+# populated lazily: abstract param counts are cheap but not free
+_COUNTS_CACHE: dict[str, tuple[int, int]] = {}
+
+
+def param_counts(arch: str) -> tuple[int, int]:
+    """(total, active) parameter counts from abstract shapes."""
+    if arch in _COUNTS_CACHE:
+        return _COUNTS_CACHE[arch]
+    import jax
+
+    from repro.models import active_param_count, param_count, registry
+
+    cfg = get_config(arch)
+    abstract = jax.eval_shape(
+        lambda r: registry.init_model(r, cfg), jax.random.PRNGKey(0)
+    )
+    total = param_count(abstract)
+    active = active_param_count(abstract, cfg)
+    _COUNTS_CACHE[arch] = (total, active)
+    return total, active
+
+
+def analytic_flops(arch: str, shape_name: str) -> float:
+    """Whole-step model FLOPs (all devices), standard accounting."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    B, S = shape["global_batch"], shape["seq_len"]
+    total, active = param_counts(arch)
+    H, Dh, L = cfg.num_heads, cfg.resolved_head_dim, cfg.num_layers
+    n_attn = sum(
+        1 for i in range(L) if cfg.kind(i) in ("attn", "local_attn")
+    )
+    def attn_ctx(kind: str) -> float:
+        # average causal context length per query
+        if kind == "local_attn":
+            return 0.5 * min(S, cfg.sliding_window)
+        return 0.5 * S
+
+    attn_ctx_sum = sum(
+        attn_ctx(cfg.kind(i)) for i in range(L) if cfg.kind(i) in ("attn", "local_attn")
+    )
+    if shape["kind"] == "train":
+        T = B * S
+        # 6*N*T (fwd 2 + bwd 4) + attention 12*T*ctx*H*Dh per layer
+        return 6.0 * active * T + 12.0 * T * H * Dh * attn_ctx_sum
+    if shape["kind"] == "prefill":
+        T = B * S
+        return 2.0 * active * T + 4.0 * T * H * Dh * attn_ctx_sum
+    # decode: one token per request
+    ctx = S if shape["kind"] == "decode" else min(S, cfg.long_context_window)
+    return 2.0 * active * B + 4.0 * n_attn * B * ctx * H * Dh
+
+
+def analytic_bytes_per_device(arch: str, shape_name: str, rec: dict, chips: int) -> float:
+    """Per-device HBM traffic estimate for one step."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    B, S = shape["global_batch"], shape["seq_len"]
+    total, active = param_counts(arch)
+    dt = 2  # bf16
+    if shape["kind"] == "train":
+        n_nodes = 16 if rec.get("mode") == "dsgd" else rec.get("n_nodes", 1)
+        reps = n_nodes if rec.get("mode", "").startswith("dsgd") else 1
+        params_dev = total * dt * reps / chips
+        # fwd read + bwd read + grad write + update r/w (~5x with remat ~6x)
+        param_traffic = 6.0 * params_dev
+        b_loc = B / (chips / 16)  # batch per model-group
+        act_traffic = 20.0 * cfg.num_layers * (B * S * cfg.d_model * dt) / chips * 3
+        loss_traffic = 4.0 * B * S * cfg.vocab_size * dt / chips
+        return param_traffic + act_traffic + loss_traffic
+    if shape["kind"] == "prefill":
+        params_dev = total * dt / chips
+        act = 12.0 * cfg.num_layers * B * S * cfg.d_model * dt / chips
+        return 2.0 * params_dev + act
+    # decode: whole params + whole cache read per token
+    params_dev = total * dt / chips
+    if shape["kind"] == "decode":
+        cache = rec.get("memory", {}).get("argument_bytes", 0) - params_dev
+        cache = max(cache, 0.0)
+    else:
+        cache = 0.0
+    return 2.0 * params_dev + cache
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    arch, shape_name = rec["arch"], rec["shape"]
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    flops = analytic_flops(arch, shape_name)
+    t_compute = flops / (chips * V5E["peak_flops_bf16"])
+    bytes_dev = analytic_bytes_per_device(arch, shape_name, rec, chips)
+    t_memory = bytes_dev / V5E["hbm_bw"]
+    coll_dev = rec["collectives"]["total_bytes"]
+    t_coll = coll_dev / V5E["ici_bw"]
+    total, active = param_counts(arch)
+    hlo_flops_dev = rec["cost"]["flops_per_device_hlo"]
+    trip = rec.get("scan_trip", 1)
+    # loop-corrected per-device HLO flops -> whole-step estimate
+    hlo_flops_corr = hlo_flops_dev * max(trip, 1) * chips
+    ratio = flops / hlo_flops_corr if hlo_flops_corr else float("nan")
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    advice = {
+        "compute": "raise arithmetic efficiency (MXU-aligned tiles, fused kernels) or shrink redundant compute (remat policy)",
+        "memory": "cut HBM traffic: larger fusion blocks, bf16 end-to-end, chunked loss/attention streaming",
+        "collective": "cut collective volume: sparser gossip schedule (smaller d_max), overlap permutes with compute, shard params to reduce all-gathers",
+    }[dominant]
+    return {
+        "arch": arch, "shape": shape_name, "mesh": rec["mesh"],
+        "mode": rec.get("mode", ""),
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": flops,
+        "hlo_flops_corrected": hlo_flops_corr,
+        "flops_ratio": ratio,
+        "params_total": total, "params_active": active,
+        "coll_bytes_dev": coll_dev,
+        "temp_gib_dev": rec["memory"]["temp_bytes"] / 2**30,
+        "args_gib_dev": rec["memory"]["argument_bytes"] / 2**30,
+        "advice": advice,
+    }
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1e-1:
+        return f"{x:.2f}s"
+    if x >= 1e-4:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="experiments/dryrun")
+    ap.add_argument("--out", default="experiments/roofline.md")
+    ap.add_argument("--mesh", default=None, choices=[None, "16x16", "2x16x16"])
+    args = ap.parse_args()
+
+    rows = []
+    for f in sorted(glob.glob(os.path.join(args.dryrun, "*.json"))):
+        rec = json.load(open(f))
+        if args.mesh and rec.get("mesh") != args.mesh:
+            continue
+        row = roofline_row(rec)
+        if row:
+            rows.append(row)
+
+    rows.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    lines = [
+        "# Roofline table (TPU v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI)",
+        "",
+        "| arch | shape | mesh | mode | compute | memory | collective | dominant | MODEL_FLOPS | MF/HLO | mem GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['mode']} "
+            f"| {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+            f"| {fmt_s(r['collective_s'])} | **{r['dominant']}** "
+            f"| {r['model_flops']:.2e} | {r['flops_ratio']:.2f} "
+            f"| {r['args_gib_dev'] + r['temp_gib_dev']:.1f} |"
+        )
+    lines.append("")
+    lines.append("## Bottleneck advice (one line per combo)")
+    for r in rows:
+        lines.append(
+            f"- **{r['arch']} x {r['shape']} ({r['mesh']})**: {r['dominant']}-bound "
+            f"-> {r['advice']}"
+        )
+    out_text = "\n".join(lines)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(out_text + "\n")
+    with open(args.out.replace(".md", ".json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    print(out_text)
+
+
+if __name__ == "__main__":
+    main()

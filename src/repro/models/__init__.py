@@ -1,0 +1,39 @@
+"""Architecture zoo: composable model definitions for all assigned archs."""
+
+from . import attention, common, kvcache, layers, moe, registry, rglru, transformer, whisper, xlstm
+from .common import (
+    AudioStubConfig,
+    EncoderConfig,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    VisionStubConfig,
+    active_param_count,
+    param_count,
+)
+from .registry import init_model, loss_fn, make_inputs, model_forward
+
+__all__ = [
+    "attention",
+    "common",
+    "kvcache",
+    "layers",
+    "moe",
+    "registry",
+    "rglru",
+    "transformer",
+    "whisper",
+    "xlstm",
+    "AudioStubConfig",
+    "EncoderConfig",
+    "MLAConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "VisionStubConfig",
+    "active_param_count",
+    "param_count",
+    "init_model",
+    "loss_fn",
+    "make_inputs",
+    "model_forward",
+]

@@ -1,0 +1,174 @@
+"""Model configuration and shared helpers for the architecture zoo.
+
+One ``ModelConfig`` covers all 10 assigned architectures via a per-layer
+block pattern (attention / local attention / mLSTM / sLSTM / RG-LRU) plus
+optional MoE / MLA / encoder-decoder / vision-stub sub-configs.
+
+Parameters are plain nested dicts of jnp arrays; every model is a pure
+``init(rng, cfg) -> params`` / ``forward(params, cfg, ...) -> logits`` pair.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+__all__ = [
+    "MoEConfig",
+    "MLAConfig",
+    "EncoderConfig",
+    "VisionStubConfig",
+    "AudioStubConfig",
+    "ModelConfig",
+    "layer_kind",
+    "param_count",
+    "active_param_count",
+    "truncated_normal",
+    "dtype_of",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts MLP block configuration."""
+
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared_experts: int = 0
+    d_ff_shared: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head latent attention (DeepSeek-V2)."""
+
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0  # 0 = full-rank q projection
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    """Whisper-style encoder consumed via cross-attention.
+
+    The mel+conv frontend is a stub: the model takes precomputed frame
+    embeddings of shape (batch, num_frames, d_model).
+    """
+
+    num_layers: int
+    num_frames: int  # 1500 for whisper-small (30 s audio, 50 Hz)
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionStubConfig:
+    """LLaVA-style vision stub: precomputed patch embeddings are prepended
+    to the text sequence. ``num_patches`` is the anyres-tiled total."""
+
+    num_patches: int
+
+
+@dataclasses.dataclass(frozen=True)
+class AudioStubConfig:
+    """Marker for audio models whose frontend is stubbed (whisper)."""
+
+    num_mel_bins: int = 80
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str  # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 => d_model // num_heads
+    # --- attention flavor ---
+    attn_bias: bool = False  # qwen2.5-style QKV bias
+    qk_norm: bool = False  # qwen3-style per-head RMSNorm on q/k
+    attn_logit_softcap: float = 0.0  # gemma2 attention softcap
+    final_logit_softcap: float = 0.0  # gemma2 output softcap
+    rope_theta: float = 10000.0
+    sliding_window: int = 4096  # window used by 'local_attn' layers
+    # --- block pattern, cycled over layers ---
+    # entries: 'attn' | 'local_attn' | 'mlstm' | 'slstm' | 'rglru'
+    layer_pattern: tuple[str, ...] = ("attn",)
+    mlp_type: str = "swiglu"  # swiglu | geglu | gelu (none if d_ff == 0)
+    # --- sub-configs ---
+    moe: MoEConfig | None = None
+    mla: MLAConfig | None = None
+    encoder: EncoderConfig | None = None
+    vision: VisionStubConfig | None = None
+    audio: AudioStubConfig | None = None
+    # --- misc ---
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    embedding_scale: bool = False  # gemma multiplies embeddings by sqrt(d)
+    post_block_norms: bool = False  # gemma2 pre+post norms around each block
+    dtype: str = "float32"
+    # conv width for recurrent blocks (rglru / xlstm causal conv)
+    conv_width: int = 4
+    # RG-LRU / recurrent block width (d_rnn); 0 => d_model
+    rnn_width: int = 0
+    # long-context override: when serving long_500k, attention layers use a
+    # ring-buffer window of this size (sub-quadratic requirement).
+    long_context_window: int = 4096
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim > 0 else self.d_model // self.num_heads
+
+    @property
+    def resolved_rnn_width(self) -> int:
+        return self.rnn_width if self.rnn_width > 0 else self.d_model
+
+    def kind(self, layer: int) -> str:
+        return self.layer_pattern[layer % len(self.layer_pattern)]
+
+
+def layer_kind(cfg: ModelConfig, layer: int) -> str:
+    return cfg.kind(layer)
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def truncated_normal(key: jax.Array, shape: tuple[int, ...], stddev: float, dtype) -> jax.Array:
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * stddev).astype(dtype)
+
+
+def param_count(params: PyTree) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree_util.tree_leaves(params)))
+
+
+def active_param_count(params: PyTree, cfg: ModelConfig) -> int:
+    """Active parameters per token (MoE: only top_k routed experts count)."""
+    total = param_count(params)
+    if cfg.moe is None:
+        return total
+
+    def routed_expert_params(tree: PyTree) -> int:
+        count = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+            keys = jax.tree_util.keystr(path)
+            if "routed" in keys:
+                count += int(np.prod(leaf.shape))
+        return count
+
+    routed = routed_expert_params(params)
+    active_routed = routed * cfg.moe.top_k // cfg.moe.num_experts
+    return total - routed + active_routed

@@ -1,0 +1,85 @@
+"""KV / recurrent-state caches for serving.
+
+Three cache families, matching the per-layer block kinds:
+
+* ``init_full_cache``    -- (B, S_max, H_kv, D_h) keys/values + write index.
+                            Used by global-attention layers in ``decode_32k``.
+* ``init_window_cache``  -- ring buffer of size ``window``; used by
+                            local-attention layers and by *all* attention
+                            layers in the ``long_500k`` sub-quadratic mode.
+* recurrent states       -- owned by the xLSTM / RG-LRU blocks themselves
+                            (``models.xlstm`` / ``models.rglru``).
+
+Keys are stored *post-RoPE* so decode never re-rotates history.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = [
+    "init_full_cache",
+    "init_window_cache",
+    "update_full_cache",
+    "update_window_cache",
+]
+
+
+def init_full_cache(batch: int, max_len: int, n_kv: int, head_dim: int, dtype) -> PyTree:
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        "index": jnp.zeros((), jnp.int32),  # number of valid positions
+    }
+
+
+def init_window_cache(batch: int, window: int, n_kv: int, head_dim: int, dtype) -> PyTree:
+    return {
+        "k": jnp.zeros((batch, window, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, window, n_kv, head_dim), dtype),
+        "index": jnp.zeros((), jnp.int32),  # absolute position counter
+    }
+
+
+def update_full_cache(cache: PyTree, k_new: jax.Array, v_new: jax.Array) -> PyTree:
+    """Append ``S_new`` positions at the current index (decode: S_new = 1)."""
+    idx = cache["index"]
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, idx, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, idx, 0, 0))
+    return {"k": k, "v": v, "index": idx + k_new.shape[1]}
+
+
+def update_window_cache(cache: PyTree, k_new: jax.Array, v_new: jax.Array) -> PyTree:
+    """Ring-buffer write of ``S_new`` positions (slot = abs_pos mod window)."""
+    window = cache["k"].shape[1]
+    idx = cache["index"]
+    s_new = k_new.shape[1]
+    if s_new == 1:
+        slot = jnp.mod(idx, window)
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0)
+        )
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0)
+        )
+    else:
+        # prefill into the ring: only the last ``window`` positions can
+        # survive, so clamp first to keep slot indices unique.
+        if s_new > window:
+            k_new = k_new[:, -window:]
+            v_new = v_new[:, -window:]
+            start = idx + s_new - window
+            count = window
+        else:
+            start = idx
+            count = s_new
+        positions = start + jnp.arange(count)
+        slots = jnp.mod(positions, window)
+        k = cache["k"].at[:, slots].set(k_new.astype(cache["k"].dtype))
+        v = cache["v"].at[:, slots].set(v_new.astype(cache["v"].dtype))
+    return {"k": k, "v": v, "index": idx + s_new}

@@ -1,0 +1,158 @@
+"""Shared layers: norms, rotary embeddings, MLPs, embedding tables."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dtype_of, truncated_normal
+
+PyTree = Any
+
+__all__ = [
+    "rms_norm",
+    "init_rms_norm",
+    "layer_norm",
+    "init_layer_norm",
+    "rotary_embedding",
+    "apply_rope",
+    "init_mlp",
+    "mlp_forward",
+    "init_embedding",
+    "embed",
+    "unembed",
+    "sinusoidal_positions",
+]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rms_norm(dim: int, dtype) -> PyTree:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rms_norm(params: PyTree, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    orig_dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    normed = x32 * jax.lax.rsqrt(var + eps)
+    return (normed * params["scale"].astype(jnp.float32)).astype(orig_dtype)
+
+
+def init_layer_norm(dim: int, dtype) -> PyTree:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layer_norm(params: PyTree, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    orig_dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    normed = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    out = normed * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(orig_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rotary_embedding(
+    positions: jax.Array, head_dim: int, theta: float
+) -> tuple[jax.Array, jax.Array]:
+    """(cos, sin) of shape ``positions.shape + (head_dim // 2,)``."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate pairs. x: (..., S, H, D); cos/sin: (..., S, D/2) broadcast over H."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int, dtype) -> jax.Array:
+    """Whisper-style fixed sinusoidal position table (length, dim)."""
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    div = jnp.exp(-jnp.log(10000.0) * jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    tab = jnp.zeros((length, dim), jnp.float32)
+    tab = tab.at[:, 0::2].set(jnp.sin(pos * div))
+    tab = tab.at[:, 1::2].set(jnp.cos(pos * div))
+    return tab.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLPs (SwiGLU / GeGLU / GeLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key: jax.Array, cfg: ModelConfig, d_ff: int | None = None) -> PyTree:
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    ff = d_ff if d_ff is not None else cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    std_in = d ** -0.5
+    std_out = ff ** -0.5
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {
+            "w_gate": truncated_normal(k1, (d, ff), std_in, dt),
+            "w_up": truncated_normal(k2, (d, ff), std_in, dt),
+            "w_down": truncated_normal(k3, (ff, d), std_out, dt),
+        }
+    return {
+        "w_up": truncated_normal(k1, (d, ff), std_in, dt),
+        "w_down": truncated_normal(k3, (ff, d), std_out, dt),
+    }
+
+
+def mlp_forward(params: PyTree, x: jax.Array, mlp_type: str) -> jax.Array:
+    if mlp_type == "swiglu":
+        gate = jax.nn.silu(x @ params["w_gate"])
+        return (gate * (x @ params["w_up"])) @ params["w_down"]
+    if mlp_type == "geglu":
+        gate = jax.nn.gelu(x @ params["w_gate"], approximate=True)
+        return (gate * (x @ params["w_up"])) @ params["w_down"]
+    if mlp_type == "gelu":
+        return jax.nn.gelu(x @ params["w_up"], approximate=True) @ params["w_down"]
+    raise ValueError(f"unknown mlp_type {mlp_type}")
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+def init_embedding(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    dt = dtype_of(cfg)
+    params = {
+        "table": truncated_normal(key, (cfg.vocab_size, cfg.d_model), 0.02, dt)
+    }
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        params["unembed"] = truncated_normal(
+            k2, (cfg.d_model, cfg.vocab_size), cfg.d_model**-0.5, dt
+        )
+    return params
+
+
+def embed(params: PyTree, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = params["table"][tokens]
+    if cfg.embedding_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    return x
+
+
+def unembed(params: PyTree, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = x @ params["table"].T
+    else:
+        logits = x @ params["unembed"]
+    if cfg.final_logit_softcap > 0.0:
+        cap = cfg.final_logit_softcap
+        logits = cap * jnp.tanh(logits / cap)
+    return logits

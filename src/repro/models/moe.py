@@ -1,0 +1,150 @@
+"""Mixture-of-Experts MLP block with capacity-based scatter dispatch.
+
+Design (TPU/GSPMD-friendly, active-FLOPs-only):
+
+1. Router: softmax over experts, top-k per token, renormalized weights.
+2. Dispatch: tokens are scattered into a per-expert buffer of shape
+   ``(E, C, D)`` (capacity ``C = ceil(T * k / E * capacity_factor)``),
+   computing each token's slot within its expert group via a sort-free
+   one-hot cumulative sum. Overflowing tokens are *dropped* (their combine
+   weight contribution is simply missing -- standard capacity behaviour).
+3. Expert compute: a single batched einsum ``(E, C, D) x (E, D, F)`` -- only
+   ``E*C ~ T*k*cf`` token-slots are computed, not ``T*E``.
+4. Combine: scatter-add back to tokens with router weights.
+
+Under the production mesh the expert axis ``E`` is sharded over ``model``
+and tokens over ``data``; the dispatch/combine scatters lower to
+all-to-all-style collectives in GSPMD. Shared experts (DeepSeek) are plain
+dense MLPs added unconditionally.
+
+The router load-balancing auxiliary loss (Switch-style) is returned so the
+trainer can add ``aux_coef * aux_loss``.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dtype_of, truncated_normal
+from .layers import init_mlp, mlp_forward
+
+PyTree = Any
+
+__all__ = ["init_moe", "moe_forward", "router_aux_loss"]
+
+
+def _constrain_experts(x: jax.Array, ndim_spec: tuple) -> jax.Array:
+    """Best-effort sharding constraint (expert axis over 'model').
+
+    No-op outside a mesh context or when the mesh has no 'model' axis, so
+    the module stays usable on a single device.
+    """
+    try:
+        from jax.sharding import PartitionSpec as P
+
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or "model" not in (mesh.axis_names or ()):
+            return x
+        return jax.lax.with_sharding_constraint(x, P(*ndim_spec))
+    except Exception:  # pragma: no cover - non-mesh contexts
+        return x
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    assert cfg.moe is not None
+    m = cfg.moe
+    dt = dtype_of(cfg)
+    d, f = cfg.d_model, m.d_ff_expert
+    ks = jax.random.split(key, 5)
+    params: PyTree = {
+        "router": truncated_normal(ks[0], (d, m.num_experts), d**-0.5, dt),
+        "routed": {
+            "w_gate": truncated_normal(ks[1], (m.num_experts, d, f), d**-0.5, dt),
+            "w_up": truncated_normal(ks[2], (m.num_experts, d, f), d**-0.5, dt),
+            "w_down": truncated_normal(ks[3], (m.num_experts, f, d), f**-0.5, dt),
+        },
+    }
+    if m.num_shared_experts > 0:
+        shared_ff = m.d_ff_shared if m.d_ff_shared > 0 else f * m.num_shared_experts
+        params["shared"] = init_mlp(ks[4], cfg, d_ff=shared_ff)
+    return params
+
+
+def router_aux_loss(router_probs: jax.Array, expert_ids: jax.Array, num_experts: int) -> jax.Array:
+    """Switch-transformer load-balance loss: E * sum_e f_e * P_e."""
+    # fraction of tokens routed (by top-1 assignment) to each expert
+    top1 = expert_ids[..., 0]
+    f = jnp.mean(jax.nn.one_hot(top1, num_experts, dtype=jnp.float32), axis=0)
+    p = jnp.mean(router_probs.astype(jnp.float32), axis=0)
+    return num_experts * jnp.sum(f * p)
+
+
+def _dispatch_one_group(tokens, expert_ids, gate_vals, params, cfg, C):
+    """Capacity dispatch + expert compute for ONE token group (T, D).
+
+    Grouped (per-sequence) dispatch keeps the batch axis data-sharded: the
+    scatter indices are group-local, so GSPMD never gathers tokens across
+    data shards (that gather dominated the collective volume of the global
+    dispatch -- see EXPERIMENTS.md §Perf).
+    """
+    m = cfg.moe
+    T, D = tokens.shape
+    E, K = m.num_experts, m.top_k
+    flat_expert = expert_ids.reshape(T * K)
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)  # (TK, E)
+    slots = jnp.cumsum(onehot, axis=0) * onehot - 1
+    slot = jnp.max(slots, axis=1)  # position within the expert's queue
+    keep = slot < C
+    dest = jnp.where(keep, flat_expert * C + slot, E * C)  # overflow -> scratch
+
+    buf = jnp.zeros((E * C + 1, D), tokens.dtype)
+    token_rep = jnp.repeat(tokens, K, axis=0)
+    buf = buf.at[dest].set(token_rep)
+    expert_in = buf[: E * C].reshape(E, C, D)
+
+    r = params["routed"]
+    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, r["w_gate"]))
+    up = jnp.einsum("ecd,edf->ecf", expert_in, r["w_up"])
+    expert_out = jnp.einsum("ecf,efd->ecd", gate * up, r["w_down"])  # (E, C, D)
+
+    flat_out = jnp.concatenate(
+        [expert_out.reshape(E * C, D), jnp.zeros((1, D), expert_out.dtype)], axis=0
+    )
+    gathered = flat_out[dest]  # (TK, D); dropped tokens read zeros
+    weights = gate_vals.reshape(T * K, 1).astype(gathered.dtype)
+    return jnp.sum((gathered * weights).reshape(T, K, D), axis=1)  # (T, D)
+
+
+def moe_forward(
+    params: PyTree, cfg: ModelConfig, x: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,D), aux_loss scalar).
+
+    Dispatch is *grouped per batch row* (capacity C = ceil(S*k*cf/E) per
+    sequence): load balancing is per sequence rather than global, in
+    exchange for a fully data-parallel dispatch (no cross-shard token
+    exchange). Experts are replicated per data shard and sharded over the
+    ``model`` axis by the einsum operands.
+    """
+    m = cfg.moe
+    B, S, D = x.shape
+    E, K = m.num_experts, m.top_k
+
+    logits = x @ params["router"]  # (B, S, E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)  # (B, S, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    aux = router_aux_loss(probs.reshape(B * S, E), expert_ids.reshape(B * S, K), E)
+
+    C = max(1, int(-(-S * K * m.capacity_factor // E)))  # ceil per sequence
+    combined = jax.vmap(
+        lambda t, e, g: _dispatch_one_group(t, e, g, params, cfg, C)
+    )(x, expert_ids, gate_vals)
+
+    out = combined
+    if m.num_shared_experts > 0:
+        out = out + mlp_forward(params["shared"], x, cfg.mlp_type)
+    return out, aux

@@ -1,0 +1,114 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a x_t)                    (recurrence gate)
+    i_t = sigmoid(W_x x_t)                    (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)    (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is linear in ``h`` with elementwise coefficients, hence
+associative: training/prefill uses ``jax.lax.associative_scan`` (O(log S)
+depth); decode is a single fused elementwise step.
+
+Block layout (Griffin's recurrent block):
+  norm -> {gate branch: linear+GeLU} x {rnn branch: linear -> causal conv ->
+  RG-LRU} -> multiply -> output linear -> residual.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dtype_of, truncated_normal
+from .layers import init_rms_norm, rms_norm
+
+PyTree = Any
+
+__all__ = ["init_rglru_block", "rglru_block", "init_rglru_state"]
+
+_C = 8.0
+
+
+def init_rglru_block(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    dr = cfg.resolved_rnn_width
+    ks = jax.random.split(key, 6)
+    std = d**-0.5
+    # Lambda init so that a^(1/c) ~ U[0.9, 0.999] as in the paper
+    u = jax.random.uniform(ks[5], (dr,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u)))  # softplus^{-1}(-log u)
+    return {
+        "norm": init_rms_norm(d, dt),
+        "w_gate": truncated_normal(ks[0], (d, dr), std, dt),
+        "w_rnn_in": truncated_normal(ks[1], (d, dr), std, dt),
+        "conv_w": truncated_normal(ks[2], (cfg.conv_width, dr), 0.1, dt),
+        "w_a": truncated_normal(ks[3], (dr, dr), dr**-0.5, dt),
+        "w_x": truncated_normal(ks[4], (dr, dr), dr**-0.5, dt),
+        "lam": lam.astype(jnp.float32),
+        "w_out": truncated_normal(jax.random.fold_in(key, 7), (dr, d), dr**-0.5, dt),
+    }
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int) -> PyTree:
+    dr = cfg.resolved_rnn_width
+    return {
+        "h": jnp.zeros((batch, dr), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, dr), dtype_of(cfg)),
+    }
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array, state: jax.Array | None):
+    width = w.shape[0]
+    pad = (
+        jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+        if state is None
+        else state
+    )
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(width))
+    return y, xp[:, -(width - 1) :, :]
+
+
+def rglru_block(
+    params: PyTree, cfg: ModelConfig, x: jax.Array, state: PyTree | None = None
+) -> tuple[jax.Array, PyTree | None]:
+    """x: (B,S,D) -> (B,S,D). Associative scan (state None) or decode step."""
+    B, S, D = x.shape
+    xn = rms_norm(params["norm"], x, cfg.norm_eps)
+    gate = jax.nn.gelu(xn @ params["w_gate"], approximate=True)  # (B,S,dr)
+    rnn_in = xn @ params["w_rnn_in"]
+    conv_state = None if state is None else state["conv"]
+    rnn_in, new_conv = _causal_conv1d(rnn_in, params["conv_w"], conv_state)
+
+    r = jax.nn.sigmoid((rnn_in @ params["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((rnn_in @ params["w_x"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r  # (B,S,dr), <= 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * rnn_in.astype(jnp.float32)
+    )
+
+    if state is None or S > 1:
+        if state is not None:
+            # fold the carried state into the first step
+            b = b.at[:, 0].add(a[:, 0] * state["h"])
+
+        def combine(prev, cur):
+            a1, b1 = prev
+            a2, b2 = cur
+            return a1 * a2, a2 * b1 + b2
+
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        new_state = None if state is None else {"h": h[:, -1], "conv": new_conv}
+    else:
+        h = a[:, 0] * state["h"] + b[:, 0]
+        new_state = {"h": h, "conv": new_conv}
+        h = h[:, None, :]
+
+    out = (h.astype(x.dtype) * gate) @ params["w_out"]
+    return x + out, new_state

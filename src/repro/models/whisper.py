@@ -1,0 +1,165 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Per the brief, the mel-spectrogram + conv feature extractor is a STUB: the
+model consumes precomputed frame embeddings of shape
+``(batch, num_frames, d_model)`` (1500 frames for whisper-small). Both
+stacks use sinusoidal absolute positions (no RoPE) and pre-LayerNorm blocks
+with GeLU MLPs, as in the original architecture.
+
+API:
+  init_whisper(rng, cfg)                     -> params
+  whisper_forward(params, cfg, frames, tokens, cache=None, positions=None)
+      -> (logits, new_cache, aux=0)
+  encode(params, cfg, frames)                -> encoder hidden states
+  init_whisper_cache(cfg, batch, max_len, encoder_out) -> decode cache
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    cross_attention,
+    init_attention,
+    init_cross_attention,
+    attention,
+    init_attention_cache,
+)
+from .common import ModelConfig, dtype_of, truncated_normal
+from .layers import (
+    init_layer_norm,
+    init_mlp,
+    layer_norm,
+    mlp_forward,
+    sinusoidal_positions,
+)
+
+PyTree = Any
+
+__all__ = ["init_whisper", "whisper_forward", "encode", "init_whisper_cache"]
+
+
+def _init_enc_layer(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": init_layer_norm(cfg.d_model, dt),
+        "attn": init_attention(ks[0], cfg),
+        "ln2": init_layer_norm(cfg.d_model, dt),
+        "mlp": init_mlp(ks[1], cfg),
+    }
+
+
+def _init_dec_layer(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": init_layer_norm(cfg.d_model, dt),
+        "self_attn": init_attention(ks[0], cfg),
+        "ln_cross": init_layer_norm(cfg.d_model, dt),
+        "cross_attn": init_cross_attention(ks[1], cfg),
+        "ln2": init_layer_norm(cfg.d_model, dt),
+        "mlp": init_mlp(ks[2], cfg),
+    }
+
+
+def init_whisper(rng: jax.Array, cfg: ModelConfig) -> PyTree:
+    assert cfg.encoder is not None
+    dt = dtype_of(cfg)
+    n_enc = cfg.encoder.num_layers
+    keys = jax.random.split(rng, n_enc + cfg.num_layers + 2)
+    return {
+        "token_embed": truncated_normal(keys[0], (cfg.vocab_size, cfg.d_model), 0.02, dt),
+        "enc_layers": [_init_enc_layer(keys[1 + i], cfg) for i in range(n_enc)],
+        "enc_final_ln": init_layer_norm(cfg.d_model, dt),
+        "dec_layers": [
+            _init_dec_layer(keys[1 + n_enc + i], cfg) for i in range(cfg.num_layers)
+        ],
+        "dec_final_ln": init_layer_norm(cfg.d_model, dt),
+    }
+
+
+def _bidir_attention(lp: PyTree, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Encoder self-attention: bidirectional, absolute (sinusoidal) positions
+    added outside; RoPE disabled by passing zero positions and causal=False."""
+    B, S, _ = x.shape
+    positions = jnp.zeros((B, S), jnp.int32)  # zero angle -> RoPE is identity
+    out, _ = attention(lp, cfg, x, positions=positions, causal=False)
+    return out
+
+
+def encode(params: PyTree, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, num_frames, d_model) stub embeddings -> encoder states."""
+    B, S, D = frames.shape
+    x = frames + sinusoidal_positions(S, D, frames.dtype)[None]
+    for lp in params["enc_layers"]:
+        h = layer_norm(lp["ln1"], x, cfg.norm_eps)
+        x = x + _bidir_attention(lp["attn"], cfg, h)
+        h = layer_norm(lp["ln2"], x, cfg.norm_eps)
+        x = x + mlp_forward(lp["mlp"], h, "gelu")
+    return layer_norm(params["enc_final_ln"], x, cfg.norm_eps)
+
+
+def whisper_forward(
+    params: PyTree,
+    cfg: ModelConfig,
+    frames: jax.Array | None,
+    tokens: jax.Array,
+    *,
+    cache: PyTree | None = None,
+    positions: jax.Array | None = None,
+) -> tuple[jax.Array, PyTree | None, jax.Array]:
+    """Enc-dec forward. For decode, pass ``cache`` (which holds encoder_out).
+
+    Returns (logits, new_cache, aux=0.0).
+    """
+    if cache is None:
+        assert frames is not None
+        encoder_out = encode(params, cfg, frames)
+        self_caches = [None] * cfg.num_layers
+    else:
+        encoder_out = cache["encoder_out"]
+        self_caches = cache["self"]
+
+    B, S = tokens.shape
+    dt = params["token_embed"].dtype
+    x = params["token_embed"][tokens]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    pos_tab = sinusoidal_positions(4096, cfg.d_model, dt)
+    x = x + pos_tab[positions]
+
+    new_self = []
+    for i, lp in enumerate(params["dec_layers"]):
+        h = layer_norm(lp["ln1"], x, cfg.norm_eps)
+        attn_out, nc = attention(
+            lp["self_attn"], cfg, h, positions=positions, cache=self_caches[i]
+        )
+        new_self.append(nc)
+        x = x + attn_out
+        h = layer_norm(lp["ln_cross"], x, cfg.norm_eps)
+        x = x + cross_attention(lp["cross_attn"], cfg, h, encoder_out)
+        h = layer_norm(lp["ln2"], x, cfg.norm_eps)
+        x = x + mlp_forward(lp["mlp"], h, "gelu")
+
+    x = layer_norm(params["dec_final_ln"], x, cfg.norm_eps)
+    logits = x @ params["token_embed"].T
+    new_cache = (
+        {"encoder_out": encoder_out, "self": new_self} if cache is not None else None
+    )
+    return logits, new_cache, jnp.zeros((), jnp.float32)
+
+
+def init_whisper_cache(
+    cfg: ModelConfig, batch: int, max_len: int, encoder_out: jax.Array
+) -> PyTree:
+    return {
+        "encoder_out": encoder_out,
+        "self": [
+            init_attention_cache(cfg, batch, max_len, local=False)
+            for _ in range(cfg.num_layers)
+        ],
+    }

@@ -1,0 +1,354 @@
+"""xLSTM blocks (Beck et al., 2024 -- arXiv:2405.04517): mLSTM and sLSTM.
+
+* mLSTM: matrix-memory LSTM with exponential gating. Training/prefill uses
+  the *parallel* (quadratic, attention-like) form; decode uses the O(1)
+  recurrent form with state (C, n, m) per head.
+* sLSTM: scalar-memory LSTM with recurrent weights and exponential gating;
+  inherently sequential -> ``jax.lax.scan`` over time for training, O(1)
+  decode step.
+
+Block structure follows the xLSTM paper: the mLSTM block is a pre-norm
+up-projection (factor 2) sandwich with a causal conv on the q/k path and a
+learnable skip + output gate; the sLSTM block is post-norm with a GeLU
+up/down FFN of factor 4/3. The assigned ``xlstm-350m`` config has
+``d_ff = 0`` because these internal projections replace the transformer MLP.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dtype_of, truncated_normal
+from .layers import init_rms_norm, rms_norm
+
+PyTree = Any
+
+__all__ = [
+    "init_mlstm_block",
+    "mlstm_block",
+    "init_mlstm_state",
+    "init_slstm_block",
+    "slstm_block",
+    "init_slstm_state",
+]
+
+_MLSTM_PROJ = 2.0  # up-projection factor of the mLSTM block
+_SLSTM_FF = 4.0 / 3.0  # FFN factor of the sLSTM block
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv. x: (B,S,C); w: (width, C).
+
+    Returns (y, new_state) where state caches the last ``width-1`` inputs
+    for decode. With ``state=None`` the sequence is left-padded with zeros.
+    """
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+width-1, C)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(width))
+    new_state = xp[:, -(width - 1) :, :] if width > 1 else pad
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm_block(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    d_in = int(d * _MLSTM_PROJ)
+    h = cfg.num_heads
+    dh = d_in // h
+    ks = jax.random.split(key, 9)
+    std = d**-0.5
+    std_in = d_in**-0.5
+    return {
+        "norm": init_rms_norm(d, dt),
+        "w_up": truncated_normal(ks[0], (d, d_in), std, dt),
+        "w_gate": truncated_normal(ks[1], (d, d_in), std, dt),
+        "conv_w": truncated_normal(ks[2], (cfg.conv_width, d_in), 0.1, dt),
+        "wq": truncated_normal(ks[3], (d_in, d_in), std_in, dt),
+        "wk": truncated_normal(ks[4], (d_in, d_in), std_in, dt),
+        "wv": truncated_normal(ks[5], (d_in, d_in), std_in, dt),
+        "w_if": truncated_normal(ks[6], (d_in, 2 * h), std_in, dt),
+        "b_if": jnp.zeros((2 * h,), dt),
+        "out_norm": init_rms_norm(d_in, dt),
+        "w_down": truncated_normal(ks[8], (d_in, d), std_in, dt),
+    }
+
+
+def _mlstm_parallel(q, k, v, i_tilde, f_tilde):
+    """Parallel mLSTM. q/k/v: (B,H,S,Dh); i_tilde/f_tilde: (B,H,S)."""
+    B, H, S, Dh = q.shape
+    log_f = jax.nn.log_sigmoid(f_tilde.astype(jnp.float32))  # (B,H,S)
+    F = jnp.cumsum(log_f, axis=-1)
+    # D[t, s] = F_t - F_s + log i_s   for s <= t
+    D = F[..., :, None] - F[..., None, :] + i_tilde.astype(jnp.float32)[..., None, :]
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    D = jnp.where(causal, D, -jnp.inf)
+    m = jnp.max(D, axis=-1, keepdims=True)  # (B,H,S,1)
+    m = jnp.maximum(m, -1e30)  # guard all -inf rows
+    decay = jnp.exp(D - m)
+    scores = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * (Dh**-0.5) * decay
+    norm = jnp.maximum(jnp.abs(scores.sum(axis=-1, keepdims=True)), jnp.exp(-m))
+    h_out = jnp.einsum("bhts,bhsd->bhtd", scores / norm, v.astype(jnp.float32))
+    return h_out.astype(q.dtype)
+
+
+_CHUNK_THRESHOLD = 2048
+_CHUNK = 512
+
+
+def _mlstm_chunkwise(q, k, v, i_tilde, f_tilde, chunk: int = _CHUNK):
+    """Chunkwise-parallel mLSTM (xLSTM paper App. formulation).
+
+    Splits time into chunks; within a chunk the quadratic parallel form is
+    used, across chunks the (C, n, m) recurrent state is carried by a scan.
+    Peak memory O(B*H*chunk*S_chunk) instead of O(B*H*S^2).
+
+    q/k/v: (B,H,S,Dh); gates: (B,H,S). Returns (B,H,S,Dh).
+    """
+    B, H, S, Dh = q.shape
+    assert S % chunk == 0
+    nc = S // chunk
+    log_f = jax.nn.log_sigmoid(f_tilde.astype(jnp.float32))
+    i32 = i_tilde.astype(jnp.float32)
+    q32 = q.astype(jnp.float32)
+    k32 = k.astype(jnp.float32) * (Dh**-0.5)
+    v32 = v.astype(jnp.float32)
+
+    # reshape to (nc, B, H, chunk, ...)
+    def to_chunks(x):
+        return x.reshape(B, H, nc, chunk, *x.shape[3:]).transpose(2, 0, 1, 3, *range(4, x.ndim + 1))
+
+    qc, kc, vc = to_chunks(q32), to_chunks(k32), to_chunks(v32)
+    fc, ic = to_chunks(log_f), to_chunks(i32)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(state, inputs):
+        C0, n0, m0 = state  # (B,H,Dh,Dh), (B,H,Dh), (B,H)
+        qx, kx, vx, fx, ix = inputs  # (B,H,chunk,...)
+        F = jnp.cumsum(fx, axis=-1)  # (B,H,chunk) decay from chunk start
+        # intra-chunk log weights D[t,s] = F_t - F_s + log i_s (s <= t)
+        D = F[..., :, None] - F[..., None, :] + ix[..., None, :]
+        D = jnp.where(causal, D, -jnp.inf)
+        m_intra = jnp.max(D, axis=-1)  # (B,H,chunk)
+        # inter contribution decays from the carried state: b_t = F_t + m0
+        b = F + m0[..., None]
+        m_t = jnp.maximum(jnp.maximum(m_intra, -1e30), b)
+        a = jnp.exp(D - m_t[..., None])  # (B,H,chunk,chunk)
+        scores = jnp.einsum("bhtd,bhsd->bhts", qx, kx) * a
+        w_inter = jnp.exp(b - m_t)  # (B,H,chunk)
+        inter_num = jnp.einsum("bhde,bhte->bhtd", C0, qx)  # contract key dim
+        num = jnp.einsum("bhts,bhsd->bhtd", scores, vx) + w_inter[..., None] * inter_num
+        den_dot = scores.sum(-1) + w_inter * jnp.einsum("bhd,bhtd->bht", n0, qx)
+        den = jnp.maximum(jnp.abs(den_dot), jnp.exp(-m_t))
+        h = num / den[..., None]  # (B,H,chunk,Dh)
+
+        # state update to chunk end
+        F_last = F[..., -1]  # (B,H)
+        w_log = F_last[..., None] - F + ix  # (B,H,chunk)
+        m_new = jnp.maximum(F_last + m0, jnp.max(w_log, axis=-1))
+        scale_old = jnp.exp(F_last + m0 - m_new)  # (B,H)
+        w = jnp.exp(w_log - m_new[..., None])  # (B,H,chunk)
+        C_new = scale_old[..., None, None] * C0 + jnp.einsum(
+            "bhs,bhsd,bhse->bhde", w, vx, kx
+        )
+        n_new = scale_old[..., None] * n0 + jnp.einsum("bhs,bhsd->bhd", w, kx)
+        return (C_new, n_new, m_new), h
+
+    init = (
+        jnp.zeros((B, H, Dh, Dh), jnp.float32),
+        jnp.zeros((B, H, Dh), jnp.float32),
+        jnp.full((B, H), -1e30, jnp.float32),
+    )
+    _, hs = jax.lax.scan(jax.checkpoint(step), init, (qc, kc, vc, fc, ic))
+    out = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, Dh)
+    return out.astype(q.dtype)
+
+
+def _mlstm_recurrent_step(q, k, v, i_tilde, f_tilde, state):
+    """One decode step. q/k/v: (B,H,Dh); gates: (B,H). state: dict(C,n,m)."""
+    C, n, m = state["C"], state["n"], state["m"]
+    log_f = jax.nn.log_sigmoid(f_tilde.astype(jnp.float32))
+    m_new = jnp.maximum(log_f + m, i_tilde.astype(jnp.float32))
+    i_p = jnp.exp(i_tilde.astype(jnp.float32) - m_new)[..., None]
+    f_p = jnp.exp(log_f + m - m_new)[..., None]
+    k32, v32, q32 = (t.astype(jnp.float32) for t in (k, v, q))
+    Dh = q.shape[-1]
+    k32 = k32 * (Dh**-0.5)
+    C_new = f_p[..., None] * C + i_p[..., None] * (v32[..., :, None] * k32[..., None, :])
+    n_new = f_p * n + i_p * k32
+    num = jnp.einsum("bhdk,bhk->bhd", C_new, q32)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q32))[..., None], jnp.exp(-m_new)[..., None])
+    h = (num / den).astype(q.dtype)
+    return h, {"C": C_new, "n": n_new, "m": m_new}
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> PyTree:
+    d_in = int(cfg.d_model * _MLSTM_PROJ)
+    h = cfg.num_heads
+    dh = d_in // h
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, d_in), dtype_of(cfg)),
+    }
+
+
+def mlstm_block(
+    params: PyTree, cfg: ModelConfig, x: jax.Array, state: PyTree | None = None
+) -> tuple[jax.Array, PyTree | None]:
+    """x: (B,S,D). Parallel form when state is None, else recurrent decode."""
+    B, S, D = x.shape
+    h = cfg.num_heads
+    xn = rms_norm(params["norm"], x, cfg.norm_eps)
+    up = xn @ params["w_up"]  # (B,S,d_in)
+    gate = xn @ params["w_gate"]
+    d_in = up.shape[-1]
+    dh = d_in // h
+
+    conv_state = None if state is None else state["conv"]
+    conv_out, new_conv = _causal_conv1d(up, params["conv_w"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+
+    q = (conv_out @ params["wq"]).reshape(B, S, h, dh).transpose(0, 2, 1, 3)
+    k = (conv_out @ params["wk"]).reshape(B, S, h, dh).transpose(0, 2, 1, 3)
+    v = (up @ params["wv"]).reshape(B, S, h, dh).transpose(0, 2, 1, 3)
+    gates = conv_out @ params["w_if"] + params["b_if"]  # (B,S,2h)
+    i_tilde = gates[..., :h].transpose(0, 2, 1)  # (B,h,S)
+    f_tilde = gates[..., h:].transpose(0, 2, 1)
+
+    if state is None:
+        if S > _CHUNK_THRESHOLD and S % _CHUNK == 0:
+            h_out = _mlstm_chunkwise(q, k, v, i_tilde, f_tilde)
+        else:
+            h_out = _mlstm_parallel(q, k, v, i_tilde, f_tilde)  # (B,h,S,dh)
+        new_state = None
+    elif S == 1:
+        h_step, inner = _mlstm_recurrent_step(
+            q[:, :, 0], k[:, :, 0], v[:, :, 0], i_tilde[:, :, 0], f_tilde[:, :, 0],
+            {"C": state["C"], "n": state["n"], "m": state["m"]},
+        )
+        h_out = h_step[:, :, None, :]  # (B,h,1,dh)
+        new_state = {**inner, "conv": new_conv}
+    else:
+        # Prefill: parallel output + closed-form final state (assumes the
+        # incoming state is fresh/empty, which is how the serve engine
+        # initializes prefill).
+        h_out = _mlstm_parallel(q, k, v, i_tilde, f_tilde)
+        log_f = jax.nn.log_sigmoid(f_tilde.astype(jnp.float32))
+        F = jnp.cumsum(log_f, axis=-1)  # (B,h,S)
+        last = F[..., -1:]
+        w_log = last - F + i_tilde.astype(jnp.float32)  # exp-gate weights at T
+        m_T = jnp.max(w_log, axis=-1)  # (B,h)
+        w = jnp.exp(w_log - m_T[..., None])  # (B,h,S)
+        k_sc = k.astype(jnp.float32) * (dh**-0.5)
+        C_T = jnp.einsum("bhs,bhsd,bhse->bhde", w, v.astype(jnp.float32), k_sc)
+        n_T = jnp.einsum("bhs,bhsd->bhd", w, k_sc)
+        new_state = {"C": C_T, "n": n_T, "m": m_T, "conv": new_conv}
+
+    h_seq = h_out.transpose(0, 2, 1, 3).reshape(B, S, d_in)
+    h_seq = rms_norm(params["out_norm"], h_seq, cfg.norm_eps)
+    out = (h_seq * jax.nn.silu(gate)) @ params["w_down"]
+    return x + out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm_block(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    ks = jax.random.split(key, 8)
+    std = d**-0.5
+    ff = int(d * _SLSTM_FF)
+    return {
+        "norm": init_rms_norm(d, dt),
+        # input projections for gates z, i, f, o: (d, 4d)
+        "w_in": truncated_normal(ks[0], (d, 4 * d), std, dt),
+        "b_in": jnp.zeros((4 * d,), dt),
+        # per-head recurrent weights for the 4 gates: (4, h, dh, dh)
+        "r": truncated_normal(ks[1], (4, h, dh, dh), dh**-0.5, dt),
+        "out_norm": init_rms_norm(d, dt),
+        "ffn_norm": init_rms_norm(d, dt),
+        "w_ff_up": truncated_normal(ks[2], (d, ff), std, dt),
+        "w_ff_down": truncated_normal(ks[3], (ff, d), ff**-0.5, dt),
+    }
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> PyTree:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, h, dh), -1e30, jnp.float32)}
+
+
+def _slstm_step(params, cfg, state, x_t):
+    """x_t: (B, 4d) pre-projected gate inputs. state: dict(c, n, h, m)."""
+    B = x_t.shape[0]
+    d = cfg.d_model
+    h_heads = cfg.num_heads
+    dh = d // h_heads
+    c, n, h_prev, m = state["c"], state["n"], state["h"], state["m"]
+    # recurrent contribution: per-gate, per-head  h_prev @ r[g, head]
+    rec = jnp.einsum("bhd,ghde->gbhe", h_prev, params["r"].astype(jnp.float32))  # (4,B,h,dh)
+    gates = x_t.reshape(B, 4, h_heads, dh).transpose(1, 0, 2, 3).astype(jnp.float32) + rec
+    z_t = jnp.tanh(gates[0])
+    i_tilde = gates[1]
+    f_tilde = gates[2]
+    o_t = jax.nn.sigmoid(gates[3])
+    log_f = jax.nn.log_sigmoid(f_tilde)
+    m_new = jnp.maximum(log_f + m, i_tilde)
+    i_p = jnp.exp(i_tilde - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c_new = f_p * c + i_p * z_t
+    n_new = jnp.maximum(f_p * n + i_p, jnp.exp(-m_new))
+    h_new = o_t * (c_new / n_new)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_block(
+    params: PyTree, cfg: ModelConfig, x: jax.Array, state: PyTree | None = None
+) -> tuple[jax.Array, PyTree | None]:
+    """x: (B,S,D). lax.scan over time (sequential); O(1) decode with state."""
+    B, S, D = x.shape
+    h_heads = cfg.num_heads
+    dh = D // h_heads
+    xn = rms_norm(params["norm"], x, cfg.norm_eps)
+    gate_in = xn @ params["w_in"] + params["b_in"]  # (B,S,4D)
+
+    if state is None or S > 1:
+        init = state if state is not None else init_slstm_state(cfg, B)
+
+        def step(carry, x_t):
+            new = _slstm_step(params, cfg, carry, x_t)
+            return new, new["h"]
+
+        final, hs = jax.lax.scan(step, init, gate_in.transpose(1, 0, 2))  # (S,B,h,dh)
+        h_seq = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+        new_state = final if state is not None else None
+    else:
+        new_state = _slstm_step(params, cfg, state, gate_in[:, 0])
+        h_seq = new_state["h"].reshape(B, 1, D).astype(x.dtype)
+
+    h_seq = rms_norm(params["out_norm"], h_seq, cfg.norm_eps)
+    y = x + h_seq
+    # post FFN (factor 4/3, GeLU)
+    ffn_in = rms_norm(params["ffn_norm"], y, cfg.norm_eps)
+    ffn = jax.nn.gelu(ffn_in @ params["w_ff_up"], approximate=True) @ params["w_ff_down"]
+    return y + ffn, new_state

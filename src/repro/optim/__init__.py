@@ -1,0 +1,31 @@
+"""Optimizers and LR schedules, written from scratch (optax is unavailable).
+
+API mirrors the optax convention: an optimizer is an ``(init, update)`` pair
+where ``update(grads, state, params) -> (updates, state)`` and updates are
+*added* to params by ``apply_updates``.
+"""
+
+from .optimizers import (
+    OptState,
+    Optimizer,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    global_norm,
+    sgd,
+)
+from .schedule import constant, cosine_decay, linear_warmup_cosine, warmup_constant
+
+__all__ = [
+    "OptState",
+    "Optimizer",
+    "adamw",
+    "apply_updates",
+    "clip_by_global_norm",
+    "global_norm",
+    "sgd",
+    "constant",
+    "cosine_decay",
+    "linear_warmup_cosine",
+    "warmup_constant",
+]

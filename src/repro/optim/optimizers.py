@@ -1,0 +1,133 @@
+"""Minimal functional optimizers (SGD / momentum / AdamW) on pytrees."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = [
+    "Optimizer",
+    "OptState",
+    "sgd",
+    "adamw",
+    "apply_updates",
+    "global_norm",
+    "clip_by_global_norm",
+]
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: PyTree | None  # first moment / momentum
+    nu: PyTree | None  # second moment (adam only)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], OptState]
+    update: Callable[[PyTree, OptState, PyTree], tuple[PyTree, OptState]]
+
+
+def _zeros_like_tree(params: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def sgd(
+    learning_rate: float | Callable[[jax.Array], jax.Array],
+    momentum: float = 0.0,
+    nesterov: bool = False,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """Plain / heavy-ball / Nesterov SGD with optional decoupled weight decay."""
+
+    def lr_at(step):
+        return learning_rate(step) if callable(learning_rate) else learning_rate
+
+    def init(params: PyTree) -> OptState:
+        mu = _zeros_like_tree(params) if momentum > 0.0 else None
+        return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu=None)
+
+    def update(grads: PyTree, state: OptState, params: PyTree):
+        lr = lr_at(state.step)
+        if weight_decay > 0.0:
+            grads = jax.tree_util.tree_map(
+                lambda g, p: g + weight_decay * p, grads, params
+            )
+        if momentum > 0.0:
+            mu = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g, state.mu, grads
+            )
+            if nesterov:
+                upd = jax.tree_util.tree_map(
+                    lambda m, g: -(lr) * (momentum * m + g), mu, grads
+                )
+            else:
+                upd = jax.tree_util.tree_map(lambda m: -(lr) * m, mu)
+            return upd, OptState(step=state.step + 1, mu=mu, nu=None)
+        upd = jax.tree_util.tree_map(lambda g: -(lr) * g, grads)
+        return upd, OptState(step=state.step + 1, mu=None, nu=None)
+
+    return Optimizer(init=init, update=update)
+
+
+def adamw(
+    learning_rate: float | Callable[[jax.Array], jax.Array],
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """AdamW with bias correction and decoupled weight decay."""
+
+    def lr_at(step):
+        return learning_rate(step) if callable(learning_rate) else learning_rate
+
+    def init(params: PyTree) -> OptState:
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=_zeros_like_tree(params),
+            nu=_zeros_like_tree(params),
+        )
+
+    def update(grads: PyTree, state: OptState, params: PyTree):
+        step = state.step + 1
+        lr = lr_at(state.step)
+        mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state.nu, grads
+        )
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def u(m, v, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            upd = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay > 0.0:
+                upd = upd + weight_decay * p
+            return -(lr) * upd
+
+        upd = jax.tree_util.tree_map(u, mu, nu, params)
+        return upd, OptState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm

@@ -1,0 +1,51 @@
+"""Learning-rate schedules (callables from step -> lr)."""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["constant", "warmup_constant", "cosine_decay", "linear_warmup_cosine"]
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def constant(value: float) -> Schedule:
+    def fn(step):
+        return jnp.asarray(value, jnp.float32)
+
+    return fn
+
+
+def warmup_constant(value: float, warmup_steps: int) -> Schedule:
+    def fn(step):
+        frac = jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+        return jnp.asarray(value, jnp.float32) * frac
+
+    return fn
+
+
+def cosine_decay(init_value: float, decay_steps: int, alpha: float = 0.0) -> Schedule:
+    def fn(step):
+        frac = jnp.clip(step / max(decay_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return init_value * ((1 - alpha) * cos + alpha)
+
+    return fn
+
+
+def linear_warmup_cosine(
+    peak: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1
+) -> Schedule:
+    def fn(step):
+        warm = peak * (step + 1) / max(warmup_steps, 1)
+        frac = jnp.clip(
+            (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        decayed = peak * ((1 - final_frac) * cos + final_frac)
+        return jnp.where(step < warmup_steps, warm, decayed).astype(jnp.float32)
+
+    return fn

@@ -1,0 +1,5 @@
+"""Serving: batched prefill / decode engine + abstract serve setup."""
+
+from .engine import ServeSetup, decode_step, generate, make_serve_setup, prefill
+
+__all__ = ["ServeSetup", "decode_step", "generate", "make_serve_setup", "prefill"]

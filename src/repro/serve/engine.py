@@ -1,0 +1,217 @@
+"""Serving engine: batched prefill + single-token decode with KV caches.
+
+Provides both the concrete host-side engine (used by tests/examples for
+greedy generation) and the abstract ``make_serve_setup`` consumed by the
+multi-pod dry-run: ``serve_step`` lowers ONE new token against a
+``seq_len``-sized cache, which is exactly what the decode input shapes
+(decode_32k / long_500k) specify.
+
+Sharding for serving: params TP over ``model`` (no node axis -- serving does
+not run D-SGD); request batch and caches sharded over ``data`` (and ``pod``).
+``long_context=True`` selects the sub-quadratic mode: every attention layer
+uses a ring-buffer window cache (cfg.long_context_window) and recurrent
+blocks keep their O(1) state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models import registry, transformer, whisper as wmod
+from repro.models.common import ModelConfig
+from repro.train.sharding import make_param_specs, sanitize_spec
+
+PyTree = Any
+
+__all__ = ["ServeSetup", "make_serve_setup", "prefill", "decode_step", "generate"]
+
+
+# ---------------------------------------------------------------------------
+# Concrete engine (tests / examples)
+# ---------------------------------------------------------------------------
+
+def prefill(
+    params: PyTree,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    *,
+    max_len: int,
+    image_embeds: jax.Array | None = None,
+    frames: jax.Array | None = None,
+    long_context: bool = False,
+) -> tuple[jax.Array, PyTree]:
+    """Run the prompt through the model, building the decode cache.
+
+    Returns (last-position logits, cache).
+    """
+    B, S = tokens.shape
+    if cfg.arch_type == "audio":
+        enc = wmod.encode(params, cfg, frames)
+        cache = wmod.init_whisper_cache(cfg, B, max_len, enc)
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        logits, cache, _ = wmod.whisper_forward(
+            params, cfg, None, tokens, cache=cache, positions=pos
+        )
+        return logits[:, -1], cache
+    total = S + (image_embeds.shape[1] if image_embeds is not None else 0)
+    cache = transformer.init_cache(cfg, B, max_len, long_context=long_context)
+    pos = jnp.broadcast_to(jnp.arange(total)[None], (B, total))
+    logits, cache, _ = transformer.forward(
+        params, cfg, tokens, image_embeds=image_embeds, cache=cache, positions=pos,
+        window_override=cfg.long_context_window if long_context else None,
+    )
+    return logits[:, -1], cache
+
+
+def decode_step(
+    params: PyTree,
+    cfg: ModelConfig,
+    token: jax.Array,  # (B, 1)
+    position: jax.Array,  # (B, 1) absolute position of the new token
+    cache: PyTree,
+    *,
+    long_context: bool = False,
+) -> tuple[jax.Array, PyTree]:
+    """One new token against the cache. Returns (logits (B, V), new cache)."""
+    if cfg.arch_type == "audio":
+        logits, cache, _ = wmod.whisper_forward(
+            params, cfg, None, token, cache=cache, positions=position
+        )
+        return logits[:, 0], cache
+    logits, cache, _ = transformer.forward(
+        params, cfg, token, cache=cache, positions=position,
+        window_override=cfg.long_context_window if long_context else None,
+    )
+    return logits[:, 0], cache
+
+
+def generate(
+    params: PyTree,
+    cfg: ModelConfig,
+    prompt: jax.Array,
+    *,
+    max_new_tokens: int = 16,
+    image_embeds: jax.Array | None = None,
+    frames: jax.Array | None = None,
+    long_context: bool = False,
+) -> jax.Array:
+    """Greedy generation (host loop; used by tests and examples)."""
+    B, S = prompt.shape
+    offset = image_embeds.shape[1] if image_embeds is not None else 0
+    max_len = offset + S + max_new_tokens + 1
+    logits, cache = prefill(
+        params, cfg, prompt,
+        max_len=max_len, image_embeds=image_embeds, frames=frames,
+        long_context=long_context,
+    )
+    toks = [jnp.argmax(logits, -1)[:, None]]
+    pos = offset + S
+    step = jax.jit(
+        lambda p, t, ps, c: decode_step(p, cfg, t, ps, c, long_context=long_context)
+    )
+    for _ in range(max_new_tokens - 1):
+        logits, cache = step(params, toks[-1], jnp.full((B, 1), pos), cache)
+        toks.append(jnp.argmax(logits, -1)[:, None])
+        pos += 1
+    return jnp.concatenate(toks, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Abstract serve setup (dry-run / launcher)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServeSetup:
+    serve_step: Callable  # (params, token, position, cache) -> (logits, cache)
+    param_specs: PyTree
+    cache_specs: PyTree
+    abstract_cache: PyTree
+    n_kv_shardable: bool
+
+
+def _cache_specs_for(cache: PyTree, mesh: Mesh) -> PyTree:
+    """Shard caches: batch over data(+pod); one trailing dim over model.
+
+    KV leaves prefer the kv-head dim; when kv_heads do not divide the model
+    axis (MQA/GQA with few kv heads), fall back to head_dim, then seq.
+    Transformer caches are group-stacked (leading scan axis, path contains
+    'stages'); whisper caches are flat.
+    """
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dp_axis = tuple(dp) if len(dp) > 1 else dp[0]
+    msize = mesh.shape["model"]
+
+    def spec(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        shape = tuple(leaf.shape)
+        off = 1 if "stages" in pstr else 0  # leading group axis from scan
+        rank = len(shape)
+        dims: list = [None] * rank
+        if rank <= off:  # stacked scalar index (G,) or scalar ()
+            return P(*dims)
+        dims[off] = dp_axis  # batch
+
+        def try_model(idx: int) -> bool:
+            if idx < rank and idx > off and shape[idx] % msize == 0:
+                dims[idx] = "model"
+                return True
+            return False
+
+        name = pstr.rsplit("'", 2)[-2] if "'" in pstr else ""
+        if name in ("k", "v") and rank - off == 4:  # (B, S, H, D)
+            _ = try_model(off + 2) or try_model(off + 3) or try_model(off + 1)
+        elif name in ("c_kv", "k_rope"):  # (B, S, r)
+            _ = try_model(off + 2) or try_model(off + 1)
+        elif name == "encoder_out":  # (B, F, D)
+            _ = try_model(off + 2)
+        else:  # recurrent states / conv tails: shard the last (feature) dim
+            _ = try_model(rank - 1)
+        return sanitize_spec(P(*dims), shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def make_serve_setup(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    *,
+    batch: int,
+    seq_len: int,
+    long_context: bool = False,
+) -> ServeSetup:
+    """Build the decode step + shardings for a (cfg, batch, cache-len) shape."""
+
+    def serve_step(params, token, position, cache):
+        return decode_step(
+            params, cfg, token, position, cache, long_context=long_context
+        )
+
+    param_specs = make_param_specs(
+        jax.eval_shape(lambda r: registry.init_model(r, cfg), jax.random.PRNGKey(0)),
+        mesh,
+        node_axis=None,
+        fsdp_axis=None,
+    )
+
+    def make_cache():
+        if cfg.arch_type == "audio":
+            enc = jnp.zeros(
+                (batch, cfg.encoder.num_frames, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+            return wmod.init_whisper_cache(cfg, batch, seq_len, enc)
+        return transformer.init_cache(cfg, batch, seq_len, long_context=long_context)
+
+    abstract_cache = jax.eval_shape(make_cache)
+    cache_specs = _cache_specs_for(abstract_cache, mesh)
+    return ServeSetup(
+        serve_step=serve_step,
+        param_specs=param_specs,
+        cache_specs=cache_specs,
+        abstract_cache=abstract_cache,
+        n_kv_shardable=cfg.num_kv_heads % mesh.shape["model"] == 0,
+    )

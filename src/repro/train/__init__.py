@@ -1,0 +1,25 @@
+"""Training: n-node D-SGD simulator + mesh-sharded LM trainer + utilities."""
+
+from . import checkpoints, lm_trainer, metrics, sharding, trainer
+from .checkpoints import CheckpointManager, restore_checkpoint, save_checkpoint
+from .lm_trainer import TrainSetup, make_train_setup
+from .metrics import MetricLogger, consensus_distance, node_spread
+from .trainer import run_classification, run_mean_estimation
+
+__all__ = [
+    "checkpoints",
+    "lm_trainer",
+    "metrics",
+    "sharding",
+    "trainer",
+    "CheckpointManager",
+    "restore_checkpoint",
+    "save_checkpoint",
+    "TrainSetup",
+    "make_train_setup",
+    "MetricLogger",
+    "consensus_distance",
+    "node_spread",
+    "run_classification",
+    "run_mean_estimation",
+]

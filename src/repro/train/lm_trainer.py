@@ -1,0 +1,311 @@
+"""Mesh-sharded large-model trainer: D-SGD over the data axis + tensor
+parallelism over the model axis.
+
+Three distribution modes (DESIGN.md Section 3.2):
+
+* ``dsgd``     -- each index of the ``data`` mesh axis is one D-SGD node
+                  holding its own model replica (params get a leading node
+                  axis sharded over ``data``; each replica is TP-sharded over
+                  ``model``). The mixing step executes the learned topology's
+                  Birkhoff decomposition as a ``ppermute`` schedule
+                  (d_max collective-permutes instead of an all-reduce).
+* ``fsdp``     -- C-PSGD baseline / fallback: one global model, params
+                  sharded over (data x model), gradients all-reduced by
+                  GSPMD. Equivalent to D-SGD with W = 11^T/n.
+* ``dsgd_pod`` -- multi-pod: pods are the D-SGD nodes (params stacked over
+                  ``pod``); within a pod, classic data parallelism; across
+                  pods, the sparse gossip schedule rides the slow DCN links.
+
+``make_train_setup`` returns everything the launcher / dry-run needs:
+the jitted-able step function, in/out shardings, and abstract input specs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.mixing import BirkhoffSchedule, mix_ppermute
+from repro.models import registry
+from repro.models.common import ModelConfig
+from .sharding import make_param_specs
+
+PyTree = Any
+
+__all__ = ["TrainSetup", "make_train_setup", "gossip_fn"]
+
+
+@dataclasses.dataclass
+class TrainSetup:
+    """Everything needed to jit / lower a distributed train step."""
+
+    train_step: Callable  # (params, opt_state, batch) -> (params, opt_state, loss)
+    init_params: Callable  # (rng) -> params (abstract-safe via jax.eval_shape)
+    param_specs: PyTree
+    batch_spec: PyTree
+    mode: str
+    n_nodes: int
+
+    def abstract_params(self) -> PyTree:
+        return jax.eval_shape(self.init_params, jax.random.PRNGKey(0))
+
+
+def gossip_fn(
+    mesh: Mesh, schedule: BirkhoffSchedule | None, axis: str, param_specs: PyTree
+) -> Callable[[PyTree], PyTree]:
+    """Mixing transport over ``axis``: Birkhoff ppermute schedule, or pmean
+    when ``schedule`` is None (complete graph / C-PSGD)."""
+
+    node_specs = jax.tree_util.tree_map(
+        lambda s: P(axis), param_specs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+    def mix(params: PyTree) -> PyTree:
+        def inner(p):
+            if schedule is None:
+                # f32 reduction: numerics + XLA-CPU bf16 all-reduce workaround
+                return jax.tree_util.tree_map(
+                    lambda x: jax.lax.pmean(x.astype(jnp.float32), axis).astype(x.dtype),
+                    p,
+                )
+            return mix_ppermute(p, schedule, axis)
+
+        return jax.shard_map(
+            inner,
+            mesh=mesh,
+            in_specs=(node_specs,),
+            out_specs=node_specs,
+            axis_names={axis},
+            check_vma=False,
+        )(params)
+
+    return mix
+
+
+def _sgd_update(params, grads, momentum_state, lr, momentum):
+    if momentum > 0.0:
+        new_m = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g, momentum_state, grads
+        )
+        new_p = jax.tree_util.tree_map(lambda p, m: p - lr * m, params, new_m)
+        return new_p, new_m
+    new_p = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    return new_p, momentum_state
+
+
+def make_train_setup(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    *,
+    mode: str = "dsgd",
+    schedule: BirkhoffSchedule | None = None,
+    lr: float = 1e-3,
+    momentum: float = 0.0,
+    impl: str = "xla",
+    grad_accum: int = 1,
+    gossip_every: int = 1,
+) -> TrainSetup:
+    """Build the distributed train step for (cfg, mesh, mode).
+
+    ``schedule=None`` in dsgd/dsgd_pod modes means complete-graph mixing.
+    ``grad_accum > 1`` splits the per-step batch into microbatches and
+    accumulates gradients in a scan -- same math, ~grad_accum x smaller
+    live-activation footprint (the big lever for DeepSeek-V2 -- §Perf).
+    ``gossip_every = k > 1`` mixes only every k-th step (time-varying
+    W^(t) with W = I on off-steps -- covered by the paper's changing-
+    topology analysis): amortizes gossip bytes by 1/k. The step function
+    then takes a step counter through the momentum_state slot convention
+    (see train_step signature below: ``step`` is carried in opt state).
+    """
+    axes = mesh.axis_names
+    if mode == "dsgd":
+        node_axis = "data"
+        n_nodes = mesh.shape["data"]
+        fsdp_axis = None
+    elif mode == "dsgd_pod":
+        if "pod" not in axes:
+            raise ValueError("dsgd_pod requires a 'pod' mesh axis")
+        node_axis = "pod"
+        n_nodes = mesh.shape["pod"]
+        fsdp_axis = "data"
+    elif mode == "fsdp":
+        node_axis = None
+        n_nodes = 1
+        fsdp_axis = "data"
+    else:
+        raise ValueError(f"unknown mode {mode}")
+
+    if schedule is not None and node_axis is not None and schedule.n_nodes != n_nodes:
+        raise ValueError(
+            f"schedule has {schedule.n_nodes} nodes, mesh axis '{node_axis}' "
+            f"provides {n_nodes}"
+        )
+
+    def init_single(rng):
+        return registry.init_model(rng, cfg)
+
+    if node_axis is not None:
+        def init_params(rng):
+            p = init_single(rng)
+            # Algorithm 1: theta_i^(0) = theta^(0) -- same init on all nodes.
+            return jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None], (n_nodes,) + x.shape), p
+            )
+    else:
+        init_params = init_single
+
+    params_proto = jax.eval_shape(init_params, jax.random.PRNGKey(0))
+    param_specs = make_param_specs(
+        params_proto, mesh, node_axis=node_axis, fsdp_axis=fsdp_axis
+    )
+
+    # batch sharding:
+    #   dsgd:      leaves (n_nodes, per_node, ...) -> P(data, None, ...)
+    #   dsgd_pod:  leaves (n_pod, per_pod, ...)    -> P(pod, data, ...)
+    #   fsdp:      leaves (batch, ...)             -> P((pod?, data), ...)
+    if mode == "dsgd":
+        batch_prefix = ("data", None)
+    elif mode == "dsgd_pod":
+        batch_prefix = ("pod", "data")
+    else:
+        # true-FSDP batch sharding: batch over data AND model (weights are
+        # gathered per layer-group; grads reduce-scatter back)
+        dp = ("pod", "data", "model") if "pod" in axes else ("data", "model")
+        batch_prefix = (tuple(dp),)
+
+    def batch_spec_for(leaf_ndim: int) -> P:
+        pad = [None] * (leaf_ndim - len(batch_prefix))
+        return P(*batch_prefix, *pad)
+
+    loss_of = lambda p, b: registry.loss_fn(p, cfg, b, impl=impl)[0]
+    grad_of_single = jax.value_and_grad(loss_of)
+
+    if grad_accum > 1:
+        def grad_of(p, b):
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape(grad_accum, x.shape[0] // grad_accum, *x.shape[1:]),
+                b,
+            )
+
+            def body(acc, mb):
+                loss_acc, g_acc = acc
+                loss, g = grad_of_single(p, mb)
+                g_new = jax.tree_util.tree_map(jnp.add, g_acc, g)
+                return (loss_acc + loss, g_new), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), p
+            )
+            (loss_sum, g_sum), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), zeros), micro)
+            g_mean = jax.tree_util.tree_map(
+                lambda g, x: (g / grad_accum).astype(x.dtype), g_sum, p
+            )
+            return loss_sum / grad_accum, g_mean
+    else:
+        grad_of = grad_of_single
+
+    def train_step(params, momentum_state, batch):
+        if node_axis is None:
+            loss, grads = grad_of(params, batch)
+            new_params, new_m = _sgd_update(params, grads, momentum_state, lr, momentum)
+            return new_params, new_m, loss
+
+        if mode == "dsgd_pod":
+            # Cross-pod gossip as a dense mixing einsum over the (tiny) pod
+            # axis: GSPMD lowers the contraction over the pod-sharded axis
+            # to cross-pod collectives. (A partial-manual shard_map over
+            # `pod` with auto data/model axes crashes this XLA version's
+            # SPMD partitioner -- see EXPERIMENTS.md.)
+            import numpy as _np
+
+            losses, grads = jax.vmap(grad_of)(params, batch)
+            half, new_m = _sgd_update(params, grads, momentum_state, lr, momentum)
+            W_pod = (
+                jnp.asarray(schedule.to_matrix(), jnp.float32)
+                if schedule is not None
+                else jnp.full((n_nodes, n_nodes), 1.0 / n_nodes, jnp.float32)
+            )
+            mixed = jax.tree_util.tree_map(
+                lambda x: jnp.einsum(
+                    "pq,q...->p...", W_pod, x.astype(jnp.float32)
+                ).astype(x.dtype),
+                half,
+            )
+            return mixed, new_m, losses.mean()
+
+        # The node axis is *manual* (shard_map over `node_axis`): each shard
+        # owns exactly one node's replica, so node-local activations can
+        # never silently replicate across nodes. TP over `model` (and, in
+        # dsgd_pod mode, data-parallel grads over `data`) stays automatic
+        # inside the shard.
+        squeeze = lambda t: jax.tree_util.tree_map(lambda x: x[0], t)
+        unsqueeze = lambda t: jax.tree_util.tree_map(lambda x: x[None], t)
+
+        def per_node(p, m, b):
+            p1, b1 = squeeze(p), squeeze(b)
+            step = m.get("step") if isinstance(m, dict) else None
+            m_tree = m.get("m") if isinstance(m, dict) else m
+            m1 = squeeze(m_tree) if momentum > 0.0 else None
+            # In dsgd_pod mode the within-pod `data` axis stays automatic:
+            # GSPMD data-parallelizes the loss/grad over it (the batch input
+            # sharding carries P(pod, data, ...)).
+            loss, grads = grad_of(p1, b1)
+            half, new_m = _sgd_update(p1, grads, m1, lr, momentum)
+
+            def do_mix(h):
+                if schedule is None:
+                    return jax.tree_util.tree_map(
+                        lambda x: jax.lax.pmean(x.astype(jnp.float32), node_axis).astype(x.dtype),
+                        h,
+                    )
+                return mix_ppermute(h, schedule, node_axis)
+
+            if gossip_every > 1:
+                if step is None:
+                    raise ValueError(
+                        "gossip_every > 1 needs a step counter: pass "
+                        "momentum_state={'step': jnp.zeros((), jnp.int32), 'm': ...}"
+                    )
+                mixed = jax.lax.cond(
+                    jnp.mod(step, gossip_every) == 0, do_mix, lambda h: h, half
+                )
+            else:
+                mixed = do_mix(half)
+            loss_mean = jax.lax.pmean(loss, node_axis)
+            new_m_tree = unsqueeze(new_m) if momentum > 0.0 else m_tree
+            if isinstance(m, dict):
+                new_m_out = {"step": step + 1, "m": new_m_tree}
+            else:
+                new_m_out = new_m_tree
+            return unsqueeze(mixed), new_m_out, loss_mean
+
+        node_specs = jax.tree_util.tree_map(
+            lambda s: P(node_axis), param_specs, is_leaf=lambda x: isinstance(x, P)
+        )
+        m_inner = node_specs if momentum > 0.0 else None
+        if isinstance(momentum_state, dict):
+            mom_specs = {"step": P(), "m": m_inner}
+        else:
+            mom_specs = m_inner
+        bspec = jax.tree_util.tree_map(lambda _: P(node_axis), batch)
+        return jax.shard_map(
+            per_node,
+            mesh=mesh,
+            in_specs=(node_specs, mom_specs, bspec),
+            out_specs=(node_specs, mom_specs, P()),
+            axis_names={node_axis},
+            check_vma=False,
+        )(params, momentum_state, batch)
+
+    return TrainSetup(
+        train_step=train_step,
+        init_params=init_params,
+        param_specs=param_specs,
+        batch_spec=batch_spec_for,
+        mode=mode,
+        n_nodes=n_nodes,
+    )

@@ -1,0 +1,59 @@
+"""Training metrics for decentralized runs.
+
+The quantities the paper plots: per-node error/accuracy (min/mean/max across
+nodes -- the dashed lines of Fig. 1), consensus distance
+``||Theta - Theta_bar||_F^2`` (the quantity controlled by Lemma 3), and
+standard loss aggregation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["consensus_distance", "node_spread", "MetricLogger"]
+
+
+def consensus_distance(params_stack: PyTree) -> jax.Array:
+    """``||Theta - Theta_bar||_F^2`` over stacked per-node parameters."""
+    total = jnp.zeros((), jnp.float32)
+    for leaf in jax.tree_util.tree_leaves(params_stack):
+        mean = jnp.mean(leaf, axis=0, keepdims=True)
+        total = total + jnp.sum(jnp.square((leaf - mean).astype(jnp.float32)))
+    return total
+
+
+def node_spread(values: jax.Array) -> dict[str, float]:
+    """min/mean/max over the node axis (Fig. 1's solid + dashed lines)."""
+    v = np.asarray(values)
+    return {"min": float(v.min()), "mean": float(v.mean()), "max": float(v.max())}
+
+
+@dataclasses.dataclass
+class MetricLogger:
+    """In-memory metric store with CSV export (offline container: no W&B)."""
+
+    history: list[dict] = dataclasses.field(default_factory=list)
+
+    def log(self, step: int, **metrics: float) -> None:
+        row = {"step": step}
+        row.update({k: float(v) for k, v in metrics.items()})
+        self.history.append(row)
+
+    def column(self, key: str) -> np.ndarray:
+        return np.array([row[key] for row in self.history if key in row])
+
+    def to_csv(self, path: str) -> None:
+        if not self.history:
+            return
+        keys = sorted({k for row in self.history for k in row})
+        with open(path, "w") as f:
+            f.write(",".join(keys) + "\n")
+            for row in self.history:
+                f.write(",".join(str(row.get(k, "")) for k in keys) + "\n")

@@ -1,0 +1,134 @@
+"""Partition rules: map parameter-tree paths to PartitionSpecs.
+
+Tensor-parallel (Megatron-style) rules over the ``model`` mesh axis, with
+optional FSDP-style sharding of the complementary dimension over ``data``
+(needed for DeepSeek-V2-236B, which does not fit replicated-per-node).
+
+Every candidate spec is *sanitized* against the actual leaf shape and mesh:
+an axis is dropped (set to None) when the dimension is not divisible by the
+mesh-axis size, so rules can be written optimistically and remain safe for
+every architecture in the zoo.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+__all__ = [
+    "tp_spec_for_path",
+    "make_param_specs",
+    "make_param_shardings",
+    "sanitize_spec",
+]
+
+# keyword -> (axis_to_shard_over_model, is_expert_tensor)
+# axis indices refer to the *unstacked* parameter (no node axis).
+_COL_PARALLEL = ("wq", "wk", "wv", "w_gate", "w_up", "w_uk", "w_uv",
+                 "w_in", "w_rnn_in", "w_a", "w_x", "w_ff_up", "w_dkv",
+                 "router")
+_ROW_PARALLEL = ("wo", "w_down", "w_out", "w_ff_down")
+_EXPERT = ("routed",)
+_VOCAB_PARALLEL = ("table", "token_embed", "unembed")
+
+
+def sanitize_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop mesh axes whose size does not divide the corresponding dim."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        out.append(entry if shape[i] % size == 0 else None)
+    # pad to rank
+    while len(out) < len(shape):
+        out.append(None)
+    return P(*out)
+
+
+def tp_spec_for_path(path: str, shape: tuple[int, ...], *, fsdp_axis: str | None = None) -> P:
+    """Tensor-parallel spec for an unstacked parameter.
+
+    ``fsdp_axis`` additionally shards the complementary matrix dimension
+    (weights at rest) over the given axis.
+    """
+    rank = len(shape)
+    d = fsdp_axis
+
+    def spec(*entries):
+        ent = list(entries) + [None] * (rank - len(entries))
+        return P(*ent[:rank])
+
+    if any(k in path for k in _EXPERT):
+        # stacked expert tensors (E, d, f): expert-parallel over model
+        return spec("model", d, None)
+    if any(path.endswith(k) or f"'{k}'" in path for k in _VOCAB_PARALLEL):
+        if "unembed" in path:
+            return spec(d, "model")  # (d, V)
+        return spec("model", d)  # (V, d)
+    if any(f"'{k}'" in path for k in _COL_PARALLEL):
+        return spec(d, "model")  # (d, X): shard output features
+    if any(f"'{k}'" in path for k in _ROW_PARALLEL):
+        return spec("model", d)  # (X, d): shard input features
+    if "'r'" in path and rank == 4:  # sLSTM recurrent (4, h, dh, dh)
+        return spec(None, "model", None, None)
+    if "'lam'" in path and rank == 1:
+        return spec("model")
+    return P(*([None] * rank))
+
+
+def make_param_specs(
+    params: PyTree,
+    mesh: Mesh,
+    *,
+    node_axis: str | None = None,
+    fsdp_axis: str | None = None,
+) -> PyTree:
+    """PartitionSpec tree for a parameter tree.
+
+    ``node_axis``: mesh axis carrying the leading D-SGD node dimension
+    (``dsgd`` mode stacks per-node replicas). ``fsdp_axis``: axis for
+    weights-at-rest sharding (``fsdp`` / ``dsgd_pod`` modes).
+    """
+
+    def leaf_spec(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        shape = tuple(leaf.shape)
+        prefix: list = []
+        rest = shape
+        if node_axis is not None:  # leading D-SGD node-replica axis
+            prefix.append(node_axis)
+            rest = rest[1:]
+        if "stages" in pstr:  # leading layer-scan group axis (stacked params)
+            prefix.append(None)
+            rest = rest[1:]
+        inner = tp_spec_for_path(pstr, rest, fsdp_axis=fsdp_axis)
+        spec = sanitize_spec(P(*prefix, *inner), shape, mesh)
+        # fallback: a big leaf whose rule got fully sanitized away (e.g. an
+        # odd vocab size) still gets model-sharded on any divisible dim.
+        body = list(spec)[len(prefix):]
+        if all(e is None for e in body) and leaf.size * 2 > 32 * 2**20:
+            msize = mesh.shape["model"]
+            for i in reversed(range(len(prefix), len(shape))):
+                if shape[i] % msize == 0:
+                    dims = list(spec)
+                    dims[i] = "model"
+                    spec = P(*dims)
+                    break
+        return spec
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def make_param_shardings(param_specs: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), param_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

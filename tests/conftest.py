@@ -1,0 +1,10 @@
+import os
+import sys
+
+# src-layout import path (tests run as `PYTHONPATH=src pytest tests/`, but be
+# robust when invoked without it).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: do NOT set --xla_force_host_platform_device_count here -- smoke tests
+# and benchmarks must see exactly 1 device. Multi-device behaviour is tested
+# in subprocesses (see test_distributed.py).

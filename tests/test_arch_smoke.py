@@ -1,0 +1,113 @@
+"""Per-architecture smoke tests (required deliverable f).
+
+For each assigned architecture: instantiate the REDUCED same-family config
+(<= 3 layers, d_model <= 512, <= 4 experts) and run one forward + one train
+step on CPU, asserting output shapes and the absence of NaNs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import (
+    active_param_count,
+    init_model,
+    loss_fn,
+    make_inputs,
+    model_forward,
+    param_count,
+)
+
+ARCHS = list(ARCH_IDS)
+
+
+@pytest.fixture(scope="module")
+def smoke_state():
+    state = {}
+    for name in ARCHS:
+        cfg = get_smoke_config(name)
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        state[name] = (cfg, params)
+    return state
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_reduced_config_limits(name):
+    cfg = get_smoke_config(name)
+    assert cfg.num_layers <= 3
+    assert cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.num_experts <= 4
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_forward_shapes_and_finite(name, smoke_state):
+    cfg, params = smoke_state[name]
+    B, S = 2, 32
+    batch = make_inputs(cfg, batch_size=B, seq_len=S)
+    logits, _, aux = model_forward(params, cfg, batch)
+    S_total = batch["tokens"].shape[1]
+    if cfg.arch_type == "vlm":
+        S_total += cfg.vision.num_patches
+    assert logits.shape == (B, S_total, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_one_train_step_no_nans(name, smoke_state):
+    cfg, params = smoke_state[name]
+    batch = make_inputs(cfg, batch_size=2, seq_len=32)
+
+    def loss(p):
+        return loss_fn(p, cfg, batch)[0]
+
+    l0, grads = jax.value_and_grad(loss)(params)
+    assert bool(jnp.isfinite(l0))
+    # SGD step
+    new_params = jax.tree_util.tree_map(lambda p, g: p - 0.05 * g, params, grads)
+    l1 = loss(new_params)
+    assert bool(jnp.isfinite(l1))
+    for leaf in jax.tree_util.tree_leaves(new_params):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_full_config_matches_assignment(name):
+    """The FULL configs carry the exact assigned hyperparameters."""
+    cfg = get_config(name)
+    expected = {
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+        "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+        "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+        "deepseek-v2-236b": (60, 5120, 128, 128, 1536, 102400),
+        "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+        "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+    }[name]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected
+    if name == "qwen3-moe-30b-a3b":
+        assert (cfg.moe.num_experts, cfg.moe.top_k) == (128, 8)
+    if name == "deepseek-v2-236b":
+        assert (cfg.moe.num_experts, cfg.moe.top_k) == (160, 6)
+        assert cfg.mla.kv_lora_rank == 512
+        assert cfg.moe.num_shared_experts == 2
+    if name == "gemma2-2b":
+        assert cfg.layer_pattern == ("local_attn", "attn")
+        assert cfg.final_logit_softcap == 30.0
+    if name == "recurrentgemma-2b":
+        assert cfg.layer_pattern == ("rglru", "rglru", "local_attn")
+
+
+def test_moe_active_params_fraction():
+    cfg = get_smoke_config("qwen3-moe-30b-a3b")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    total = param_count(params)
+    active = active_param_count(params, cfg)
+    assert active < total  # top-2 of 4 experts -> routed params halved

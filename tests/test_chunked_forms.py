@@ -1,0 +1,98 @@
+"""Memory-bounded (chunked) compute forms == dense reference forms."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.attention as att
+import repro.models.xlstm as xl
+from repro.models.common import MLAConfig, ModelConfig
+
+
+def _cfg(**kw):
+    base = dict(
+        name="t", arch_type="dense", num_layers=1, d_model=64, num_heads=4,
+        num_kv_heads=2, head_dim=16, d_ff=64, vocab_size=64,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.mark.parametrize("window", [None, 300])
+def test_sdpa_chunked_matches_dense(window):
+    rng = np.random.default_rng(0)
+    cfg = _cfg()
+    B, S, H, Hkv, D = 2, 1024, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    dense = att._sdpa(q, k, v, att._causal_mask(S, S, window), cfg)
+    chunked = att._sdpa_chunked(q, k, v, cfg, window, chunk_q=256)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunked), atol=2e-5)
+
+
+def test_sdpa_chunked_softcap():
+    rng = np.random.default_rng(1)
+    cfg = _cfg(attn_logit_softcap=30.0)
+    B, S = 1, 1024
+    q = jnp.asarray(rng.normal(size=(B, S, 2, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, 2, 16)), jnp.float32)
+    dense = att._sdpa(q, k, v, att._causal_mask(S, S, None), cfg)
+    chunked = att._sdpa_chunked(q, k, v, cfg, None, chunk_q=128)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunked), atol=2e-5)
+
+
+def test_mlstm_chunkwise_matches_parallel():
+    rng = np.random.default_rng(2)
+    B, H, S, Dh = 2, 3, 512, 16
+    q, k, v = (jnp.asarray(rng.normal(size=(B, H, S, Dh)), jnp.float32) for _ in range(3))
+    it = jnp.asarray(rng.normal(size=(B, H, S)), jnp.float32)
+    ft = jnp.asarray(rng.normal(size=(B, H, S)) + 2.0, jnp.float32)
+    par = xl._mlstm_parallel(q, k, v, it, ft)
+    chw = xl._mlstm_chunkwise(q, k, v, it, ft, chunk=64)
+    np.testing.assert_allclose(np.asarray(par), np.asarray(chw), atol=5e-3)
+
+
+def test_mla_chunked_matches_dense():
+    rng = np.random.default_rng(3)
+    mla = MLAConfig(kv_lora_rank=32, qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16)
+    cfg = _cfg(mla=mla, num_heads=4, num_kv_heads=4)
+    import jax
+
+    from repro.models.attention import init_mla_attention, mla_attention
+    import repro.models.attention as A
+
+    params = init_mla_attention(jax.random.PRNGKey(0), cfg)
+    B, S = 1, 1024
+    x = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)) * 0.3, jnp.float32)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    # dense path (below threshold)
+    thresh = A._CHUNK_THRESHOLD
+    A._CHUNK_THRESHOLD = 10**9
+    dense, _ = mla_attention(params, cfg, x, positions=positions)
+    A._CHUNK_THRESHOLD = 0
+    try:
+        chunked, _ = mla_attention(params, cfg, x, positions=positions)
+    finally:
+        A._CHUNK_THRESHOLD = thresh
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunked), atol=2e-4)
+
+
+def test_fused_unembed_xent_matches_direct():
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import init_model
+    from repro.models.transformer import forward, fused_unembed_xent, softmax_xent
+    from repro.models.layers import unembed
+
+    cfg = get_smoke_config("qwen3-0.6b")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 1024  # multiple of the xent chunk
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    labels = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size)
+    hidden, _, _ = forward(params, cfg, toks, return_hidden=True)
+    fused = fused_unembed_xent(params, cfg, hidden, labels)
+    direct = softmax_xent(unembed(params["embed"], hidden, cfg), labels)
+    assert float(jnp.abs(fused - direct)) < 1e-4

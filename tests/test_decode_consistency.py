@@ -1,0 +1,93 @@
+"""Decode path == full forward, for every architecture family.
+
+Prefill S-1 tokens through the cache, decode the final token, and compare
+its logits against the full-sequence forward. Exercises full KV caches,
+window ring buffers, MLA latent caches and all recurrent states.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.models import init_model, transformer
+from repro.models import whisper as wmod
+
+S = 24
+TOL = 2e-3
+
+
+@pytest.mark.parametrize("name", list(ARCH_IDS))
+def test_decode_matches_full_forward(name):
+    cfg = get_smoke_config(name)
+    params = init_model(jax.random.PRNGKey(1), cfg)
+    B = 2
+    if cfg.arch_type == "audio":
+        frames = (
+            jax.random.normal(jax.random.PRNGKey(2), (B, cfg.encoder.num_frames, cfg.d_model)) * 0.1
+        )
+        toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab_size)
+        full_logits, _, _ = wmod.whisper_forward(params, cfg, frames, toks)
+        enc = wmod.encode(params, cfg, frames)
+        cache = wmod.init_whisper_cache(cfg, B, S + 8, enc)
+        pos = jnp.broadcast_to(jnp.arange(S - 1)[None], (B, S - 1))
+        _, cache, _ = wmod.whisper_forward(
+            params, cfg, None, toks[:, : S - 1], cache=cache, positions=pos
+        )
+        dec_logits, _, _ = wmod.whisper_forward(
+            params, cfg, None, toks[:, S - 1 : S], cache=cache,
+            positions=jnp.full((B, 1), S - 1),
+        )
+        err = float(jnp.max(jnp.abs(dec_logits[:, 0] - full_logits[:, -1])))
+    else:
+        toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab_size)
+        img = None
+        if cfg.arch_type == "vlm":
+            img = (
+                jax.random.normal(
+                    jax.random.PRNGKey(4), (B, cfg.vision.num_patches, cfg.d_model)
+                ) * 0.1
+            )
+        full_logits, _, _ = transformer.forward(params, cfg, toks, image_embeds=img)
+        total = S + (cfg.vision.num_patches if img is not None else 0)
+        cache = transformer.init_cache(cfg, B, total + 8)
+        pos = jnp.broadcast_to(jnp.arange(total - 1)[None], (B, total - 1))
+        _, cache, _ = transformer.forward(
+            params, cfg, toks[:, : S - 1], image_embeds=img, cache=cache, positions=pos
+        )
+        dec_logits, _, _ = transformer.forward(
+            params, cfg, toks[:, S - 1 : S], cache=cache,
+            positions=jnp.full((B, 1), total - 1),
+        )
+        err = float(jnp.max(jnp.abs(dec_logits[:, 0] - full_logits[:, -1])))
+    assert err < TOL, f"{name}: decode/full mismatch {err}"
+
+
+def test_long_context_window_decode():
+    """Sub-quadratic decode: window ring caches must match the window-masked
+    full forward once the context exceeds the window."""
+    import dataclasses
+
+    cfg = dataclasses.replace(
+        get_smoke_config("qwen3-0.6b"), long_context_window=8
+    )
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 1, 20
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, S), 0, cfg.vocab_size)
+    full_logits, _, _ = transformer.forward(
+        params, cfg, toks, window_override=cfg.long_context_window
+    )
+    cache = transformer.init_cache(cfg, B, S + 4, long_context=True)
+    pos = jnp.broadcast_to(jnp.arange(S - 1)[None], (B, S - 1))
+    _, cache, _ = transformer.forward(
+        params, cfg, toks[:, : S - 1], cache=cache, positions=pos,
+        window_override=cfg.long_context_window,
+    )
+    dec_logits, _, _ = transformer.forward(
+        params, cfg, toks[:, S - 1 :], cache=cache,
+        positions=jnp.full((B, 1), S - 1),
+        window_override=cfg.long_context_window,
+    )
+    err = float(jnp.max(jnp.abs(dec_logits[:, 0] - full_logits[:, -1])))
+    assert err < TOL

@@ -1,0 +1,102 @@
+"""Unit tests for the dry-run / roofline tooling (HLO parsing, flops model).
+
+These import ``parse_collectives`` via a fresh module object so the
+XLA_FLAGS side effect of repro.launch.dryrun never touches this process.
+"""
+
+import importlib.util
+import os
+import sys
+import types
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _load_parse_collectives():
+    """Extract parse_collectives without importing the dryrun module
+    (which sets XLA_FLAGS at import)."""
+    path = os.path.join(SRC, "repro", "launch", "dryrun.py")
+    text = open(path).read()
+    # cut everything after the function we need, drop the os.environ line
+    ns: dict = {}
+    import re as _re
+
+    exec("import re", ns)
+    start = text.index("_COLLECTIVE_RE")
+    end = text.index("def scan_trip_count")
+    exec(text[start:end], ns)
+    return ns["parse_collectives"]
+
+
+parse_collectives = _load_parse_collectives()
+
+
+HLO = """
+HloModule test
+
+%body.1 (arg: (f32[16,128], s32[])) -> (f32[16,128], s32[]) {
+  %ar1 = bf16[16,512]{1,0} all-reduce(%x), replica_groups={}
+  %cp = f32[4,64]{1,0} collective-permute(%y), source_target_pairs={{0,1}}
+  ROOT %t = tuple()
+}
+
+ENTRY %main (p0: f32[8,8]) -> f32[8,8] {
+  %w = while(...), condition=%cond.1, body=%body.1
+  %ag = f32[32,256]{1,0} all-gather(%p0), dimensions={0}
+  %a2a = bf16[8,128]{1,0} all-to-all(%p0), dimensions={0}
+  ROOT %r = f32[8,8] add(%p0, %p0)
+}
+"""
+
+
+def test_parse_collectives_loop_weighting():
+    out = parse_collectives(HLO, scan_trip=10)
+    # in-body ops weighted x10
+    assert out["all-reduce"] == 16 * 512 * 2 * 10
+    assert out["collective-permute"] == 4 * 64 * 4 * 10
+    # entry ops counted once
+    assert out["all-gather"] == 32 * 256 * 4
+    assert out["all-to-all"] == 8 * 128 * 2
+    assert out["total_bytes"] == sum(
+        v for k, v in out.items() if k != "total_bytes"
+    )
+
+
+def test_parse_collectives_no_collectives():
+    out = parse_collectives("ENTRY %m () -> f32[1] { ROOT %c = f32[1] constant(0) }", 5)
+    assert out["total_bytes"] == 0
+
+
+def test_analytic_flops_scaling():
+    from repro.launch.roofline import analytic_flops, param_counts
+
+    # train flops scale ~linearly in tokens; decode ~linearly in batch
+    f_train = analytic_flops("qwen3-0.6b", "train_4k")
+    f_prefill = analytic_flops("qwen3-0.6b", "prefill_32k")
+    f_decode = analytic_flops("qwen3-0.6b", "decode_32k")
+    assert f_train > f_prefill > f_decode > 0
+    total, active = param_counts("qwen3-0.6b")
+    assert total == active  # dense
+    t_moe, a_moe = param_counts("qwen3-moe-30b-a3b")
+    assert a_moe < t_moe / 3  # 8 of 128 experts active
+    # scale sanity: 30B-class total
+    assert 25e9 < t_moe < 36e9
+
+
+def test_roofline_row_structure():
+    from repro.launch.roofline import roofline_row
+
+    rec = {
+        "status": "ok", "arch": "qwen3-0.6b", "shape": "train_4k",
+        "mesh": "16x16", "mode": "dsgd", "scan_trip": 28,
+        "memory": {"temp_bytes": 2**30, "argument_bytes": 2**28, "output_bytes": 0},
+        "cost": {"flops_per_device_hlo": 1e12, "bytes_accessed_hlo": 1e11},
+        "collectives": {"total_bytes": 5e9},
+    }
+    row = roofline_row(rec)
+    assert row["dominant"] in ("compute", "memory", "collective")
+    assert row["compute_s"] > 0 and row["collective_s"] == 5e9 / 50e9
+    assert "advice" in row and len(row["advice"]) > 10

@@ -1,0 +1,81 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as T
+from repro.core.dsgd import dsgd_init, dsgd_step_stacked
+from repro.core.mixing import mix_dense, schedule_from_matrix
+from repro.core.stl_fw import learn_topology
+from repro.core.mixing import schedule_from_result
+
+
+def test_dsgd_step_matches_manual():
+    n, d = 6, 5
+    rng = np.random.default_rng(0)
+    theta = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    grads = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    W = jnp.asarray(T.ring(n), jnp.float32)
+    lr = 0.1
+    state = dsgd_init(theta)
+    new, _ = dsgd_step_stacked(theta, grads, state, W, lr)
+    manual = np.asarray(W) @ (np.asarray(theta) - lr * np.asarray(grads))
+    assert np.allclose(np.asarray(new), manual, atol=1e-6)
+
+
+def test_mixing_preserves_average():
+    """Doubly-stochastic mixing preserves the node average (Property 1)."""
+    n = 8
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(n, 4, 3)), jnp.float32)
+    for W in (T.ring(n), T.random_d_regular(n, 3, seed=0), T.complete(n)):
+        mixed = mix_dense(x, jnp.asarray(W, jnp.float32))
+        assert np.allclose(
+            np.asarray(mixed).mean(0), np.asarray(x).mean(0), atol=1e-5
+        )
+
+
+def test_consensus_contraction():
+    """||Theta W^T - Theta_bar||_F^2 <= (1-p) ||Theta - Theta_bar||_F^2."""
+    n = 10
+    rng = np.random.default_rng(2)
+    X = rng.normal(size=(n, 7))
+    for W in (T.ring(n), T.random_d_regular(n, 3, seed=1)):
+        p = T.mixing_parameter(W)
+        before = np.linalg.norm(X - X.mean(0), "fro") ** 2
+        after = np.linalg.norm(W @ X - X.mean(0), "fro") ** 2
+        assert after <= (1 - p) * before + 1e-9
+
+
+def test_kernel_mixing_matches_einsum():
+    n, d = 8, 300
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    W = jnp.asarray(T.ring(n), jnp.float32)
+    a = mix_dense({"w": x}, W, use_kernel=False)["w"]
+    b = mix_dense({"w": x}, W, use_kernel=True)["w"]
+    assert np.allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 16), st.integers(0, 100))
+def test_birkhoff_decomposition_reconstructs(n, seed):
+    rng = np.random.default_rng(seed)
+    # random doubly-stochastic matrix by Sinkhorn
+    M = rng.random((n, n)) + 0.05
+    for _ in range(300):
+        M /= M.sum(1, keepdims=True)
+        M /= M.sum(0, keepdims=True)
+    sched = schedule_from_matrix(M)
+    assert np.allclose(sched.to_matrix(), M, atol=1e-3)
+
+
+def test_schedule_from_stl_fw_result():
+    Pi = np.zeros((10, 5))
+    Pi[np.arange(10), np.arange(10) % 5] = 1.0
+    res = learn_topology(Pi, budget=4, lam=0.2)
+    sched = schedule_from_result(res)
+    assert np.allclose(sched.to_matrix(), res.W, atol=1e-9)
+    # communication atoms bounded by budget
+    assert sched.n_communication_atoms <= 4

@@ -1,0 +1,101 @@
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+from repro.core.heterogeneity import (
+    classes_in_neighborhood,
+    label_skew_bias,
+    local_heterogeneity,
+    neighborhood_bias,
+    neighborhood_heterogeneity_mc,
+    prop3_bounds,
+    tau_bar_label_skew,
+    tau_from_prop1,
+    variance_term,
+)
+from repro.data.synthetic import mean_estimation_clusters
+
+
+def test_example1_exact_values():
+    """Paper Example 1 / Appendix A: alternating ring on two clusters."""
+    n, m, sig2 = 20, 7.0, 1.0
+    W = T.alternating_ring(n)
+    mu = np.array([m if i % 2 == 0 else -m for i in range(n)])
+    G = (2.0 * (0.0 - mu))[:, None]  # expected grads at theta=0
+
+    # neighborhood bias is exactly 0 (each neighborhood averages to 0)
+    assert neighborhood_bias(W, G) == pytest.approx(0.0, abs=1e-12)
+    # zeta_bar^2 = 4 m^2 (grows with heterogeneity)
+    assert local_heterogeneity(G) == pytest.approx(4 * m**2)
+
+    # H(theta) <= 4 sigma~^2 = tau_bar^2, independent of m (Appendix A)
+    def sampler(rng):
+        z = rng.normal(mu, np.sqrt(sig2))
+        return (2.0 * (0.0 - z))[:, None]
+
+    H = neighborhood_heterogeneity_mc(W, sampler, n_samples=2000, seed=0)
+    assert H <= 4 * sig2 + 0.2
+    # exact value: 4 sigma~^2 * (1/n)||W - 11^T/n||_F^2
+    exact = 4 * sig2 * np.linalg.norm(W - np.ones((n, n)) / n, "fro") ** 2 / n
+    assert H == pytest.approx(exact, rel=0.1)
+
+
+def test_prop1_dominates_mc():
+    """tau^2 = (1-p)(zeta^2 + sigma^2) upper bounds measured H(theta)."""
+    n, m, sig2 = 12, 3.0, 0.5
+    W = T.random_d_regular(n, 3, seed=0)
+    task = mean_estimation_clusters(n_nodes=n, K=4, m=m, sigma_tilde2=sig2)
+    mu = task.node_means
+
+    def sampler(rng):
+        z = rng.normal(mu, np.sqrt(sig2))
+        return (2.0 * (1.0 - z))[:, None]  # theta = 1
+
+    H = neighborhood_heterogeneity_mc(W, sampler, n_samples=3000, seed=1)
+    G = task.expected_grads(1.0)
+    zeta2 = local_heterogeneity(G)
+    p = T.mixing_parameter(W)
+    bound = tau_from_prop1(p, zeta2, task.sigma_i2)
+    assert H <= bound + 1e-6
+
+
+def test_prop2_closed_form_dominates_mc():
+    """Proposition 2's label-skew tau_bar^2 upper bounds measured H."""
+    task = mean_estimation_clusters(n_nodes=20, K=5, m=4.0, sigma_tilde2=1.0)
+    W = T.random_d_regular(20, 4, seed=3)
+    theta = 0.5
+
+    def sampler(rng):
+        z = rng.normal(task.node_means, 1.0)
+        return (2.0 * (theta - z))[:, None]
+
+    H = neighborhood_heterogeneity_mc(W, sampler, n_samples=3000, seed=2)
+    tau2 = tau_bar_label_skew(W, task.Pi, B=task.B, sigma_max2=task.sigma_i2)
+    assert H <= tau2 + 1e-6
+
+
+def test_variance_term_complete_graph_zero():
+    assert variance_term(T.complete(10), 5.0) == pytest.approx(0.0, abs=1e-12)
+
+
+def test_prop3_sandwich():
+    for W in (T.ring(10), T.random_d_regular(12, 3, seed=1), T.complete(8)):
+        lo, val, hi = prop3_bounds(W)
+        assert lo - 1e-9 <= val <= hi + 1e-9
+
+
+def test_classes_in_neighborhood():
+    n, K = 20, 10
+    Pi = np.zeros((n, K))
+    Pi[np.arange(n), np.arange(n) % K] = 1.0
+    W = T.alternating_ring(n)
+    counts = classes_in_neighborhood(W, Pi)
+    # ring over alternating 10-class layout: self + 2 neighbors = 3 classes
+    assert np.all(counts == 3)
+
+
+def test_label_skew_bias_zero_for_iid():
+    n, K = 16, 4
+    Pi = np.full((n, K), 1.0 / K)
+    for W in (T.ring(n), T.random_d_regular(n, 3, seed=0)):
+        assert label_skew_bias(W, Pi) == pytest.approx(0.0, abs=1e-15)

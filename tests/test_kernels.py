@@ -1,0 +1,114 @@
+"""Per-kernel allclose suites against the pure-jnp oracles (interpret mode).
+
+Shape/dtype sweeps as required: parametrized grids + hypothesis-driven
+random shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.gossip_mix import gossip_mix, gossip_mix_ref
+
+
+# ---------------------------------------------------------------------------
+# gossip_mix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [2, 8, 16, 32])
+@pytest.mark.parametrize("P", [2048, 4096])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gossip_mix_grid(n, P, dtype):
+    rng = np.random.default_rng(n * P)
+    theta = jnp.asarray(rng.normal(size=(n, P)), dtype)
+    W = np.abs(rng.normal(size=(n, n)))
+    W = jnp.asarray(W / W.sum(1, keepdims=True), dtype)
+    out = gossip_mix(theta, W)
+    ref = gossip_mix_ref(theta, W)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    assert out.dtype == theta.dtype
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 12), st.integers(10, 5000), st.integers(0, 99))
+def test_gossip_mix_hypothesis(n, P, seed):
+    rng = np.random.default_rng(seed)
+    theta = jnp.asarray(rng.normal(size=(n, P)), jnp.float32)
+    W = np.abs(rng.normal(size=(n, n))) + 0.01
+    W = jnp.asarray(W / W.sum(1, keepdims=True), jnp.float32)
+    out = gossip_mix(theta, W)
+    ref = gossip_mix_ref(theta, W)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_gossip_mix_identity():
+    theta = jnp.asarray(np.random.default_rng(0).normal(size=(4, 2048)), jnp.float32)
+    out = gossip_mix(theta, jnp.eye(4))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(theta), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+CASES = [
+    # (B, S, H, Hkv, D, window, softcap)
+    (1, 128, 2, 2, 64, None, 0.0),
+    (2, 256, 4, 2, 64, None, 0.0),
+    (1, 256, 4, 1, 128, None, 0.0),   # MQA
+    (1, 256, 4, 4, 32, 64, 0.0),      # sliding window, padded head dim
+    (1, 384, 2, 2, 128, None, 50.0),  # softcap (gemma2)
+    (1, 128, 8, 4, 256, 128, 0.0),    # gemma-style 256 head dim + window
+    (2, 512, 4, 2, 64, 100, 30.0),    # window + softcap + odd window
+]
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,D,window,softcap", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_vs_ref(B, S, H, Hkv, D, window, softcap, dtype):
+    rng = np.random.default_rng(hash((B, S, H, D)) % 2**31)
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), dtype)
+    out = flash_attention(q, k, v, causal=True, window=window, softcap=softcap)
+    ref = flash_attention_ref(q, k, v, causal=True, window=window, softcap=softcap)
+    tol = 2e-3 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    st.integers(1, 2),
+    st.sampled_from([128, 256]),
+    st.sampled_from([(2, 1), (2, 2), (4, 2)]),
+    st.sampled_from([32, 64, 128]),
+    st.integers(0, 999),
+)
+def test_flash_attention_hypothesis(B, S, heads, D, seed):
+    H, Hkv = heads
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    out = flash_attention(q, k, v, causal=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-3, rtol=2e-3)
+
+
+def test_flash_attention_small_seq_fallback():
+    # S < block_q routes to the reference path; result must still be exact
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 16, 2, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 16, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 16, 2, 64)), jnp.float32)
+    out = flash_attention(q, k, v)
+    ref = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)

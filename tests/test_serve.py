@@ -1,0 +1,69 @@
+"""Serving engine: greedy generation across architecture families."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import init_model
+from repro.serve.engine import decode_step, generate, prefill
+
+
+@pytest.mark.parametrize("name", ["qwen3-0.6b", "gemma2-2b", "xlstm-350m",
+                                  "recurrentgemma-2b", "deepseek-v2-236b"])
+def test_generate_shapes(name):
+    cfg = get_smoke_config(name)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
+    out = generate(params, cfg, prompt, max_new_tokens=5)
+    assert out.shape == (2, 5)
+    assert bool(jnp.all((out >= 0) & (out < cfg.vocab_size)))
+
+
+def test_generate_vlm_with_image():
+    cfg = get_smoke_config("llava-next-mistral-7b")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 6), 0, cfg.vocab_size)
+    img = jax.random.normal(jax.random.PRNGKey(2), (1, cfg.vision.num_patches, cfg.d_model)) * 0.1
+    out = generate(params, cfg, prompt, max_new_tokens=4, image_embeds=img)
+    assert out.shape == (1, 4)
+
+
+def test_generate_audio():
+    cfg = get_smoke_config("whisper-small")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0, cfg.vocab_size)
+    frames = jax.random.normal(jax.random.PRNGKey(2), (2, cfg.encoder.num_frames, cfg.d_model)) * 0.1
+    out = generate(params, cfg, prompt, max_new_tokens=4, frames=frames)
+    assert out.shape == (2, 4)
+
+
+def test_greedy_generation_matches_stepwise_full_forward():
+    """The cached decode trajectory equals argmax over repeated full
+    forwards (the gold reference for cache correctness)."""
+    from repro.models import transformer
+
+    cfg = get_smoke_config("gemma2-2b")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (1, 6), 0, cfg.vocab_size)
+    n_new = 5
+    out_engine = generate(params, cfg, prompt, max_new_tokens=n_new)
+
+    toks = prompt
+    ref = []
+    for _ in range(n_new):
+        logits, _, _ = transformer.forward(params, cfg, toks)
+        nxt = jnp.argmax(logits[:, -1], -1)[:, None]
+        ref.append(nxt)
+        toks = jnp.concatenate([toks, nxt], axis=1)
+    ref = jnp.concatenate(ref, axis=1)
+    np.testing.assert_array_equal(np.asarray(out_engine), np.asarray(ref))
+
+
+def test_long_context_generation_runs():
+    cfg = get_smoke_config("recurrentgemma-2b")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0, cfg.vocab_size)
+    out = generate(params, cfg, prompt, max_new_tokens=4, long_context=True)
+    assert out.shape == (1, 4)

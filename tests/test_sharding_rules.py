@@ -1,0 +1,92 @@
+"""Partition-rule unit tests (incl. the stage-axis regression that caused
+DeepSeek's 16x replication -- EXPERIMENTS.md §Perf pair B bring-up)."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.train.sharding import make_param_specs, sanitize_spec, tp_spec_for_path
+
+
+class FakeMesh:
+    shape = {"data": 16, "model": 16}
+
+
+MESH = FakeMesh()
+
+
+def test_sanitize_drops_nondivisible():
+    spec = sanitize_spec(P("model", None), (60, 128), MESH)
+    assert spec == P(None, None)  # 60 % 16 != 0
+    spec = sanitize_spec(P("model", "data"), (64, 32), MESH)
+    assert spec == P("model", "data")
+
+
+def test_col_and_row_parallel_rules():
+    assert tp_spec_for_path("['attn']['wq']", (1024, 2048)) == P(None, "model")
+    assert tp_spec_for_path("['attn']['wo']", (2048, 1024)) == P("model", None)
+    assert tp_spec_for_path("['mlp']['w_down']", (8192, 1024)) == P("model", None)
+    assert tp_spec_for_path("['mlp']['w_gate']", (1024, 8192)) == P(None, "model")
+
+
+def test_expert_rule_with_fsdp():
+    spec = tp_spec_for_path("['mlp']['routed']['w_gate']", (160, 5120, 1536), fsdp_axis="data")
+    assert spec == P("model", "data", None)
+
+
+def test_vocab_rules():
+    assert tp_spec_for_path("['embed']['table']", (151936, 1024)) == P("model", None)
+    assert tp_spec_for_path("['embed']['unembed']", (1024, 151936)) == P(None, "model")
+
+
+def test_stage_axis_prefix_regression():
+    """Stage-stacked leaves must get a leading None for the group axis --
+    without it the expert/TP axes shift onto the wrong dims (the DeepSeek
+    16x replication bug)."""
+    import jax.numpy as jnp
+
+    params = {
+        "stages": [{
+            "attn": {"wq": jax.ShapeDtypeStruct((60, 5120, 16384), jnp.bfloat16)},
+            "mlp": {"routed": {"w_gate": jax.ShapeDtypeStruct((60, 160, 5120, 1536), jnp.bfloat16)}},
+        }],
+        "embed": {"table": jax.ShapeDtypeStruct((102400, 5120), jnp.bfloat16)},
+    }
+    specs = make_param_specs(params, MESH, node_axis=None, fsdp_axis="data")
+    wq = specs["stages"][0]["attn"]["wq"]
+    routed = specs["stages"][0]["mlp"]["routed"]["w_gate"]
+    table = specs["embed"]["table"]
+    assert wq == P(None, "data", "model")  # group axis untouched
+    assert routed == P(None, "model", "data", None)  # experts over model!
+    assert table == P("model", "data")
+
+
+def test_node_axis_prepended():
+    import jax.numpy as jnp
+
+    params = {"stages": [{"attn": {"wq": jax.ShapeDtypeStruct((16, 28, 1024, 2048), jnp.bfloat16)}}]}
+    specs = make_param_specs(params, MESH, node_axis="data", fsdp_axis=None)
+    assert specs["stages"][0]["attn"]["wq"] == P("data", None, None, "model")
+
+
+def test_every_arch_has_no_unsharded_giant_leaf():
+    """No parameter > 64 MB may stay fully replicated under TP specs."""
+    from repro.configs import ARCH_IDS, get_config
+    from repro.models import registry
+
+    for name in ARCH_IDS:
+        cfg = get_config(name)
+        abstract = jax.eval_shape(
+            lambda r: registry.init_model(r, cfg), jax.random.PRNGKey(0)
+        )
+        specs = make_param_specs(abstract, MESH, node_axis=None, fsdp_axis=None)
+        leaves = jax.tree_util.tree_flatten_with_path(abstract)[0]
+        spec_leaves = jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, P)
+        )[0]
+        for (path, leaf), (_, spec) in zip(leaves, spec_leaves):
+            size = int(np.prod(leaf.shape)) * 2
+            sharded = any(e is not None for e in spec)
+            if size > 64 * 2**20:
+                assert sharded, (name, jax.tree_util.keystr(path), leaf.shape)

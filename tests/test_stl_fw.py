@@ -1,0 +1,125 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as T
+from repro.core.assignment import (
+    assignment_to_permutation,
+    hungarian,
+    linear_assignment,
+)
+from repro.core.stl_fw import (
+    fw_upper_bound,
+    learn_topology,
+    line_search_gamma,
+    stl_fw_gradient,
+    stl_fw_objective,
+)
+
+
+def one_hot_pi(n, K):
+    Pi = np.zeros((n, K))
+    Pi[np.arange(n), np.arange(n) % K] = 1.0
+    return Pi
+
+
+def random_pi(n, K, seed):
+    rng = np.random.default_rng(seed)
+    Pi = rng.dirichlet(0.3 * np.ones(K), size=n)
+    return Pi
+
+
+# ---------------------------------------------------------------------------
+# assignment / LMO
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 12), st.integers(0, 10_000))
+def test_hungarian_matches_scipy(n, seed):
+    rng = np.random.default_rng(seed)
+    cost = rng.normal(size=(n, n))
+    ours = hungarian(cost)
+    ref = linear_assignment(cost)  # scipy when available
+    assert cost[np.arange(n), ours].sum() == pytest.approx(
+        cost[np.arange(n), ref].sum(), abs=1e-9
+    )
+
+
+def test_assignment_to_permutation():
+    perm = np.array([2, 0, 1])
+    P = assignment_to_permutation(perm)
+    assert P.sum() == 3 and np.all(P.sum(0) == 1) and np.all(P.sum(1) == 1)
+    assert P[0, 2] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# objective / gradient / line search
+# ---------------------------------------------------------------------------
+
+def test_gradient_matches_finite_differences():
+    rng = np.random.default_rng(0)
+    n, K, lam = 6, 3, 0.7
+    Pi = random_pi(n, K, 1)
+    W = T.ring(n)
+    G = stl_fw_gradient(W, Pi, lam)
+    eps = 1e-6
+    for _ in range(10):
+        i, j = rng.integers(0, n, 2)
+        Wp = W.copy()
+        Wp[i, j] += eps
+        num = (stl_fw_objective(Wp, Pi, lam) - stl_fw_objective(W, Pi, lam)) / eps
+        assert num == pytest.approx(G[i, j], rel=1e-3, abs=1e-5)
+
+
+def test_line_search_is_minimizer():
+    n, K, lam = 8, 4, 0.3
+    Pi = random_pi(n, K, 2)
+    W = np.eye(n)
+    grad = stl_fw_gradient(W, Pi, lam)
+    from repro.core.assignment import solve_lmo
+
+    P, _ = solve_lmo(grad)
+    g_star = line_search_gamma(W, P, Pi, lam)
+    obj = lambda g: stl_fw_objective((1 - g) * W + g * P, Pi, lam)
+    for g in np.linspace(0, 1, 21):
+        assert obj(g_star) <= obj(float(g)) + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# full algorithm (Theorem 2 properties)
+# ---------------------------------------------------------------------------
+
+def test_learn_topology_paper_setup():
+    """Section 6.1: K=10 one-class nodes; elbow at l = K-1 = 9, zero bias."""
+    Pi = one_hot_pi(100, 10)
+    res = learn_topology(Pi, budget=9, lam=0.5)
+    # monotone decrease
+    assert np.all(np.diff(res.objective_trace) <= 1e-12)
+    # bias eliminated at l = K - 1
+    assert res.bias_trace[-1] < 1e-20
+    # degree bound d_max <= l (Theorem 2)
+    assert T.max_degree(res.W) <= 9
+    assert T.is_doubly_stochastic(res.W)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(6, 30), st.integers(2, 6), st.integers(0, 1000))
+def test_fw_invariants_random_pi(n, K, seed):
+    Pi = random_pi(n, K, seed)
+    budget = min(5, n - 1)
+    lam = 0.2
+    res = learn_topology(Pi, budget=budget, lam=lam)
+    assert T.is_doubly_stochastic(res.W)
+    assert T.max_degree(res.W) <= budget
+    # Theorem 2 bound at every iterate
+    for l in range(1, budget + 1):
+        assert res.objective_trace[l] <= fw_upper_bound(l, lam, Pi) + 1e-9
+    # Birkhoff decomposition reconstructs W exactly
+    assert np.allclose(res.rebuild_W(), res.W, atol=1e-9)
+    assert res.coeffs.sum() == pytest.approx(1.0)
+
+
+def test_complete_graph_is_global_optimum():
+    Pi = random_pi(12, 4, 3)
+    for lam in (0.1, 1.0):
+        assert stl_fw_objective(T.complete(12), Pi, lam) == pytest.approx(0.0, abs=1e-12)

@@ -1,0 +1,75 @@
+"""End-to-end behaviour tests for the paper's system.
+
+Full pipeline: heterogeneous data -> Pi -> STL-FW topology -> Birkhoff
+schedule -> D-SGD training -> evaluation, plus the theory cross-checks that
+tie the measured behaviour back to Theorem 1.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import learn_topology, schedule_from_result, topology as T
+from repro.core.heterogeneity import label_skew_bias, tau_bar_label_skew
+from repro.core.theory import RateInputs, error_bound_convex
+from repro.data.partition import shard_partition
+from repro.data.synthetic import gaussian_blobs, mean_estimation_clusters
+from repro.train.trainer import run_classification, run_mean_estimation
+
+
+def test_full_pipeline_classification():
+    """Data -> partition -> Pi -> STL-FW -> D-SGD -> accuracy."""
+    n = 30
+    X, y = gaussian_blobs(n_samples=4000, num_classes=10, dim=32, sep=3.0, seed=0)
+    idx, Pi = shard_partition(y, n, shards_per_node=2, seed=0)
+    res = learn_topology(Pi, budget=9, lam=0.1)
+    assert T.max_degree(res.W) <= 9
+
+    # the learned topology's neighborhoods must cover classes better than a
+    # random graph of the same budget
+    Wr = T.random_d_regular(n, 9, seed=0)
+    assert label_skew_bias(res.W, Pi) < label_skew_bias(Wr, Pi)
+
+    log = run_classification(
+        X, y, idx, res.W, steps=100, batch_size=32, lr=0.5,
+        eval_every=99, X_test=X[:600], y_test=y[:600],
+    )
+    final = [r for r in log.history if "acc_mean" in r][-1]
+    assert final["acc_mean"] > 0.7
+
+
+def test_theory_error_bound_dominates_measurement():
+    """Lemma 4's anytime bound must upper-bound the measured D-SGD error
+    (mean estimation task where all constants are exact)."""
+    n, K, m = 20, 4, 2.0
+    task = mean_estimation_clusters(n_nodes=n, K=K, m=m)
+    res = learn_topology(task.Pi, budget=6, lam=0.5)
+    W = res.W
+    p = T.mixing_parameter(W)
+    tau2 = tau_bar_label_skew(W, task.Pi, B=task.B, sigma_max2=task.sigma_i2)
+
+    steps = 50
+    out = run_mean_estimation(task, W, steps=steps, lr=0.05, seed=0)
+    # measured average suboptimality f(theta_bar) - f*:
+    # for F = (theta - z)^2, f(t) - f* = (t - theta*)^2
+    measured = float(np.mean(out["mean_sq_error"]))
+
+    c = RateInputs(
+        L=task.L, sigma_bar2=task.sigma_i2, tau_bar2=tau2, p=p, n=n,
+        r0=task.theta_star**2 + float(np.mean(task.node_means**2)),
+    )
+    bound = error_bound_convex(c, steps)
+    assert measured <= bound + 1e-6
+
+
+def test_birkhoff_schedule_roundtrip_system():
+    """Learned topology -> schedule -> matrix roundtrip, and the schedule's
+    communication cost (atoms) stays within the budget."""
+    task = mean_estimation_clusters(n_nodes=16, K=4, m=3.0)
+    res = learn_topology(task.Pi, budget=4, lam=0.3)
+    sched = schedule_from_result(res)
+    assert np.allclose(sched.to_matrix(), res.W, atol=1e-9)
+    assert sched.n_communication_atoms <= 4
+    # running D-SGD with the schedule-reconstructed matrix is identical
+    out_a = run_mean_estimation(task, res.W, steps=15, lr=0.2, seed=0)
+    out_b = run_mean_estimation(task, sched.to_matrix(), steps=15, lr=0.2, seed=0)
+    np.testing.assert_allclose(out_a["theta"], out_b["theta"], atol=1e-6)

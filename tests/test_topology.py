@@ -1,0 +1,78 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as T
+from repro.core.dcliques import d_cliques
+
+
+ALL_TOPOLOGIES = [
+    ("complete", lambda: T.complete(12)),
+    ("ring", lambda: T.ring(12)),
+    ("alternating_ring", lambda: T.alternating_ring(12)),
+    ("random_3_regular", lambda: T.random_d_regular(12, 3, seed=0)),
+    ("random_9_regular", lambda: T.random_d_regular(100, 9, seed=1)),
+    ("exponential", lambda: T.exponential_graph(100)),
+    ("exponential_directed", lambda: T.exponential_graph(16, undirected=False)),
+    ("star", lambda: T.star(9)),
+    ("torus", lambda: T.torus(3, 4)),
+    ("disconnected", lambda: T.disconnected(7)),
+]
+
+
+@pytest.mark.parametrize("name,builder", ALL_TOPOLOGIES)
+def test_doubly_stochastic(name, builder):
+    W = builder()
+    assert T.is_doubly_stochastic(W), name
+
+
+def test_mixing_parameter_extremes():
+    assert T.mixing_parameter(T.complete(8)) == pytest.approx(1.0)
+    assert T.mixing_parameter(T.disconnected(8)) == pytest.approx(0.0)
+    p_ring = T.mixing_parameter(T.ring(8))
+    assert 0.0 < p_ring < 1.0
+
+
+def test_exponential_graph_degree_n100():
+    # Ying et al. undirected construction at n=100 -> d_max = 14 (paper Sec 6)
+    W = T.exponential_graph(100)
+    assert T.max_degree(W) == 14
+
+
+def test_degrees():
+    W = T.random_d_regular(20, 5, seed=2)
+    assert np.all(T.in_degrees(W) == 5)
+    assert np.all(T.out_degrees(W) == 5)
+    assert T.max_degree(W) == 5
+
+
+def test_self_loop_lazy():
+    W = T.ring(10)
+    L = T.self_loop_lazy(W, 0.5)
+    assert T.is_doubly_stochastic(L)
+    assert T.mixing_parameter(L) <= T.mixing_parameter(W) + 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(4, 24), st.integers(0, 10_000))
+def test_metropolis_hastings_random_graphs(n, seed):
+    rng = np.random.default_rng(seed)
+    A = rng.random((n, n)) < 0.4
+    A = A | A.T
+    np.fill_diagonal(A, False)
+    W = T.metropolis_hastings(A)
+    assert T.is_doubly_stochastic(W)
+    assert np.allclose(W, W.T)
+
+
+def test_dcliques_doubly_stochastic_and_low_bias():
+    n, K = 40, 10
+    Pi = np.zeros((n, K))
+    Pi[np.arange(n), np.arange(n) % K] = 1.0
+    W = d_cliques(Pi, clique_size=K, seed=0)
+    assert T.is_doubly_stochastic(W)
+    from repro.core.heterogeneity import label_skew_bias
+
+    # cliques cover all classes -> bias far below a random regular graph
+    Wr = T.random_d_regular(n, K - 1, seed=0)
+    assert label_skew_bias(W, Pi) < label_skew_bias(Wr, Pi)

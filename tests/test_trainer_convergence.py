@@ -1,0 +1,61 @@
+"""System behaviour: D-SGD converges, topology ranking matches the paper."""
+
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+from repro.core.stl_fw import learn_topology
+from repro.data.partition import cluster_partition, shard_partition
+from repro.data.synthetic import gaussian_blobs, mean_estimation_clusters
+from repro.train.trainer import run_classification, run_mean_estimation
+
+
+def test_mean_estimation_converges_on_complete_graph():
+    task = mean_estimation_clusters(n_nodes=20, K=4, m=2.0)
+    out = run_mean_estimation(task, T.complete(20), steps=80, lr=0.2, seed=0)
+    assert out["mean_sq_error"][-1] < 0.05
+
+
+def test_stl_fw_beats_random_under_heterogeneity():
+    """Fig 1(b,c): same budget, STL-FW converges much closer to theta*."""
+    task = mean_estimation_clusters(n_nodes=40, K=10, m=5.0)
+    res = learn_topology(task.Pi, budget=9, lam=0.5)
+    Wr = T.random_d_regular(40, 9, seed=0)
+    out_stl = run_mean_estimation(task, res.W, steps=60, lr=0.2, seed=0)
+    out_rnd = run_mean_estimation(task, Wr, steps=60, lr=0.2, seed=0)
+    assert out_stl["mean_sq_error"][-1] < 0.5 * out_rnd["mean_sq_error"][-1]
+
+
+def test_stl_fw_insensitive_to_heterogeneity_at_full_budget():
+    """With d_max = K-1, STL-FW's error must not grow with m."""
+    errs = []
+    for m in (0.0, 10.0):
+        task = mean_estimation_clusters(n_nodes=40, K=10, m=m)
+        res = learn_topology(task.Pi, budget=9, lam=0.5)
+        out = run_mean_estimation(task, res.W, steps=60, lr=0.2, seed=0)
+        errs.append(out["mean_sq_error"][-1])
+    assert errs[1] < 3.0 * max(errs[0], 1e-3)
+
+
+def test_classification_accuracy_improves():
+    X, y = gaussian_blobs(n_samples=3000, num_classes=10, dim=32, seed=1)
+    idx, Pi = shard_partition(y, 20, seed=0)
+    res = learn_topology(Pi, budget=5, lam=0.1)
+    log = run_classification(
+        X, y, idx, res.W, steps=80, batch_size=32, lr=0.5,
+        eval_every=79, X_test=X[:500], y_test=y[:500],
+    )
+    final = [r for r in log.history if "acc_mean" in r][-1]
+    assert final["acc_mean"] > 0.6
+    # consensus should be finite and small-ish relative to param scale
+    assert np.isfinite(final["consensus"])
+
+
+def test_kernel_transport_equals_einsum_training():
+    """D-SGD trained through the Pallas gossip kernel matches the einsum
+    transport trajectory."""
+    task = mean_estimation_clusters(n_nodes=8, K=4, m=2.0)
+    W = T.ring(8)
+    a = run_mean_estimation(task, W, steps=10, lr=0.2, seed=0, use_kernel=False)
+    b = run_mean_estimation(task, W, steps=10, lr=0.2, seed=0, use_kernel=True)
+    np.testing.assert_allclose(a["theta"], b["theta"], atol=1e-5)
