@@ -1,0 +1,228 @@
+"""Sparse Birkhoff mixing engine benchmarks (the first BENCH json).
+
+Three comparisons, all on the n-node simulator hot path:
+
+1. Transport throughput on an 8M-parameter stacked buffer (8M params
+   TOTAL across the n nodes -- so per-node size and leaf count shrink as n
+   grows; each row records its own n_leaves/params_per_node, compare rows
+   at equal n only). Many small leaves = the deep-narrow regime the seed
+   trainer actually mixes: the seed path
+   (eager, leaf-by-leaf ``mix_dense``) vs the jitted dense pytree path vs
+   the single-buffer Birkhoff schedule transport, at n in {16, 64} and
+   L in {2, 8} atoms. Ops/sec = mixing steps per second.
+2. Rollout compilation: scan-compiled ``run_mean_estimation`` vs the seed's
+   per-step eager loop with a host sync every iteration (steps=500).
+3. Incremental STL-FW vs the reference implementation at n=512, budget=64
+   (trace-identical by construction; see test_stl_fw_incremental.py).
+
+Writes experiments/bench/BENCH_mixing.json with every ratio so later PRs
+have a perf trajectory to regress against. Wall-clock numbers on CI
+containers are noisy (~2x run-to-run); the JSON stores medians.
+"""
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import RESULT_DIR, emit
+from repro.core import topology as T
+from repro.core.mixing import (
+    BirkhoffSchedule,
+    _mix_schedule_flat,
+    mix_dense,
+    mix_schedule_stacked,
+    ravel_stack,
+)
+from repro.core.dsgd import dsgd_init, dsgd_step_stacked
+from repro.core.stl_fw import learn_topology
+from repro.data.synthetic import mean_estimation_clusters
+from repro.train.trainer import run_mean_estimation
+
+TOTAL_PARAMS = 8_000_000
+FW_N, FW_K, FW_BUDGET = 512, 4096, 64
+
+
+def _median_time(fn, iters=5, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _many_leaf_stack(n: int, rng) -> dict:
+    """~8M params TOTAL (across nodes) in transformer-ish w/b-sized leaves.
+
+    Per-node size is 8M/n: rows of BENCH_mixing.json at different n are
+    different workloads; only same-n comparisons are apples-to-apples.
+    """
+    leaves, tot, i = {}, 0, 0
+    while tot < TOTAL_PARAMS:
+        for s in (1024, 32 * 32, 2048, 64 * 48):
+            leaves[f"p{i}"] = jnp.asarray(
+                rng.normal(size=(n, s)).astype(np.float32)
+            )
+            tot += n * s
+            i += 1
+    return leaves
+
+
+def _random_schedule(n: int, L: int, rng) -> BirkhoffSchedule:
+    perms = [tuple(range(n))] + [
+        tuple(int(x) for x in rng.permutation(n)) for _ in range(L - 1)
+    ]
+    coeffs = rng.random(L) + 0.2
+    coeffs /= coeffs.sum()
+    return BirkhoffSchedule(coeffs=tuple(float(c) for c in coeffs), perms=tuple(perms))
+
+
+def bench_transports(results: dict) -> None:
+    rng = np.random.default_rng(0)
+    for n in (16, 64):
+        tree = _many_leaf_stack(n, rng)
+        flat, spec = ravel_stack(tree)
+        for L in (2, 8):
+            sched = _random_schedule(n, L, rng)
+            Wj = jnp.asarray(sched.to_matrix(), jnp.float32)
+
+            # seed hot path: eager, one dispatch per leaf
+            t_dense_eager = _median_time(lambda: mix_dense(tree, Wj))
+            # compiled dense pytree path
+            dense_jit = jax.jit(lambda t: mix_dense(t, Wj))
+            t_dense_jit = _median_time(lambda: dense_jit(tree))
+            # schedule transport inside jit (per-leaf gathers, fused)
+            sched_jit = jax.jit(lambda t: mix_schedule_stacked(t, sched))
+            t_sched = _median_time(lambda: sched_jit(tree))
+            # steady-state trainer path: buffer stays flat across steps
+            flat_jit = jax.jit(lambda f: _mix_schedule_flat(f, sched))
+            t_flat = _median_time(lambda: flat_jit(flat))
+
+            key = f"n{n}_L{L}"
+            results[key] = {
+                "n": n,
+                "L": L,
+                "params_per_node": int(spec.total),
+                "n_leaves": len(tree),
+                "dense_eager_ops_per_s": 1.0 / t_dense_eager,
+                "dense_jit_ops_per_s": 1.0 / t_dense_jit,
+                "schedule_ops_per_s": 1.0 / t_sched,
+                "schedule_flat_ops_per_s": 1.0 / t_flat,
+                "speedup_vs_seed_dense": t_dense_eager / t_sched,
+                "speedup_flat_vs_seed_dense": t_dense_eager / t_flat,
+            }
+            emit(
+                f"mixing_dense_seed_{key}", t_dense_eager * 1e6,
+                f"{1.0/t_dense_eager:.1f}ops/s",
+            )
+            emit(f"mixing_dense_jit_{key}", t_dense_jit * 1e6, f"{1.0/t_dense_jit:.1f}ops/s")
+            emit(
+                f"mixing_schedule_{key}", t_sched * 1e6,
+                f"{t_dense_eager/t_sched:.2f}x_vs_seed",
+            )
+            emit(
+                f"mixing_schedule_flat_{key}", t_flat * 1e6,
+                f"{t_dense_eager/t_flat:.2f}x_vs_seed",
+            )
+
+    # Pallas gossip_schedule kernel: interpret mode on CPU is a Python-loop
+    # stand-in -- record correctness delta + time at a small size only.
+    n, L, P = 8, 3, 4096
+    rng2 = np.random.default_rng(1)
+    theta = jnp.asarray(rng2.normal(size=(n, P)), jnp.float32)
+    sched = _random_schedule(n, L, rng2)
+    from repro.kernels.gossip_mix import gossip_schedule, gossip_schedule_ref
+
+    coeffs, perms = sched.coeff_array(), sched.perm_array()
+    t_kern = _median_time(lambda: gossip_schedule(theta, coeffs, perms), iters=3)
+    err = float(
+        jnp.max(
+            jnp.abs(
+                gossip_schedule(theta, coeffs, perms)
+                - gossip_schedule_ref(theta, jnp.asarray(coeffs), jnp.asarray(perms))
+            )
+        )
+    )
+    results["kernel_interpret_8x4096_L3"] = {"seconds": t_kern, "maxerr": err}
+    emit("mixing_kernel_interpret_8x4096", t_kern * 1e6, f"maxerr={err:.1e}")
+
+
+def _seed_style_loop(task, W, steps, lr, seed):
+    """The pre-scan trainer loop: eager step + host sync every iteration."""
+    n = task.n_nodes
+    rng = np.random.default_rng(seed)
+    theta = jnp.zeros((n, 1))
+    state = dsgd_init(theta)
+    Wj = jnp.asarray(W, jnp.float32)
+    theta_star = task.theta_star
+    mse = []
+    for _ in range(steps):
+        z = jnp.asarray(task.sample(1, rng), jnp.float32)
+        grads = 2.0 * (theta - z.mean(axis=1, keepdims=True))
+        theta, state = dsgd_step_stacked(theta, grads, state, Wj, lr)
+        err = np.asarray((theta[:, 0] - theta_star) ** 2)  # host sync
+        mse.append(float(err.mean()))
+    return np.array(mse)
+
+
+def bench_rollout(results: dict) -> None:
+    task = mean_estimation_clusters(n_nodes=40, K=10, m=5.0)
+    W = T.ring(40)
+    steps = 500
+    t_loop = _median_time(lambda: _seed_style_loop(task, W, steps, 0.2, 0), iters=3)
+    t_scan = _median_time(
+        lambda: run_mean_estimation(task, W, steps=steps, lr=0.2, seed=0, rollout="scan"),
+        iters=3,
+    )
+    results["rollout_mean_estimation_500"] = {
+        "seed_loop_s": t_loop,
+        "scan_s": t_scan,
+        "speedup": t_loop / t_scan,
+    }
+    emit("rollout_seed_loop_500", t_loop * 1e6, "eager+host-sync/step")
+    emit("rollout_scan_500", t_scan * 1e6, f"{t_loop/t_scan:.1f}x_vs_loop")
+
+
+def bench_stl_fw(results: dict) -> None:
+    rng = np.random.default_rng(1)
+    Pi = rng.dirichlet(np.ones(FW_K) * 0.1, size=FW_N)
+    t0 = time.perf_counter()
+    ref = learn_topology(Pi, budget=FW_BUDGET, lam=0.1, method="reference")
+    t_ref = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    inc = learn_topology(Pi, budget=FW_BUDGET, lam=0.1, method="incremental")
+    t_inc = time.perf_counter() - t0
+    trace_diff = float(np.abs(ref.objective_trace - inc.objective_trace).max())
+    results[f"stl_fw_n{FW_N}_K{FW_K}_b{FW_BUDGET}"] = {
+        "reference_s": t_ref,
+        "incremental_s": t_inc,
+        "speedup": t_ref / t_inc,
+        "objective_trace_maxdiff": trace_diff,
+    }
+    emit(f"stl_fw_reference_n{FW_N}", t_ref * 1e6, f"budget={FW_BUDGET}")
+    emit(
+        f"stl_fw_incremental_n{FW_N}", t_inc * 1e6,
+        f"{t_ref/t_inc:.1f}x_tracediff={trace_diff:.1e}",
+    )
+
+
+def main() -> None:
+    results: dict = {}
+    bench_transports(results)
+    bench_rollout(results)
+    bench_stl_fw(results)
+    os.makedirs(RESULT_DIR, exist_ok=True)
+    path = os.path.join(RESULT_DIR, "BENCH_mixing.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    emit("bench_mixing_json", 0.0, path)
+
+
+if __name__ == "__main__":
+    main()

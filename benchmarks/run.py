@@ -16,6 +16,7 @@ from . import (
     bench_fig1,
     bench_fig2,
     bench_kernels,
+    bench_mixing,
     bench_tables,
     bench_theory,
     bench_thm2,
@@ -29,6 +30,7 @@ BENCHES = {
     "thm2": bench_thm2.main,
     "theory": bench_theory.main,
     "kernels": bench_kernels.main,
+    "mixing": bench_mixing.main,
 }
 
 

@@ -1,0 +1,119 @@
+"""Version-compat shims for JAX APIs that moved between 0.4.x and 0.7.x.
+
+The repo targets the modern sharding surface (``jax.sharding.AxisType``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.set_mesh``, ``jax.shard_map``)
+but must also run on older installs (e.g. 0.4.37) where those names either
+do not exist or live under ``jax.experimental``. Import the equivalents from
+here instead of from ``jax`` directly:
+
+    from repro.compat import AxisType, make_compat_mesh, set_mesh, shard_map
+
+Each shim resolves to the native API when available and degrades to the
+closest legacy equivalent otherwise; nothing here touches device state at
+import time.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import enum
+import inspect
+from typing import Any
+
+import jax
+
+__all__ = [
+    "AxisType",
+    "HAS_NATIVE_AXIS_TYPE",
+    "make_compat_mesh",
+    "set_mesh",
+    "shard_map",
+    "tpu_compiler_params",
+]
+
+
+try:  # JAX >= 0.5-ish
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+
+    HAS_NATIVE_AXIS_TYPE = True
+except ImportError:  # pragma: no cover - depends on installed JAX
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        """Stand-in for ``jax.sharding.AxisType`` on older JAX.
+
+        Pre-AxisType JAX treats every mesh axis as what is now called
+        ``Auto``, so carrying these values through ``make_compat_mesh`` is a
+        no-op rather than a behavior change.
+        """
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    HAS_NATIVE_AXIS_TYPE = False
+
+
+_MAKE_MESH_HAS_AXIS_TYPES = "axis_types" in inspect.signature(jax.make_mesh).parameters
+
+
+def make_compat_mesh(shape, axes, *, axis_types=None):
+    """``jax.make_mesh`` that drops ``axis_types`` when unsupported."""
+    if axis_types is not None and _MAKE_MESH_HAS_AXIS_TYPES and HAS_NATIVE_AXIS_TYPE:
+        return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return jax.make_mesh(shape, axes)
+
+
+def set_mesh(mesh):
+    """Context manager entering ``mesh``: ``jax.set_mesh`` or legacy ``with mesh``."""
+    native = getattr(jax, "set_mesh", None)
+    if native is not None:
+        return native(mesh)
+    # Mesh has been a context manager since the pjit days; entering it gives
+    # the same implicit-mesh behavior jax.set_mesh provides. Fall back to a
+    # null context if even that is unavailable (explicit-mesh call sites pass
+    # the mesh to shard_map / NamedSharding anyway).
+    if hasattr(mesh, "__enter__"):
+        return mesh
+    return contextlib.nullcontext(mesh)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None, check_vma: bool = False):
+    """Portable ``shard_map``.
+
+    Prefers ``jax.shard_map`` (new API: ``axis_names=`` / ``check_vma=``) and
+    falls back to ``jax.experimental.shard_map.shard_map`` (old API:
+    ``check_rep=``, ``auto=``). On the legacy path ``axis_names`` is
+    translated to its complement: axes NOT named manual stay under GSPMD via
+    ``auto=`` (partial-manual shard_map, e.g. TP over 'model' inside a
+    D-SGD shard_map over 'data').
+    """
+    native = getattr(jax, "shard_map", None)
+    if native is not None:
+        kwargs: dict[str, Any] = {}
+        params = inspect.signature(native).parameters
+        if axis_names is not None and "axis_names" in params:
+            kwargs["axis_names"] = axis_names
+        if "check_vma" in params:
+            kwargs["check_vma"] = check_vma
+        elif "check_rep" in params:
+            kwargs["check_rep"] = check_vma
+        return native(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    # NOTE: legacy shard_map has an ``auto=`` param for partial-manual
+    # lowering, but on 0.4.x CPU it trips an XLA sharding check
+    # (``sharding.IsManualSubgroup()`` abort) for these programs, so we lower
+    # fully manual: axes outside ``axis_names`` see replicated operands,
+    # which computes the same values with duplicated work.
+    return _legacy_shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+    )
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` (new name) / ``pltpu.TPUCompilerParams`` (old)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)

@@ -21,7 +21,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .mixing import BirkhoffSchedule, mix_allreduce, mix_dense, mix_ppermute
+from .mixing import BirkhoffSchedule, mix_allreduce, mix_ppermute, mix_stacked
 
 __all__ = ["DSGDState", "dsgd_init", "dsgd_step_stacked", "dsgd_step_sharded"]
 
@@ -59,10 +59,13 @@ def dsgd_step_stacked(
     params_stack: PyTree,
     grads_stack: PyTree,
     state: DSGDState,
-    W: jax.Array,
+    W: jax.Array | None,
     lr: float | jax.Array,
     momentum: float = 0.0,
     use_kernel: bool = False,
+    schedule: BirkhoffSchedule | None = None,
+    transport: str = "auto",
+    single_buffer: bool = False,
 ) -> tuple[PyTree, DSGDState]:
     """One D-SGD iteration on stacked per-node parameters (simulator form).
 
@@ -70,12 +73,27 @@ def dsgd_step_stacked(
       params_stack / grads_stack: pytrees with leading node axis n.
       W: (n, n) doubly-stochastic mixing matrix (may differ per call --
         time-varying topologies are supported by just passing a different W).
+        May be None when ``schedule`` is given.
       lr: stepsize eta_t.
       momentum: heavy-ball coefficient (0 = the paper's plain D-SGD).
-      use_kernel: route the mixing through the Pallas gossip kernel.
+      use_kernel: route the mixing through the Pallas gossip kernels.
+      schedule: static Birkhoff decomposition of W. When present, the sparse
+        gather transport becomes available; ``transport`` ("auto" | "dense" |
+        "schedule") picks between it and the dense matmul (see
+        ``repro.core.mixing.preferred_transport`` for the auto cost model).
+      single_buffer: on the schedule transport, flatten the pytree into one
+        (n, P) buffer so mixing is one dispatch per step (for eager use;
+        keep False inside jit, where per-leaf gathers fuse copy-free).
     """
     half, new_mom = _local_update(params_stack, grads_stack, state, lr, momentum)
-    mixed = mix_dense(half, W, use_kernel=use_kernel)
+    mixed = mix_stacked(
+        half,
+        W=W,
+        schedule=schedule,
+        transport=transport,
+        use_kernel=use_kernel,
+        single_buffer=single_buffer,
+    )
     return mixed, DSGDState(step=state.step + 1, momentum=new_mom)
 
 

@@ -1,28 +1,63 @@
 """Gossip-mixing executions of a doubly-stochastic matrix W, in JAX.
 
-Three interchangeable transports for the D-SGD averaging step
+Four interchangeable transports for the D-SGD averaging step
 ``Theta <- Theta W^T`` (i.e. ``theta_i <- sum_j W_ij theta_j``):
 
-1. ``mix_dense``      -- stacked einsum over a leading node axis. Used by the
-                         single-host n-node simulator (vmap trainer). Can
-                         optionally route flat parameter blocks through the
-                         Pallas ``gossip_mix`` kernel.
-2. ``mix_ppermute``   -- Birkhoff-decomposed schedule of
-                         ``jax.lax.ppermute`` collectives, for use *inside*
-                         ``shard_map`` where each mesh index along
-                         ``axis_name`` holds one node's parameters. This is
-                         the TPU-native transport: a sparse learned topology
-                         with d_max atoms costs exactly d_max
-                         collective-permutes per mixing step.
-3. ``mix_allreduce``  -- ``W = 11^T/n`` (C-PSGD baseline) via ``lax.pmean``.
+1. ``mix_dense``            -- stacked einsum over a leading node axis,
+                               optionally through the Pallas ``gossip_mix``
+                               matmul kernel. Cost ``O(n^2 P)`` MACs.
+2. ``mix_schedule_stacked`` -- Birkhoff-decomposed *compute* format: after
+                               ``l`` Frank-Wolfe steps the learned ``W`` is a
+                               convex combination of at most ``l+1``
+                               permutation atoms (Theorem 2), so the product
+                               ``Theta W^T`` collapses to ``L`` row-gathers +
+                               AXPYs: ``out = sum_l gamma_l theta[perm_l]``.
+                               Cost ``O(L n P)`` with ``L << n``. For eager
+                               callers and steady-state flat buffers, the
+                               single-buffer path (``ravel_stack``) flattens
+                               the whole pytree into one contiguous (n, P)
+                               array so mixing is ONE dispatch per step
+                               instead of one per leaf, optionally through
+                               the Pallas ``gossip_schedule`` kernel; inside
+                               jit the per-leaf default fuses copy-free.
+3. ``mix_ppermute``         -- the same Birkhoff schedule as
+                               ``jax.lax.ppermute`` collectives, for use
+                               *inside* ``shard_map`` where each mesh index
+                               along ``axis_name`` holds one node's
+                               parameters. The TPU-native transport: d_max
+                               atoms cost exactly d_max collective-permutes.
+4. ``mix_allreduce``        -- ``W = 11^T/n`` (C-PSGD baseline) via
+                               ``lax.pmean``.
 
-All three act on arbitrary parameter pytrees.
+Which transport when
+--------------------
+
+=====================  =====================  ===============================
+Situation              Transport              Why
+=====================  =====================  ===============================
+single-host simulator, ``mix_schedule_        L gathers + AXPYs beat the
+learned/sparse W       stacked``              n x n matmul when L <~ n/4;
+(L atoms, L << n)                             single-buffer = 1 dispatch/step
+single-host simulator, ``mix_dense``          matmul is optimal at L ~ n
+dense or unstructured                         (Sinkhorn W, complete graph);
+W                                             MXU-friendly
+device mesh, one node  ``mix_ppermute``       moves only d_max permutes of
+per mesh index                                bytes; no (n, P) materialize
+device mesh, complete  ``mix_allreduce``      all-reduce hardware path
+graph (C-PSGD)
+=====================  =====================  ===============================
+
+``mix_stacked`` picks between (1) and (2) automatically via
+``preferred_transport`` -- the cost model ``L <= max(1, n // 4)`` (gather
+AXPYs are memory-bound at ~L reads/element; the dense matmul amortizes to
+~n MACs/element but runs at matmul throughput, worth ~4x on this class of
+hardware). All transports act on arbitrary parameter pytrees.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Sequence
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +65,13 @@ import numpy as np
 
 __all__ = [
     "BirkhoffSchedule",
+    "StackRavelSpec",
+    "ravel_stack",
+    "unravel_stack",
+    "preferred_transport",
     "mix_dense",
+    "mix_schedule_stacked",
+    "mix_stacked",
     "mix_ppermute",
     "mix_allreduce",
     "schedule_from_result",
@@ -65,6 +106,27 @@ class BirkhoffSchedule:
     def n_communication_atoms(self) -> int:
         """Atoms that move data (non-identity permutations)."""
         return sum(1 for p in self.perms if tuple(p) != tuple(range(len(p))))
+
+    def identity_weight(self) -> float:
+        """Total coefficient mass on identity atoms (a local scale, no I/O)."""
+        ident = tuple(range(self.n_nodes))
+        return sum(c for c, p in zip(self.coeffs, self.perms) if tuple(p) == ident)
+
+    def communication_atoms(self) -> list[tuple[float, tuple[int, ...]]]:
+        """(gamma, perm) pairs for the non-identity atoms."""
+        ident = tuple(range(self.n_nodes))
+        return [
+            (float(c), tuple(p))
+            for c, p in zip(self.coeffs, self.perms)
+            if tuple(p) != ident
+        ]
+
+    def perm_array(self) -> np.ndarray:
+        """All atoms as an (L, n) int32 index array (kernel input format)."""
+        return np.asarray(self.perms, dtype=np.int32).reshape(self.n_atoms, self.n_nodes)
+
+    def coeff_array(self) -> np.ndarray:
+        return np.asarray(self.coeffs, dtype=np.float32)
 
     def to_matrix(self) -> np.ndarray:
         n = self.n_nodes
@@ -122,6 +184,97 @@ def schedule_from_matrix(W: np.ndarray, max_atoms: int | None = None, tol: float
 
 
 # ---------------------------------------------------------------------------
+# Single-buffer flatten/unflatten (ravel the stack ONCE, mix in one dispatch)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StackRavelSpec:
+    """Static recipe for packing an (n, ...)-leaved pytree into one (n, P)
+    buffer and back. Hashable, so jitted functions can close over it."""
+
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]  # per-leaf shapes *without* node axis
+    dtypes: tuple[Any, ...]
+    n_nodes: int
+    total: int  # sum of leaf sizes (pre-padding)
+    padded: int  # buffer width P (>= total; padded to pad_to)
+
+    @property
+    def pad(self) -> int:
+        return self.padded - self.total
+
+
+def ravel_stack(params_stack: PyTree, pad_to: int | None = None) -> tuple[jax.Array, StackRavelSpec]:
+    """Flatten an (n, ...)-leaved pytree into one contiguous (n, P) buffer.
+
+    ``pad_to`` pads the parameter axis once, at flatten time, to a multiple
+    of the given block width -- so downstream Pallas kernels (which tile P in
+    ``block_p``-wide lanes) never re-pad per call. The buffer dtype is the
+    common ``result_type`` of the leaves; ``unravel_stack`` casts back.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(params_stack)
+    if not leaves:
+        raise ValueError("ravel_stack: empty pytree")
+    n = leaves[0].shape[0]
+    for leaf in leaves:
+        if leaf.ndim < 1 or leaf.shape[0] != n:
+            raise ValueError(
+                f"ravel_stack: every leaf needs leading node axis {n}, "
+                f"got shape {leaf.shape}"
+            )
+    dtypes = tuple(leaf.dtype for leaf in leaves)
+    buf_dtype = jnp.result_type(*dtypes)
+    shapes = tuple(tuple(leaf.shape[1:]) for leaf in leaves)
+    sizes = [int(np.prod(s, dtype=np.int64)) if s else 1 for s in shapes]
+    total = int(sum(sizes))
+    padded = total
+    if pad_to is not None and pad_to > 0:
+        padded = ((total + pad_to - 1) // pad_to) * pad_to
+    flat = jnp.concatenate(
+        [leaf.reshape(n, -1).astype(buf_dtype) for leaf in leaves], axis=1
+    )
+    if padded > total:
+        flat = jnp.pad(flat, ((0, 0), (0, padded - total)))
+    spec = StackRavelSpec(
+        treedef=treedef,
+        shapes=shapes,
+        dtypes=dtypes,
+        n_nodes=n,
+        total=total,
+        padded=padded,
+    )
+    return flat, spec
+
+
+def unravel_stack(flat: jax.Array, spec: StackRavelSpec) -> PyTree:
+    """Inverse of ``ravel_stack`` (drops padding, restores shapes/dtypes)."""
+    n = spec.n_nodes
+    leaves = []
+    offset = 0
+    for shape, dtype in zip(spec.shapes, spec.dtypes):
+        size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        piece = jax.lax.slice_in_dim(flat, offset, offset + size, axis=1)
+        leaves.append(piece.reshape((n,) + shape).astype(dtype))
+        offset += size
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+def preferred_transport(n_nodes: int, n_atoms: int) -> str:
+    """Pick ``"schedule"`` vs ``"dense"`` for the stacked simulator.
+
+    The schedule transport does ``n_atoms`` memory-bound row-gather AXPYs
+    per element; the dense transport does ``n_nodes`` MACs per element at
+    matmul throughput (~4x the per-element rate of gathers on both CPU BLAS
+    and the MXU). Crossover: schedule wins when ``L <= n / 4``.
+    """
+    return "schedule" if n_atoms <= max(1, n_nodes // 4) else "dense"
+
+
+# ---------------------------------------------------------------------------
 # Transports
 # ---------------------------------------------------------------------------
 
@@ -132,7 +285,7 @@ def mix_dense(params_stack: PyTree, W: jax.Array, use_kernel: bool = False) -> P
       params_stack: pytree whose leaves have shape (n, ...).
       W: (n, n) mixing matrix.
       use_kernel: route 2D-flattened leaves through the Pallas gossip_mix
-        kernel (interpret-mode on CPU) instead of einsum.
+        kernel (interpret mode auto-selected on CPU) instead of einsum.
     """
     if use_kernel:
         from repro.kernels.gossip_mix import ops as gossip_ops
@@ -149,6 +302,128 @@ def mix_dense(params_stack: PyTree, W: jax.Array, use_kernel: bool = False) -> P
         return jnp.tensordot(W.astype(x.dtype), x, axes=([1], [0]))
 
     return jax.tree_util.tree_map(mix_leaf, params_stack)
+
+
+def _mix_schedule_flat(flat: jax.Array, schedule: BirkhoffSchedule) -> jax.Array:
+    """``out = sum_l gamma_l flat[perm_l]`` on one (n, P) buffer.
+
+    Identity atoms are folded into a single scale (no gather); each
+    communication atom is one row-gather + AXPY. XLA fuses the chain into a
+    single pass over the buffer.
+    """
+    if flat.shape[0] != schedule.n_nodes:
+        raise ValueError(
+            f"schedule is for {schedule.n_nodes} nodes but the stacked "
+            f"parameters have leading axis {flat.shape[0]}"
+        )
+    ident_w = schedule.identity_weight()
+    comm = schedule.communication_atoms()
+    acc = None
+    if ident_w != 0.0:
+        acc = jnp.asarray(ident_w, flat.dtype) * flat
+    for gamma, perm in comm:
+        contrib = jnp.asarray(gamma, flat.dtype) * flat[jnp.asarray(perm, jnp.int32)]
+        acc = contrib if acc is None else acc + contrib
+    return flat if acc is None else acc
+
+
+def mix_schedule_stacked(
+    params_stack: PyTree,
+    schedule: BirkhoffSchedule,
+    *,
+    single_buffer: bool = False,
+    use_kernel: bool = False,
+    block_p: int | None = None,
+) -> PyTree:
+    """Sparse Birkhoff mixing on stacked parameters: L gathers + AXPYs.
+
+    ``out = sum_l gamma_l theta[perm_l]`` -- cost ``O(L n P)`` versus the
+    dense transport's ``O(n^2 P)``; after ``l`` Frank-Wolfe iterations
+    ``L <= l + 1`` (Theorem 2), so a learned topology with budget ``l`` mixes
+    in ``O(l n P)`` regardless of ``n``.
+
+    Args:
+      params_stack: pytree whose leaves have shape (n, ...).
+      schedule: the Birkhoff decomposition of W (static; hashable).
+      single_buffer: flatten the whole pytree into one (n, P) buffer so the
+        mixing is ONE dispatch per step instead of one per leaf. This is the
+        right call in eager code (dispatch-bound: one fused op beats ~2
+        dispatches per leaf) and for buffers that stay flat across steps
+        (see ``ravel_stack``). Inside jit leave it False: XLA already fuses
+        the per-leaf gathers with zero copies, whereas flattening pays the
+        concat/split passes every step.
+      use_kernel: route the flat buffer through the Pallas
+        ``gossip_schedule`` kernel (implies single_buffer; interpret mode
+        auto-selected on CPU).
+      block_p: pad the flat buffer to a multiple of this at flatten time
+        (defaults to the kernel's tile width when ``use_kernel``).
+    """
+    if use_kernel:
+        from repro.kernels.gossip_mix import ops as gossip_ops
+        from repro.kernels.gossip_mix.gossip_schedule import DEFAULT_BLOCK_P
+
+        pad_to = block_p or DEFAULT_BLOCK_P
+        flat, spec = ravel_stack(params_stack, pad_to=pad_to)
+        mixed = gossip_ops.gossip_schedule(
+            flat,
+            schedule.coeff_array(),
+            schedule.perm_array(),
+            block_p=pad_to,
+            pre_padded=True,
+        )
+        return unravel_stack(mixed, spec)
+    if single_buffer:
+        flat, spec = ravel_stack(params_stack, pad_to=block_p)
+        # barrier: without it XLA refuses the concat into each of the L
+        # gather consumers, recomputing the packed buffer per atom (~6x
+        # regression measured); materialize it once instead.
+        flat = jax.lax.optimization_barrier(flat)
+        return unravel_stack(_mix_schedule_flat(flat, schedule), spec)
+    return jax.tree_util.tree_map(
+        lambda x: _mix_schedule_flat(x.reshape(x.shape[0], -1), schedule).reshape(x.shape),
+        params_stack,
+    )
+
+
+def mix_stacked(
+    params_stack: PyTree,
+    W: jax.Array | None = None,
+    schedule: BirkhoffSchedule | None = None,
+    *,
+    transport: str = "auto",
+    use_kernel: bool = False,
+    single_buffer: bool = False,
+) -> PyTree:
+    """Unified stacked-mixing entry point with automatic transport choice.
+
+    ``transport``:
+      * ``"auto"``     -- ``preferred_transport`` cost model when both a
+                          schedule and a W are usable, else whichever is
+                          available.
+      * ``"dense"``    -- force the einsum/matmul path (W required, or
+                          derived once from the schedule).
+      * ``"schedule"`` -- force the Birkhoff gather path (schedule required).
+    """
+    if transport not in ("auto", "dense", "schedule"):
+        raise ValueError(f"unknown transport {transport!r}")
+    if transport == "auto":
+        if schedule is None:
+            transport = "dense"
+        elif W is None:
+            transport = "schedule"
+        else:
+            transport = preferred_transport(schedule.n_nodes, schedule.n_atoms)
+    if transport == "schedule":
+        if schedule is None:
+            raise ValueError("transport='schedule' requires a BirkhoffSchedule")
+        return mix_schedule_stacked(
+            params_stack, schedule, single_buffer=single_buffer, use_kernel=use_kernel
+        )
+    if W is None:
+        if schedule is None:
+            raise ValueError("mix_stacked needs W or schedule")
+        W = jnp.asarray(schedule.to_matrix(), jnp.float32)
+    return mix_dense(params_stack, W, use_kernel=use_kernel)
 
 
 def mix_ppermute(params: PyTree, schedule: BirkhoffSchedule, axis_name: str) -> PyTree:

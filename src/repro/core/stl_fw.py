@@ -154,6 +154,7 @@ def learn_topology(
     budget: int,
     lam: float = 0.1,
     dedup_atoms: bool = True,
+    method: str = "incremental",
 ) -> STLFWResult:
     """Run STL-FW (Algorithm 2) for ``budget`` Frank-Wolfe iterations.
 
@@ -164,6 +165,12 @@ def learn_topology(
         correspondence to Prop. 2 is lam = sigma_max^2 / (K B)).
       dedup_atoms: merge coefficients of re-selected atoms (FW may re-pick a
         permutation; merging keeps the decomposition minimal).
+      method: ``"incremental"`` (default) precomputes the Gram factors of
+        the objective once and maintains ``W Pi`` / ``W Pi Pi^T`` through the
+        rank-one FW update, so each iteration costs ``O(n^2)`` plus the LMO
+        instead of repeated dense ``(n, K)`` products and full objective
+        recomputation. ``"reference"`` is the direct textbook evaluation;
+        both produce the same traces to ~1e-12 (fp reassociation only).
 
     Returns:
       STLFWResult with the learned W, its Birkhoff decomposition and traces.
@@ -173,6 +180,54 @@ def learn_topology(
         raise ValueError("Pi must be (n, K)")
     if not np.allclose(Pi.sum(axis=1), 1.0, atol=1e-6):
         raise ValueError("rows of Pi must sum to 1 (class proportions)")
+    if method == "incremental":
+        return _learn_topology_incremental(Pi, budget, lam, dedup_atoms)
+    if method == "reference":
+        return _learn_topology_reference(Pi, budget, lam, dedup_atoms)
+    raise ValueError(f"unknown method {method!r}")
+
+
+def _merge_atom(
+    coeffs: list[float],
+    perms: list[np.ndarray],
+    col_of_row: np.ndarray,
+    gamma: float,
+    dedup_atoms: bool,
+) -> None:
+    """Fold the FW update into the Birkhoff bookkeeping (in place)."""
+    for k in range(len(coeffs)):
+        coeffs[k] *= 1.0 - gamma
+    if dedup_atoms:
+        for k, perm in enumerate(perms):
+            if np.array_equal(perm, col_of_row):
+                coeffs[k] += gamma
+                return
+    perms.append(col_of_row.copy())
+    coeffs.append(gamma)
+
+
+def _lmo_canonical(grad: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """LMO on a noise-quantized gradient.
+
+    FW atom selection must not depend on ~1e-16 reassociation noise in the
+    gradient: on structured Pi (e.g. one-hot classes) the assignment problem
+    has exactly tied optima, and which tie the solver returns would otherwise
+    differ between algebraically-equal gradient evaluations (Gram form vs
+    direct form). Snapping to a 1e-12-relative grid collapses fp noise while
+    preserving every preference larger than the grid, so all evaluation
+    orders select identical atoms and produce identical traces.
+    """
+    scale = np.max(np.abs(grad))
+    if scale > 0.0:
+        grid = scale * 1e-12
+        grad = np.round(grad / grid) * grid
+    return solve_lmo(grad)
+
+
+def _learn_topology_reference(
+    Pi: np.ndarray, budget: int, lam: float, dedup_atoms: bool
+) -> STLFWResult:
+    """Direct evaluation of Algorithm 2 (dense recomputation per iteration)."""
     n = Pi.shape[0]
     W = np.eye(n)
     identity = np.arange(n)
@@ -185,27 +240,130 @@ def learn_topology(
 
     for _ in range(budget):
         grad = stl_fw_gradient(W, Pi, lam)
-        P, col_of_row = solve_lmo(grad)
+        P, col_of_row = _lmo_canonical(grad)
         gamma = line_search_gamma(W, P, Pi, lam)
         gamma_trace.append(gamma)
         if gamma > 0.0:
             W = (1.0 - gamma) * W + gamma * P
-            coeffs = [c * (1.0 - gamma) for c in coeffs]
-            if dedup_atoms:
-                for k, perm in enumerate(perms):
-                    if np.array_equal(perm, col_of_row):
-                        coeffs[k] += gamma
-                        break
-                else:
-                    perms.append(col_of_row.copy())
-                    coeffs.append(gamma)
-            else:
-                perms.append(col_of_row.copy())
-                coeffs.append(gamma)
+            _merge_atom(coeffs, perms, col_of_row, gamma, dedup_atoms)
         obj_trace.append(stl_fw_objective(W, Pi, lam))
         b, v = _terms(W, Pi)
         bias_trace.append(b)
         var_trace.append(v)
+
+    return STLFWResult(
+        W=W,
+        coeffs=np.asarray(coeffs),
+        perms=perms,
+        objective_trace=np.asarray(obj_trace),
+        gamma_trace=np.asarray(gamma_trace),
+        bias_trace=np.asarray(bias_trace),
+        variance_trace=np.asarray(var_trace),
+    )
+
+
+def _learn_topology_incremental(
+    Pi: np.ndarray, budget: int, lam: float, dedup_atoms: bool
+) -> STLFWResult:
+    """Algorithm 2 with Gram precomputation and rank-update state.
+
+    Precomputed once (``O(n^2 K)``):
+      G = Pi Pi^T                     (n, n)
+      b = pibar_row Pi^T              (n,)   -- ``pi_bar Pi^T`` is rank one:
+                                               every row equals ``b``
+      c_pi2 = ||pibar||_F^2           scalar
+
+    Maintained through the FW update ``W <- (1-gamma) W + gamma P`` (each
+    ``O(n K)`` / ``O(n^2)`` gathers and AXPYs, no matmuls):
+      WPi = W Pi                      (n, K)  -> WPi = (1-g) WPi + g Pi[perm]
+      M   = W G                       (n, n)  -> M   = (1-g) M   + g G[perm]
+      nW2 = ||W||_F^2                 scalar  -> closed-form update
+
+    With these, per iteration:
+      gradient  (2/n)(M - b 1^T + lam (W - J/n))            O(n^2)
+      line search: all terms from WPi, Pi[perm], nW2, traces O(n K)
+      objective: O(1) -- the bias recurrence below reuses the line-search
+        inner products (``||WPi_new - pibar||^2 = ||WPi - pibar||^2
+        - 2 gamma <pibar - WPi, DPi> + gamma^2 ||DPi||^2``), and the
+        variance identity uses double stochasticity (``sum(W) = n`` exactly
+        for any convex combination of permutations, so
+        ``||W - J/n||_F^2 = ||W||_F^2 - 1``).
+    """
+    n, K = Pi.shape
+    pibar_row = Pi.mean(axis=0)               # (K,)
+    G = Pi @ Pi.T                             # (n, n)
+    b = Pi @ pibar_row                        # (n,); (pibar Pi^T)[i, j] =
+    # pibar_row . Pi[j] = b[j] -- rank one with constant columns.
+    W = np.eye(n)
+    WPi = Pi.copy()                           # W = I
+    M = G.copy()                              # W G = G
+    nW2 = float(n)                            # ||I||_F^2
+    d0 = Pi - pibar_row[None, :]
+    bias = float(np.einsum("ik,ik->", d0, d0) / n)
+    identity = np.arange(n)
+    rows = np.arange(n)
+    # scratch buffers: the loop below does no O(nK)/O(n^2) allocations
+    grad = np.empty((n, n))
+    PiP = np.empty((n, K))
+    DPi = np.empty((n, K))
+
+    def var_of(nW2_):
+        return float((nW2_ - 1.0) / n)
+
+    coeffs: list[float] = [1.0]
+    perms: list[np.ndarray] = [identity.copy()]
+    obj_trace = [bias + lam * var_of(nW2)]
+    bias_trace, var_trace = [bias], [var_of(nW2)]
+    gamma_trace: list[float] = []
+
+    for _ in range(budget):
+        # gradient: (2/n) ((W Pi - pibar) Pi^T + lam (W - J/n))
+        #         = (2/n) (M - 1 b^T + lam W - lam/n J)
+        np.copyto(grad, M)
+        grad -= b[None, :]
+        grad += lam * W
+        grad -= lam / n
+        grad *= 2.0 / n
+        _, col_of_row = _lmo_canonical(grad)
+
+        # line search, all in the maintained quantities:
+        #   DPi = P Pi - W Pi = Pi[perm] - WPi
+        #   num_bias = sum((pibar - WPi) * DPi)
+        #   num_var  = -lam (sum(W o P) - ||W||^2 - (sum P - sum W)/n)
+        #            = -lam (s_wp - nW2)            [sum P = sum W = n exactly]
+        #   denom    = ||DPi||^2 + lam (n - 2 s_wp + nW2)
+        np.take(Pi, col_of_row, axis=0, out=PiP)  # rows of P Pi
+        np.subtract(PiP, WPi, out=DPi)
+        num_bias = float(np.einsum("k,ik->", pibar_row, DPi) - np.einsum("ik,ik->", WPi, DPi))
+        dpi2 = float(np.einsum("ik,ik->", DPi, DPi))
+        s_wp = float(W[rows, col_of_row].sum())
+        num_var = -lam * (s_wp - nW2)
+        denom = dpi2 + lam * (n - 2.0 * s_wp + nW2)
+        gamma = 0.0 if denom <= 0.0 else float(np.clip((num_bias + num_var) / denom, 0.0, 1.0))
+        gamma_trace.append(gamma)
+
+        if gamma > 0.0:
+            # rank update of every maintained quantity (no matmuls)
+            nW2 = (1.0 - gamma) ** 2 * nW2 + 2.0 * gamma * (1.0 - gamma) * s_wp + gamma * gamma * n
+            bias = bias + (-2.0 * gamma * num_bias + gamma * gamma * dpi2) / n
+            W *= 1.0 - gamma
+            W[rows, col_of_row] += gamma
+            WPi *= 1.0 - gamma
+            WPi += gamma * PiP
+            M *= 1.0 - gamma
+            M += gamma * G[col_of_row]
+            _merge_atom(coeffs, perms, col_of_row, gamma, dedup_atoms)
+            if bias < 1e-12:
+                # the recurrence carries ~eps residue; near the elbow (bias
+                # -> 0 exactly, e.g. one-hot Pi at l = K-1) recompute it
+                # directly from the updated WPi so exact zeros stay exact.
+                np.subtract(WPi, pibar_row[None, :], out=DPi)
+                bias = float(np.einsum("ik,ik->", DPi, DPi) / n)
+
+        var_l = var_of(nW2)
+        obj_trace.append(bias + lam * var_l)
+        bias_trace.append(bias)
+        var_trace.append(var_l)
 
     return STLFWResult(
         W=W,

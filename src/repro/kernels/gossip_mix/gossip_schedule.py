@@ -1,0 +1,97 @@
+"""Pallas TPU kernel for Birkhoff-schedule gossip mixing.
+
+Computes ``out = sum_l coeffs[l] * theta[perms[l]]`` -- the D-SGD averaging
+step executed in its sparse Birkhoff decomposition (L gather-AXPYs,
+``O(L n P)``) instead of the dense ``W @ theta`` matmul (``O(n^2 P)``).
+After ``l`` Frank-Wolfe iterations of STL-FW the learned ``W`` has at most
+``l + 1`` atoms (Theorem 2), so for a budget-constrained topology this is
+the natural *compute* format, not just the ppermute transport format.
+
+Layout: the parameter axis is tiled in (n, BLOCK_P) blocks streamed
+HBM -> VMEM; the (L, n) permutation table and (L,) coefficients ride the
+scalar-prefetch path (SMEM) so the gather indices are available before the
+tile body runs. Accumulation is f32 in a VMEM scratch tile regardless of
+``theta.dtype``.
+
+VMEM budget per grid step (BLOCK_P = 2048, n <= 64, f32):
+  theta tile  n * BLOCK_P * 4  <= 512 KiB
+  acc tile    n * BLOCK_P * 4  <= 512 KiB
+  out tile    n * BLOCK_P * 4  <= 512 KiB        -- well under ~16 MiB VMEM.
+
+The wrapper in ops.py pads P to a multiple of BLOCK_P (or receives a
+pre-padded single-buffer from ``repro.core.mixing.ravel_stack``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_P = 2048
+
+
+def _gossip_schedule_kernel(perm_ref, coeff_ref, theta_ref, out_ref, acc_ref):
+    """One (n, BLOCK_P) tile: acc[i] = sum_l coeff[l] * theta[perm[l, i]]."""
+    L, n = perm_ref.shape
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def atom_body(l, _):
+        gamma = coeff_ref[l].astype(jnp.float32)
+
+        def row_body(i, _):
+            src = perm_ref[l, i]
+            row = theta_ref[pl.ds(src, 1), :].astype(jnp.float32)
+            acc_ref[pl.ds(i, 1), :] += gamma * row
+            return 0
+
+        return jax.lax.fori_loop(0, n, row_body, 0)
+
+    jax.lax.fori_loop(0, L, atom_body, 0)
+    out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def gossip_schedule_pallas(
+    theta: jax.Array,
+    coeffs: jax.Array,
+    perms: jax.Array,
+    *,
+    block_p: int = DEFAULT_BLOCK_P,
+    interpret: bool = True,
+) -> jax.Array:
+    """``out = sum_l coeffs[l] theta[perms[l]]``, theta (n, P), P % block_p == 0.
+
+    Args:
+      theta: (n, P) stacked flat parameters.
+      coeffs: (L,) float32 convex-combination coefficients.
+      perms: (L, n) int32; ``perms[l, i] = j`` means node i receives node j's
+        parameters in atom l.
+    """
+    n, P = theta.shape
+    L = perms.shape[0]
+    if perms.shape != (L, n):
+        raise ValueError(f"perms must be (L, n), got {perms.shape} for n={n}")
+    if coeffs.shape != (L,):
+        raise ValueError(f"coeffs must be ({L},), got {coeffs.shape}")
+    if P % block_p != 0:
+        raise ValueError(f"P={P} must be a multiple of block_p={block_p}")
+    grid = (P // block_p,)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # perms + coeffs live in SMEM, prefetched
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, block_p), lambda p, *prefetch: (0, p)),
+        ],
+        out_specs=pl.BlockSpec((n, block_p), lambda p, *prefetch: (0, p)),
+        scratch_shapes=[pltpu.VMEM((n, block_p), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _gossip_schedule_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, P), theta.dtype),
+        interpret=interpret,
+    )(perms.astype(jnp.int32), coeffs.astype(jnp.float32), theta)

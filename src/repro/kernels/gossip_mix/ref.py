@@ -1,4 +1,7 @@
-"""Pure-jnp oracle for the gossip mixing kernel: ``out = W @ theta``.
+"""Pure-jnp oracles for the gossip mixing kernels.
+
+``gossip_mix_ref``: dense ``out = W @ theta``.
+``gossip_schedule_ref``: Birkhoff form ``out = sum_l coeffs[l] theta[perms[l]]``.
 
 ``theta``: (n, P) stacked per-node flat parameters; ``W``: (n, n) mixing
 matrix. ``out[i] = sum_j W[i, j] theta[j]`` -- the D-SGD averaging step
@@ -18,3 +21,15 @@ def gossip_mix_ref(theta: jnp.ndarray, W: jnp.ndarray) -> jnp.ndarray:
     return jnp.einsum(
         "ij,jp->ip", W.astype(jnp.float32), theta.astype(jnp.float32)
     ).astype(theta.dtype)
+
+
+def gossip_schedule_ref(
+    theta: jnp.ndarray, coeffs: jnp.ndarray, perms: jnp.ndarray
+) -> jnp.ndarray:
+    if theta.ndim != 2 or perms.ndim != 2 or perms.shape[1] != theta.shape[0]:
+        raise ValueError(f"bad shapes theta={theta.shape} perms={perms.shape}")
+    acc = jnp.zeros(theta.shape, jnp.float32)
+    x = theta.astype(jnp.float32)
+    for l in range(perms.shape[0]):
+        acc = acc + coeffs[l].astype(jnp.float32) * x[perms[l]]
+    return acc.astype(theta.dtype)

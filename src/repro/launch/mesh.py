@@ -11,7 +11,8 @@ cross-pod D-SGD gossip (dsgd_pod mode) or plain cross-pod data parallelism.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import AxisType, make_compat_mesh
 
 __all__ = ["make_production_mesh", "make_host_mesh", "V5E"]
 
@@ -30,11 +31,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     """The deployment mesh: 16x16 single pod or 2x16x16 across two pods."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_compat_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_host_mesh(data: int = 4, model: int = 2):
     """Small mesh for tests on forced host devices."""
-    return jax.make_mesh(
+    return make_compat_mesh(
         (data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
     )

@@ -35,6 +35,7 @@ from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.train.checkpoints import CheckpointManager
 from repro.train.lm_trainer import make_train_setup
 from repro.train.metrics import MetricLogger
+from repro.compat import set_mesh
 
 
 def build_topology(kind: str, Pi: np.ndarray, budget: int, lam: float):
@@ -97,7 +98,7 @@ def main() -> None:
     logger = MetricLogger()
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = jax.jit(setup.init_params, out_shardings=shardings)(
             jax.random.PRNGKey(0)
         )

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.mixing import BirkhoffSchedule, mix_ppermute
 from repro.models import registry
 from repro.models.common import ModelConfig
@@ -74,7 +75,7 @@ def gossip_fn(
                 )
             return mix_ppermute(p, schedule, axis)
 
-        return jax.shard_map(
+        return shard_map(
             inner,
             mesh=mesh,
             in_specs=(node_specs,),
@@ -292,7 +293,7 @@ def make_train_setup(
         else:
             mom_specs = m_inner
         bspec = jax.tree_util.tree_map(lambda _: P(node_axis), batch)
-        return jax.shard_map(
+        return shard_map(
             per_node,
             mesh=mesh,
             in_specs=(node_specs, mom_specs, bspec),

@@ -2,9 +2,18 @@
 
 Simulates Algorithm 1 exactly on a single device: per-node parameters are
 stacked on a leading node axis, local gradients are computed with
-``vmap(grad)``, and the mixing step is the dense ``Theta W^T`` product
-(optionally through the Pallas gossip kernel). This reproduces the paper's
-n=100 experiments bit-for-bit up to RNG.
+``vmap(grad)``, and the mixing step runs through any stacked transport
+(dense ``Theta W^T``, the sparse Birkhoff gather schedule, or the Pallas
+gossip kernels). This reproduces the paper's n=100 experiments bit-for-bit
+up to RNG.
+
+Rollout compilation: by default each driver compiles the whole multi-step
+rollout between eval points with ``jax.lax.scan`` (``rollout="scan"``), so
+there is no per-step dispatch and no ``float(loss)`` host round-trip inside
+the hot loop -- error/loss traces are accumulated on device and fetched once
+per segment. ``rollout="loop"`` keeps the step-by-step Python loop (same
+jitted step function, bit-identical trajectories) for debugging and A/B
+benchmarking.
 
 Two ready-made drivers:
 * ``run_mean_estimation`` -- Section 6.1 / Example 1 quadratic task, with
@@ -16,13 +25,15 @@ Two ready-made drivers:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+import functools
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dsgd import dsgd_init, dsgd_step_stacked
+from repro.core.mixing import BirkhoffSchedule
 from repro.data.synthetic import MeanEstimationTask
 from .metrics import MetricLogger, consensus_distance
 
@@ -44,39 +55,75 @@ __all__ = [
 
 def run_mean_estimation(
     task: MeanEstimationTask,
-    W: np.ndarray,
+    W: np.ndarray | None,
     steps: int = 50,
     lr: float = 0.1,
     batch: int = 1,
     seed: int = 0,
     use_kernel: bool = False,
+    schedule: BirkhoffSchedule | None = None,
+    transport: str = "auto",
+    rollout: str = "scan",
 ) -> dict:
     """D-SGD on ``F_i(theta, z) = (theta - z)^2``; returns error traces.
 
     Returns dict with 'mean_sq_error' (n^-1 ||theta - theta*||^2 per step),
     'max_sq_error', 'min_sq_error' (the paper's dashed lines), and the final
     per-node parameters.
+
+    ``rollout="scan"`` compiles all ``steps`` iterations into one
+    ``lax.scan`` (noise is presampled host-side with the same RNG call
+    sequence as the loop, so both rollouts traverse identical data);
+    ``rollout="loop"`` dispatches the same jitted step per iteration.
     """
+    if rollout not in ("scan", "loop"):
+        raise ValueError(f"unknown rollout {rollout!r}")
     n = task.n_nodes
     rng = np.random.default_rng(seed)
     theta = jnp.zeros((n, 1))
     state = dsgd_init(theta)
-    Wj = jnp.asarray(W, jnp.float32)
-    theta_star = task.theta_star
+    Wj = jnp.asarray(W, jnp.float32) if W is not None else None
+    theta_star = jnp.asarray(task.theta_star, jnp.float32)
+    # Presample the noise exactly as the per-step loop would draw it.
+    zs_host = [task.sample(batch, rng) for _ in range(steps)]
+    zs = jnp.asarray(
+        np.stack(zs_host) if zs_host else np.zeros((0, n, batch)), jnp.float32
+    )  # (steps, n, batch)
 
-    mse, mx, mn = [], [], []
-    for _ in range(steps):
-        z = jnp.asarray(task.sample(batch, rng), jnp.float32)  # (n, batch)
+    def step(carry, z):
+        theta, st = carry
         grads = 2.0 * (theta - z.mean(axis=1, keepdims=True))
-        theta, state = dsgd_step_stacked(theta, grads, state, Wj, lr, use_kernel=use_kernel)
-        err = np.asarray((theta[:, 0] - theta_star) ** 2)
-        mse.append(float(err.mean()))
-        mx.append(float(err.max()))
-        mn.append(float(err.min()))
+        theta, st = dsgd_step_stacked(
+            theta, grads, st, Wj, lr,
+            use_kernel=use_kernel, schedule=schedule, transport=transport,
+        )
+        err = jnp.square(theta[:, 0] - theta_star)
+        return (theta, st), (jnp.mean(err), jnp.max(err), jnp.min(err))
+
+    if rollout == "scan":
+        @jax.jit
+        def roll(theta, st, zs):
+            return jax.lax.scan(step, (theta, st), zs)
+
+        (theta, state), (mse, mx, mn) = roll(theta, state, zs)
+        mse, mx, mn = np.asarray(mse), np.asarray(mx), np.asarray(mn)
+    else:
+        step_j = jax.jit(step)
+        carry = (theta, state)
+        mse_l, mx_l, mn_l = [], [], []
+        for t in range(steps):
+            carry, (e_mean, e_max, e_min) = step_j(carry, zs[t])
+            mse_l.append(e_mean)
+            mx_l.append(e_max)
+            mn_l.append(e_min)
+        theta, state = carry
+        mse = np.asarray(jnp.stack(mse_l)) if mse_l else np.zeros((0,))
+        mx = np.asarray(jnp.stack(mx_l)) if mx_l else np.zeros((0,))
+        mn = np.asarray(jnp.stack(mn_l)) if mn_l else np.zeros((0,))
     return {
-        "mean_sq_error": np.array(mse),
-        "max_sq_error": np.array(mx),
-        "min_sq_error": np.array(mn),
+        "mean_sq_error": mse,
+        "max_sq_error": mx,
+        "min_sq_error": mn,
         "theta": np.asarray(theta),
     }
 
@@ -151,11 +198,34 @@ def _stack_node_data(X, y, indices_per_node) -> _NodeData:
     return _NodeData(jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(lens))
 
 
+def _eval_segments(steps: int, eval_every: int, do_eval: bool) -> list[tuple[int, bool]]:
+    """Split [0, steps) into scan segments ending at eval points.
+
+    Returns (segment_length, evaluate_after) pairs covering all steps in
+    order, where ``evaluate_after`` marks the loop's eval condition
+    ``t % eval_every == 0 or t == steps - 1`` on the segment's last step.
+    """
+    if steps <= 0:
+        return []
+    if not do_eval:
+        # no eval points: one full-length scan, no per-segment host sync
+        return [(steps, False)]
+    segments: list[tuple[int, bool]] = []
+    start = 0
+    while start < steps:
+        end = start
+        while end < steps - 1 and not (end % eval_every == 0 or end == steps - 1):
+            end += 1
+        segments.append((end - start + 1, True))
+        start = end + 1
+    return segments
+
+
 def run_classification(
     X: np.ndarray,
     y: np.ndarray,
     indices_per_node: list[np.ndarray],
-    W: np.ndarray,
+    W: np.ndarray | None,
     *,
     model: str = "linear",
     hidden: int = 64,
@@ -167,11 +237,21 @@ def run_classification(
     y_test: np.ndarray | None = None,
     seed: int = 0,
     use_kernel: bool = False,
+    schedule: BirkhoffSchedule | None = None,
+    transport: str = "auto",
+    rollout: str = "scan",
 ) -> MetricLogger:
     """D-SGD classification with per-node local data (Algorithm 1).
 
-    Logs train loss (node mean) and test accuracy min/mean/max across nodes.
+    Logs train loss (node mean) every step and test accuracy min/mean/max
+    across nodes at eval points. ``rollout="scan"`` compiles the steps
+    between consecutive eval points into single ``lax.scan`` rollouts (the
+    per-step losses come back as one array per segment -- no host sync in
+    the hot loop); ``rollout="loop"`` runs the same jitted step per
+    iteration and produces a bit-identical trace.
     """
+    if rollout not in ("scan", "loop"):
+        raise ValueError(f"unknown rollout {rollout!r}")
     n = len(indices_per_node)
     num_classes = int(y.max()) + 1
     dim = X.shape[1]
@@ -186,13 +266,14 @@ def run_classification(
     # same init on every node (theta_i^0 = theta^0, as in Algorithm 1)
     params = jax.tree_util.tree_map(lambda p: jnp.stack([p] * n), params0)
     state = dsgd_init(params)
-    Wj = jnp.asarray(W, jnp.float32)
+    Wj = jnp.asarray(W, jnp.float32) if W is not None else None
 
     grad_fn = jax.grad(classifier_loss)
 
-    @jax.jit
-    def step_fn(params, state, key):
-        keys = jax.random.split(key, n)
+    def step(carry, _):
+        params, state, key = carry
+        key, sub = jax.random.split(key)
+        keys = jax.random.split(sub, n)
 
         def node_grads(p, x_node, y_node, length, k):
             idx = jax.random.randint(k, (batch_size,), 0, jnp.maximum(length, 1))
@@ -203,9 +284,10 @@ def run_classification(
 
         grads, losses = jax.vmap(node_grads)(params, data.x, data.y, data.lengths, keys)
         new_params, new_state = dsgd_step_stacked(
-            params, grads, state, Wj, lr, use_kernel=use_kernel
+            params, grads, state, Wj, lr,
+            use_kernel=use_kernel, schedule=schedule, transport=transport,
         )
-        return new_params, new_state, losses.mean()
+        return (new_params, new_state, key), losses.mean()
 
     @jax.jit
     def eval_fn(params, X_t, y_t):
@@ -213,19 +295,42 @@ def run_classification(
 
     logger = MetricLogger()
     key = jax.random.PRNGKey(seed + 1)
-    for t in range(steps):
-        key, sub = jax.random.split(key)
-        params, state, loss = step_fn(params, state, sub)
-        if (t % eval_every == 0 or t == steps - 1) and X_test is not None:
-            accs = np.asarray(eval_fn(params, jnp.asarray(X_test), jnp.asarray(y_test)))
-            logger.log(
-                t,
-                loss=float(loss),
-                acc_mean=float(accs.mean()),
-                acc_min=float(accs.min()),
-                acc_max=float(accs.max()),
-                consensus=float(consensus_distance(params)),
-            )
-        else:
-            logger.log(t, loss=float(loss))
+    do_eval = X_test is not None
+    X_t = jnp.asarray(X_test) if do_eval else None
+    y_t = jnp.asarray(y_test) if do_eval else None
+
+    def log_segment(t0: int, losses: np.ndarray, params, evaluate: bool) -> None:
+        for j, loss in enumerate(losses):
+            t = t0 + j
+            last = j == len(losses) - 1
+            if last and evaluate and (t % eval_every == 0 or t == steps - 1):
+                accs = np.asarray(eval_fn(params, X_t, y_t))
+                logger.log(
+                    t,
+                    loss=float(loss),
+                    acc_mean=float(accs.mean()),
+                    acc_min=float(accs.min()),
+                    acc_max=float(accs.max()),
+                    consensus=float(consensus_distance(params)),
+                )
+            else:
+                logger.log(t, loss=float(loss))
+
+    if rollout == "scan":
+        @functools.partial(jax.jit, static_argnames=("length",))
+        def roll(carry, length: int):
+            return jax.lax.scan(step, carry, None, length=length)
+
+        carry = (params, state, key)
+        t0 = 0
+        for seg_len, evaluate in _eval_segments(steps, eval_every, do_eval):
+            carry, losses = roll(carry, seg_len)
+            log_segment(t0, np.asarray(losses), carry[0], evaluate)
+            t0 += seg_len
+    else:
+        step_j = jax.jit(step)
+        carry = (params, state, key)
+        for t in range(steps):
+            carry, loss = step_j(carry, None)
+            log_segment(t, np.asarray(loss)[None], carry[0], do_eval)
     return logger

@@ -1,0 +1,97 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (offline container).
+
+The real ``hypothesis`` cannot be installed here, and six test modules
+hard-import it. Rather than skipping those modules wholesale, this shim
+implements the tiny surface they use -- ``@given`` / ``@settings`` and the
+``integers`` / ``floats`` / ``sampled_from`` strategies -- as a fixed-seed
+sweep: each ``@given`` test runs ``max_examples`` times (capped, see below)
+with values drawn from a PRNG seeded by the test's qualified name, so runs
+are reproducible and failures re-trigger identically.
+
+Differences from real hypothesis (all acceptable for a CI fallback):
+  * no shrinking, no example database, no ``@example``;
+  * ``max_examples`` is capped at ``_MAX_EXAMPLES_CAP`` to bound suite time;
+  * ``deadline`` and other settings are accepted and ignored.
+
+``tests/conftest.py`` registers this module as ``hypothesis`` in
+``sys.modules`` only when the real package is missing.
+"""
+
+from __future__ import annotations
+
+import random
+import types
+
+_MAX_EXAMPLES_CAP = 5
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rnd: elements[rnd.randrange(len(elements))])
+
+
+def given(*strategies: _Strategy):
+    def decorate(fn):
+        def wrapper(*args, **kwargs):
+            n_examples = getattr(wrapper, "_shim_max_examples", _MAX_EXAMPLES_CAP)
+            rnd = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n_examples):
+                drawn = [s.example_from(rnd) for s in strategies]
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except Exception as e:  # noqa: BLE001 - re-raise with the example
+                    raise AssertionError(
+                        f"falsifying example (hypothesis shim): "
+                        f"{fn.__qualname__}({', '.join(map(repr, drawn))})"
+                    ) from e
+            return None
+
+        # deliberately NOT functools.wraps: pytest must see the (*args,
+        # **kwargs) signature, not the original one, or it would demand
+        # fixtures for the strategy-supplied parameters.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._shim_max_examples = _MAX_EXAMPLES_CAP
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = 10, deadline=None, **_kw):
+    def decorate(fn):
+        fn._shim_max_examples = min(int(max_examples), _MAX_EXAMPLES_CAP)
+        return fn
+
+    return decorate
+
+
+def build_module() -> types.ModuleType:
+    """Assemble ``hypothesis`` + ``hypothesis.strategies`` module objects."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.__version__ = "0.0.0-shim"
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    st.sampled_from = sampled_from
+    hyp.strategies = st
+    return hyp

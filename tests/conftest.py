@@ -8,3 +8,15 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # NOTE: do NOT set --xla_force_host_platform_device_count here -- smoke tests
 # and benchmarks must see exactly 1 device. Multi-device behaviour is tested
 # in subprocesses (see test_distributed.py).
+
+# The offline container has no `hypothesis`; register the deterministic shim
+# so the property-test modules collect and run instead of erroring.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_shim
+
+    _mod = _hypothesis_shim.build_module()
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _mod.strategies
