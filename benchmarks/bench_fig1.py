@@ -18,9 +18,9 @@ from repro.data.synthetic import mean_estimation_clusters
 from repro.train.trainer import run_mean_estimation
 
 
-def fig1a() -> None:
+def fig1a(smoke: bool = False) -> None:
     t0 = time.perf_counter()
-    task = mean_estimation_clusters(n_nodes=100, K=10, m=5.0)
+    task = mean_estimation_clusters(n_nodes=30 if smoke else 100, K=10, m=5.0)
     res = learn_topology(task.Pi, budget=15, lam=0.5)
     rows = []
     for l in range(len(res.objective_trace)):
@@ -31,17 +31,18 @@ def fig1a() -> None:
     emit("fig1a_stlfw_traces", us, f"bias@l9={elbow_bias:.2e};g@l9={res.objective_trace[9]:.4f}")
 
 
-def fig1bc() -> None:
+def fig1bc(smoke: bool = False) -> None:
     t0 = time.perf_counter()
+    n, steps = (30, 10) if smoke else (100, 50)
     rows = []
     finals = {}
-    for m in (0.0, 2.0, 5.0, 10.0):
-        task = mean_estimation_clusters(n_nodes=100, K=10, m=m)
+    for m in (0.0, 10.0) if smoke else (0.0, 2.0, 5.0, 10.0):
+        task = mean_estimation_clusters(n_nodes=n, K=10, m=m)
         for budget in (3, 9):
             res = learn_topology(task.Pi, budget=budget, lam=0.5)
-            Wr = T.random_d_regular(100, budget, seed=0)
+            Wr = T.random_d_regular(n, budget, seed=0)
             for name, W in (("stl-fw", res.W), ("random", Wr)):
-                out = run_mean_estimation(task, W, steps=50, lr=0.15, seed=0)
+                out = run_mean_estimation(task, W, steps=steps, lr=0.15, seed=0)
                 rows.append([
                     m, budget, name,
                     out["mean_sq_error"][-1], out["max_sq_error"][-1],
@@ -61,9 +62,9 @@ def fig1bc() -> None:
          f"stlfw_growth={ratio_stl:.2f}x;random_growth={ratio_rnd:.2f}x")
 
 
-def main() -> None:
-    fig1a()
-    fig1bc()
+def main(smoke: bool = False) -> None:
+    fig1a(smoke)
+    fig1bc(smoke)
 
 
 if __name__ == "__main__":

@@ -20,15 +20,17 @@ from repro.data.synthetic import gaussian_blobs
 from repro.train.trainer import run_classification
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
     t0 = time.perf_counter()
-    n = 100
-    X, y = gaussian_blobs(n_samples=12000, num_classes=10, dim=48, sep=2.5, seed=0)
-    X_train, y_train = X[:10000], y[:10000]
-    X_test, y_test = X[10000:], y[10000:]
+    n, n_samples, n_train, steps = (
+        (20, 2400, 2000, 10) if smoke else (100, 12000, 10000, 150)
+    )
+    X, y = gaussian_blobs(n_samples=n_samples, num_classes=10, dim=48, sep=2.5, seed=0)
+    X_train, y_train = X[:n_train], y[:n_train]
+    X_test, y_test = X[n_train:], y[n_train:]
     idx, Pi = shard_partition(y_train, n, shards_per_node=2, seed=0)
 
-    steps, lr = 150, 0.3
+    lr = 0.3
     topologies: dict[str, np.ndarray] = {
         "fully-connected": T.complete(n),
         "exponential(d14)": T.exponential_graph(n),

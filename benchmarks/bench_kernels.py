@@ -16,30 +16,33 @@ from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 from repro.kernels.gossip_mix import gossip_mix, gossip_mix_ref
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
     rng = np.random.default_rng(0)
+    n_nodes, flat_p = (8, 1 << 15) if smoke else (16, 1 << 21)
+    seq = 128 if smoke else 512
 
-    # gossip mix: n=16 nodes, 8M flat params
-    theta = jnp.asarray(rng.normal(size=(16, 1 << 21)), jnp.float32)
-    W = np.abs(rng.normal(size=(16, 16)))
+    # gossip mix: n nodes, flat params per node
+    theta = jnp.asarray(rng.normal(size=(n_nodes, flat_p)), jnp.float32)
+    W = np.abs(rng.normal(size=(n_nodes, n_nodes)))
     W = jnp.asarray(W / W.sum(1, keepdims=True), jnp.float32)
     ref_us = timeit(lambda: gossip_mix_ref(theta, W).block_until_ready())
     ker_us = timeit(lambda: gossip_mix(theta, W).block_until_ready())
     err = float(jnp.max(jnp.abs(gossip_mix(theta, W) - gossip_mix_ref(theta, W))))
-    emit("gossip_mix_16x2M_ref_xla", ref_us, f"maxerr={err:.1e}")
-    emit("gossip_mix_16x2M_pallas_interpret", ker_us, "interpret-mode")
+    size_tag = f"{n_nodes}x{flat_p}"
+    emit(f"gossip_mix_{size_tag}_ref_xla", ref_us, f"maxerr={err:.1e}")
+    emit(f"gossip_mix_{size_tag}_pallas_interpret", ker_us, "interpret-mode")
 
-    # flash attention: S=512, H=8/4, D=128
-    q = jnp.asarray(rng.normal(size=(1, 512, 8, 128)), jnp.float32)
-    k = jnp.asarray(rng.normal(size=(1, 512, 4, 128)), jnp.float32)
-    v = jnp.asarray(rng.normal(size=(1, 512, 4, 128)), jnp.float32)
+    # flash attention: S=seq, H=8/4, D=128
+    q = jnp.asarray(rng.normal(size=(1, seq, 8, 128)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, seq, 4, 128)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, seq, 4, 128)), jnp.float32)
     ref_us = timeit(lambda: flash_attention_ref(q, k, v).block_until_ready())
     ker_us = timeit(
         lambda: flash_attention(q, k, v).block_until_ready(), iters=1, warmup=1
     )
     err = float(jnp.max(jnp.abs(flash_attention(q, k, v) - flash_attention_ref(q, k, v))))
-    emit("flash_attention_512_ref_xla", ref_us, f"maxerr={err:.1e}")
-    emit("flash_attention_512_pallas_interpret", ker_us, "interpret-mode")
+    emit(f"flash_attention_{seq}_ref_xla", ref_us, f"maxerr={err:.1e}")
+    emit(f"flash_attention_{seq}_pallas_interpret", ker_us, "interpret-mode")
 
 
 if __name__ == "__main__":

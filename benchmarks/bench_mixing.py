@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import RESULT_DIR, emit
+from .common import emit, result_dir
 from repro.core import topology as T
 from repro.core.mixing import (
     BirkhoffSchedule,
@@ -57,14 +57,14 @@ def _median_time(fn, iters=5, warmup=1):
     return float(np.median(ts))
 
 
-def _many_leaf_stack(n: int, rng) -> dict:
+def _many_leaf_stack(n: int, rng, total: int = TOTAL_PARAMS) -> dict:
     """~8M params TOTAL (across nodes) in transformer-ish w/b-sized leaves.
 
     Per-node size is 8M/n: rows of BENCH_mixing.json at different n are
     different workloads; only same-n comparisons are apples-to-apples.
     """
     leaves, tot, i = {}, 0, 0
-    while tot < TOTAL_PARAMS:
+    while tot < total:
         for s in (1024, 32 * 32, 2048, 64 * 48):
             leaves[f"p{i}"] = jnp.asarray(
                 rng.normal(size=(n, s)).astype(np.float32)
@@ -83,12 +83,12 @@ def _random_schedule(n: int, L: int, rng) -> BirkhoffSchedule:
     return BirkhoffSchedule(coeffs=tuple(float(c) for c in coeffs), perms=tuple(perms))
 
 
-def bench_transports(results: dict) -> None:
+def bench_transports(results: dict, smoke: bool = False) -> None:
     rng = np.random.default_rng(0)
-    for n in (16, 64):
-        tree = _many_leaf_stack(n, rng)
+    for n in (8,) if smoke else (16, 64):
+        tree = _many_leaf_stack(n, rng, total=200_000 if smoke else TOTAL_PARAMS)
         flat, spec = ravel_stack(tree)
-        for L in (2, 8):
+        for L in (2,) if smoke else (2, 8):
             sched = _random_schedule(n, L, rng)
             Wj = jnp.asarray(sched.to_matrix(), jnp.float32)
 
@@ -133,7 +133,7 @@ def bench_transports(results: dict) -> None:
 
     # Pallas gossip_schedule kernel: interpret mode on CPU is a Python-loop
     # stand-in -- record correctness delta + time at a small size only.
-    n, L, P = 8, 3, 4096
+    n, L, P = (4, 2, 512) if smoke else (8, 3, 4096)
     rng2 = np.random.default_rng(1)
     theta = jnp.asarray(rng2.normal(size=(n, P)), jnp.float32)
     sched = _random_schedule(n, L, rng2)
@@ -149,8 +149,8 @@ def bench_transports(results: dict) -> None:
             )
         )
     )
-    results["kernel_interpret_8x4096_L3"] = {"seconds": t_kern, "maxerr": err}
-    emit("mixing_kernel_interpret_8x4096", t_kern * 1e6, f"maxerr={err:.1e}")
+    results[f"kernel_interpret_{n}x{P}_L{L}"] = {"seconds": t_kern, "maxerr": err}
+    emit(f"mixing_kernel_interpret_{n}x{P}", t_kern * 1e6, f"maxerr={err:.1e}")
 
 
 def _seed_style_loop(task, W, steps, lr, seed):
@@ -171,54 +171,56 @@ def _seed_style_loop(task, W, steps, lr, seed):
     return np.array(mse)
 
 
-def bench_rollout(results: dict) -> None:
-    task = mean_estimation_clusters(n_nodes=40, K=10, m=5.0)
-    W = T.ring(40)
-    steps = 500
+def bench_rollout(results: dict, smoke: bool = False) -> None:
+    n_nodes = 16 if smoke else 40
+    task = mean_estimation_clusters(n_nodes=n_nodes, K=10, m=5.0)
+    W = T.ring(n_nodes)
+    steps = 50 if smoke else 500
     t_loop = _median_time(lambda: _seed_style_loop(task, W, steps, 0.2, 0), iters=3)
     t_scan = _median_time(
         lambda: run_mean_estimation(task, W, steps=steps, lr=0.2, seed=0, rollout="scan"),
         iters=3,
     )
-    results["rollout_mean_estimation_500"] = {
+    results[f"rollout_mean_estimation_{steps}"] = {
         "seed_loop_s": t_loop,
         "scan_s": t_scan,
         "speedup": t_loop / t_scan,
     }
-    emit("rollout_seed_loop_500", t_loop * 1e6, "eager+host-sync/step")
-    emit("rollout_scan_500", t_scan * 1e6, f"{t_loop/t_scan:.1f}x_vs_loop")
+    emit(f"rollout_seed_loop_{steps}", t_loop * 1e6, "eager+host-sync/step")
+    emit(f"rollout_scan_{steps}", t_scan * 1e6, f"{t_loop/t_scan:.1f}x_vs_loop")
 
 
-def bench_stl_fw(results: dict) -> None:
+def bench_stl_fw(results: dict, smoke: bool = False) -> None:
+    fw_n, fw_k, fw_budget = (48, 64, 8) if smoke else (FW_N, FW_K, FW_BUDGET)
     rng = np.random.default_rng(1)
-    Pi = rng.dirichlet(np.ones(FW_K) * 0.1, size=FW_N)
+    Pi = rng.dirichlet(np.ones(fw_k) * 0.1, size=fw_n)
     t0 = time.perf_counter()
-    ref = learn_topology(Pi, budget=FW_BUDGET, lam=0.1, method="reference")
+    ref = learn_topology(Pi, budget=fw_budget, lam=0.1, method="reference")
     t_ref = time.perf_counter() - t0
     t0 = time.perf_counter()
-    inc = learn_topology(Pi, budget=FW_BUDGET, lam=0.1, method="incremental")
+    inc = learn_topology(Pi, budget=fw_budget, lam=0.1, method="incremental")
     t_inc = time.perf_counter() - t0
     trace_diff = float(np.abs(ref.objective_trace - inc.objective_trace).max())
-    results[f"stl_fw_n{FW_N}_K{FW_K}_b{FW_BUDGET}"] = {
+    results[f"stl_fw_n{fw_n}_K{fw_k}_b{fw_budget}"] = {
         "reference_s": t_ref,
         "incremental_s": t_inc,
         "speedup": t_ref / t_inc,
         "objective_trace_maxdiff": trace_diff,
     }
-    emit(f"stl_fw_reference_n{FW_N}", t_ref * 1e6, f"budget={FW_BUDGET}")
+    emit(f"stl_fw_reference_n{fw_n}", t_ref * 1e6, f"budget={fw_budget}")
     emit(
-        f"stl_fw_incremental_n{FW_N}", t_inc * 1e6,
+        f"stl_fw_incremental_n{fw_n}", t_inc * 1e6,
         f"{t_ref/t_inc:.1f}x_tracediff={trace_diff:.1e}",
     )
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
     results: dict = {}
-    bench_transports(results)
-    bench_rollout(results)
-    bench_stl_fw(results)
-    os.makedirs(RESULT_DIR, exist_ok=True)
-    path = os.path.join(RESULT_DIR, "BENCH_mixing.json")
+    bench_transports(results, smoke)
+    bench_rollout(results, smoke)
+    bench_stl_fw(results, smoke)
+    os.makedirs(result_dir(), exist_ok=True)
+    path = os.path.join(result_dir(), "BENCH_mixing.json")
     with open(path, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
     emit("bench_mixing_json", 0.0, path)

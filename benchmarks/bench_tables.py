@@ -33,10 +33,10 @@ def stats_row(name: str, W: np.ndarray, Pi: np.ndarray) -> list:
     ]
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
     t0 = time.perf_counter()
-    n = 100
-    X, y = gaussian_blobs(n_samples=10000, num_classes=10, dim=32, seed=0)
+    n, n_samples = (30, 2000) if smoke else (100, 10000)
+    X, y = gaussian_blobs(n_samples=n_samples, num_classes=10, dim=32, seed=0)
     _, Pi = shard_partition(y, n, shards_per_node=2, seed=0)
 
     rows = []

@@ -21,9 +21,9 @@ from repro.core.theory import (
 from repro.data.synthetic import mean_estimation_clusters
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
     t0 = time.perf_counter()
-    n, K, eps = 100, 10, 0.05
+    n, K, eps = (30 if smoke else 100), 10, 0.05
     rows = []
     for m in (1.0, 5.0, 25.0):
         task = mean_estimation_clusters(n_nodes=n, K=K, m=m)

@@ -14,10 +14,10 @@ from repro.data.partition import shard_partition
 from repro.data.synthetic import gaussian_blobs
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
     t0 = time.perf_counter()
-    n = 100
-    X, y = gaussian_blobs(n_samples=8000, num_classes=10, dim=32, seed=1)
+    n, n_samples = (30, 2000) if smoke else (100, 8000)
+    X, y = gaussian_blobs(n_samples=n_samples, num_classes=10, dim=32, seed=1)
     _, Pi = shard_partition(y, n, shards_per_node=2, seed=1)
 
     lam = 0.1

@@ -10,6 +10,19 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 RESULT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
 
+_SMOKE = False
+
+
+def set_smoke(value: bool) -> None:
+    """Smoke runs save under experiments/bench/smoke/ so CI's tiny-size
+    numbers never clobber the real benchmark artifacts."""
+    global _SMOKE
+    _SMOKE = bool(value)
+
+
+def result_dir() -> str:
+    return os.path.join(RESULT_DIR, "smoke") if _SMOKE else RESULT_DIR
+
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     """The harness CSV contract: ``name,us_per_call,derived``."""
@@ -26,8 +39,8 @@ def timeit(fn, *args, iters: int = 3, warmup: int = 1) -> float:
 
 
 def save_rows(filename: str, header: list[str], rows: list[list]) -> str:
-    os.makedirs(RESULT_DIR, exist_ok=True)
-    path = os.path.join(RESULT_DIR, filename)
+    os.makedirs(result_dir(), exist_ok=True)
+    path = os.path.join(result_dir(), filename)
     with open(path, "w") as f:
         f.write(",".join(header) + "\n")
         for row in rows:

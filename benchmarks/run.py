@@ -5,18 +5,23 @@ full data tables under experiments/bench/.
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --only fig2
+    PYTHONPATH=src python -m benchmarks.run --smoke    # CI: tiny sizes,
+                                                       # one repeat, every
+                                                       # bench still executes
 """
 
 import argparse
 import sys
 import traceback
 
+from . import common
 from . import (
     bench_example1,
     bench_fig1,
     bench_fig2,
     bench_kernels,
     bench_mixing,
+    bench_stl_fw,
     bench_tables,
     bench_theory,
     bench_thm2,
@@ -31,19 +36,28 @@ BENCHES = {
     "theory": bench_theory.main,
     "kernels": bench_kernels.main,
     "mixing": bench_mixing.main,
+    "stl_fw": bench_stl_fw.main,
 }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=list(BENCHES))
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="tiny problem sizes and a single repeat per bench -- wall-clock "
+        "numbers are meaningless, but every bench code path runs (CI rot "
+        "detector)",
+    )
     args = ap.parse_args()
+    common.set_smoke(args.smoke)
     names = [args.only] if args.only else list(BENCHES)
     print("name,us_per_call,derived")
     failed = []
     for name in names:
         try:
-            BENCHES[name]()
+            BENCHES[name](smoke=args.smoke)
         except Exception:  # noqa: BLE001
             failed.append(name)
             traceback.print_exc()

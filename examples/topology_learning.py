@@ -18,6 +18,7 @@ import numpy as np
 from repro.core import learn_topology, topology as T
 from repro.core.dcliques import d_cliques
 from repro.core.heterogeneity import classes_in_neighborhood, label_skew_bias
+from repro.core.mixing import preferred_transport, schedule_from_result
 from repro.data.partition import shard_partition
 from repro.data.synthetic import gaussian_blobs
 from repro.train.trainer import run_classification
@@ -34,12 +35,20 @@ def main() -> None:
     X, y = gaussian_blobs(n_samples=12000, num_classes=10, dim=48, sep=2.5, seed=0)
     idx, Pi = shard_partition(y[:10000], n, shards_per_node=2, seed=0)
 
+    stl = learn_topology(Pi, budget=args.budget, lam=0.1)
+    sched = schedule_from_result(stl)
+    transport = preferred_transport(n, sched.n_communication_atoms)
+    print(f"STL-FW: lmo backend = {stl.lmo_backend}, "
+          f"{sched.n_atoms} Birkhoff atoms ({sched.n_communication_atoms} "
+          f"communicating) -> preferred transport = {transport!r} "
+          f"(schedule iff L <= n/4; see repro.core.mixing.preferred_transport)\n")
+
     topologies = {
         "fully-connected": T.complete(n),
         f"random(d{args.budget})": T.random_d_regular(n, args.budget, seed=0),
         "exponential": T.exponential_graph(n),
         "d-cliques": d_cliques(Pi, clique_size=10, seed=0),
-        f"stl-fw(d{args.budget})": learn_topology(Pi, budget=args.budget, lam=0.1).W,
+        f"stl-fw(d{args.budget})": stl.W,
     }
 
     print(f"{'topology':18s} {'d_max':>5s} {'classes/nbhd':>12s} {'bias':>9s} {'1-p':>6s}")

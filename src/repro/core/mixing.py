@@ -48,10 +48,12 @@ graph (C-PSGD)
 =====================  =====================  ===============================
 
 ``mix_stacked`` picks between (1) and (2) automatically via
-``preferred_transport`` -- the cost model ``L <= max(1, n // 4)`` (gather
-AXPYs are memory-bound at ~L reads/element; the dense matmul amortizes to
-~n MACs/element but runs at matmul throughput, worth ~4x on this class of
-hardware). All transports act on arbitrary parameter pytrees.
+``preferred_transport`` -- the cost model ``L <= n / dense_speedup``
+(gather AXPYs are memory-bound at ~L reads/element; the dense matmul
+amortizes to ~n MACs/element but runs at matmul throughput, worth
+``dense_speedup ~ 4x`` on CPU BLAS -- a calibrated, overridable
+parameter, see ``preferred_transport`` and docs/architecture.md). All
+transports act on arbitrary parameter pytrees.
 """
 
 from __future__ import annotations
@@ -263,15 +265,37 @@ def unravel_stack(flat: jax.Array, spec: StackRavelSpec) -> PyTree:
 # Cost model
 # ---------------------------------------------------------------------------
 
-def preferred_transport(n_nodes: int, n_atoms: int) -> str:
+# Measured per-element throughput advantage of the dense matmul transport
+# over gather AXPYs, calibrated on CPU BLAS (see docs/architecture.md,
+# "Mixing cost model"). On TPU the MXU widens this gap, pushing the
+# crossover toward dense -- recalibrate there (ROADMAP open item).
+DENSE_THROUGHPUT_ADVANTAGE = 4.0
+
+
+def preferred_transport(
+    n_nodes: int,
+    n_atoms: int,
+    dense_speedup: float = DENSE_THROUGHPUT_ADVANTAGE,
+) -> str:
     """Pick ``"schedule"`` vs ``"dense"`` for the stacked simulator.
 
     The schedule transport does ``n_atoms`` memory-bound row-gather AXPYs
     per element; the dense transport does ``n_nodes`` MACs per element at
-    matmul throughput (~4x the per-element rate of gathers on both CPU BLAS
-    and the MXU). Crossover: schedule wins when ``L <= n / 4``.
+    matmul throughput. ``dense_speedup`` is the measured per-element
+    throughput ratio between the two regimes: the crossover is
+    ``schedule`` iff ``n_atoms <= n_nodes / dense_speedup``.
+
+    The default 4.0 is CPU-calibrated (BLAS matmul vs strided gathers;
+    the ``L <= n/4`` rule quoted in the docs). It is a *hardware*
+    constant, not a law: on TPU the MXU runs matmuls proportionally
+    faster, so a larger ``dense_speedup`` (crossover toward dense) is
+    expected -- pass a measured value here, or override the module-level
+    ``DENSE_THROUGHPUT_ADVANTAGE`` once, after benchmarking on the target
+    accelerator (``python -m benchmarks.run --only mixing``).
     """
-    return "schedule" if n_atoms <= max(1, n_nodes // 4) else "dense"
+    if dense_speedup <= 0:
+        raise ValueError(f"dense_speedup must be positive, got {dense_speedup}")
+    return "schedule" if n_atoms <= max(1, int(n_nodes / dense_speedup)) else "dense"
 
 
 # ---------------------------------------------------------------------------
@@ -285,7 +309,8 @@ def mix_dense(params_stack: PyTree, W: jax.Array, use_kernel: bool = False) -> P
       params_stack: pytree whose leaves have shape (n, ...).
       W: (n, n) mixing matrix.
       use_kernel: route 2D-flattened leaves through the Pallas gossip_mix
-        kernel (interpret mode auto-selected on CPU) instead of einsum.
+        kernel (interpret mode auto-selected on non-TPU backends) instead
+        of einsum.
     """
     if use_kernel:
         from repro.kernels.gossip_mix import ops as gossip_ops
@@ -354,7 +379,7 @@ def mix_schedule_stacked(
         concat/split passes every step.
       use_kernel: route the flat buffer through the Pallas
         ``gossip_schedule`` kernel (implies single_buffer; interpret mode
-        auto-selected on CPU).
+        auto-selected on non-TPU backends).
       block_p: pad the flat buffer to a multiple of this at flatten time
         (defaults to the kernel's tile width when ``use_kernel``).
     """
@@ -393,15 +418,19 @@ def mix_stacked(
     transport: str = "auto",
     use_kernel: bool = False,
     single_buffer: bool = False,
+    dense_speedup: float = DENSE_THROUGHPUT_ADVANTAGE,
 ) -> PyTree:
     """Unified stacked-mixing entry point with automatic transport choice.
 
     ``transport``:
       * ``"auto"``     -- ``preferred_transport`` cost model when both a
                           schedule and a W are usable, else whichever is
-                          available.
+                          available. ``dense_speedup`` tunes the cost
+                          model's crossover for the local hardware (see
+                          ``preferred_transport``).
       * ``"dense"``    -- force the einsum/matmul path (W required, or
-                          derived once from the schedule).
+                          densified from the schedule per call -- pass a
+                          precomputed W on hot paths).
       * ``"schedule"`` -- force the Birkhoff gather path (schedule required).
     """
     if transport not in ("auto", "dense", "schedule"):
@@ -412,7 +441,11 @@ def mix_stacked(
         elif W is None:
             transport = "schedule"
         else:
-            transport = preferred_transport(schedule.n_nodes, schedule.n_atoms)
+            # identity atoms fold into a free scale in the schedule path
+            # (no gather), so only communication atoms count as cost.
+            transport = preferred_transport(
+                schedule.n_nodes, schedule.n_communication_atoms, dense_speedup
+            )
     if transport == "schedule":
         if schedule is None:
             raise ValueError("transport='schedule' requires a BirkhoffSchedule")

@@ -1,6 +1,7 @@
 """Jitted public wrappers for the gossip mixing kernels.
 
-Handles backend auto-detection (Pallas interpret mode only on CPU), padding
+Handles backend auto-detection (Pallas interpret mode on every non-TPU
+backend), padding
 of the parameter axis to the kernel tile width, and the dense-vs-schedule
 dispatch: the dense matmul kernel is the right tool at ``L ~ n`` (an
 unstructured W has up to n atoms), the schedule kernel at ``L << n``
@@ -67,7 +68,8 @@ def gossip_mix(
 
     Pads the parameter axis to a multiple of ``block_p`` (the kernel's VMEM
     tile width), dispatches to the Pallas kernel, and strips the padding.
-    ``interpret=None`` auto-selects interpret mode on CPU only.
+    ``interpret=None`` auto-selects interpret mode on non-TPU backends
+    (see ``default_interpret``: the kernels only lower on TPU).
     ``use_ref=True`` routes to the pure-jnp oracle (for A/B testing).
     """
     return _gossip_mix_impl(theta, W, block_p, _resolve_interpret(interpret), use_ref)
@@ -113,7 +115,8 @@ def gossip_schedule(
     ``pre_padded=True`` asserts the caller already padded P to a multiple of
     ``block_p`` (the single-buffer path pads once at flatten time via
     ``ravel_stack``) and skips the per-call pad/strip entirely.
-    ``interpret=None`` auto-selects interpret mode on CPU only.
+    ``interpret=None`` auto-selects interpret mode on non-TPU backends
+    (see ``default_interpret``: the kernels only lower on TPU).
     """
     coeffs = jnp.asarray(coeffs, jnp.float32)
     perms = jnp.asarray(perms, jnp.int32)
@@ -142,6 +145,8 @@ def gossip_apply(
         raise ValueError("gossip_apply needs W or schedule")
     if schedule is not None:
         n = theta.shape[0]
+        # Unlike the XLA _mix_schedule_flat path, the Pallas kernel gathers
+        # EVERY atom including identities, so all atoms count as cost here.
         choice = (
             "schedule"
             if W is None

@@ -69,7 +69,11 @@ def given(*strategies: _Strategy):
         wrapper.__qualname__ = fn.__qualname__
         wrapper.__module__ = fn.__module__
         wrapper.__doc__ = fn.__doc__
-        wrapper._shim_max_examples = _MAX_EXAMPLES_CAP
+        # inherit a cap set by @settings applied below @given (real
+        # hypothesis accepts either decorator order)
+        wrapper._shim_max_examples = getattr(
+            fn, "_shim_max_examples", _MAX_EXAMPLES_CAP
+        )
         return wrapper
 
     return decorate

@@ -1,0 +1,266 @@
+"""Edge cases + solver-agreement properties for repro.core.assignment.
+
+The three LMO backends (scipy/JV, numpy hungarian, warm-started auction)
+must agree on the achieved objective ``sum_i cost[i, col[i]]`` on every
+input -- assignments themselves may differ under exact ties. The auction
+additionally guarantees exact optimality of the 1e-12-quantized matrix
+via its duality-gap certificate, and its warm-start path must reproduce
+cold results bit-for-bit in objective terms.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.assignment import (
+    AuctionState,
+    auction_assignment,
+    hungarian,
+    linear_assignment,
+    solve_lmo,
+)
+from repro.core.stl_fw import learn_topology, resolve_lmo_backend
+
+
+def _obj(cost, col):
+    return float(cost[np.arange(len(col)), col].sum())
+
+
+def _assert_perm(col, n):
+    assert sorted(int(c) for c in col) == list(range(n))
+
+
+ALL_SOLVERS = {
+    "scipy": linear_assignment,
+    "hungarian": hungarian,
+    "auction": lambda c: auction_assignment(c)[0],
+}
+
+
+# ---------------------------------------------------------------------------
+# degenerate shapes and values
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", list(ALL_SOLVERS))
+def test_n1(name):
+    col = ALL_SOLVERS[name](np.array([[3.7]]))
+    assert list(col) == [0]
+
+
+@pytest.mark.parametrize("name", list(ALL_SOLVERS))
+def test_all_equal_costs(name):
+    """Fully tied problem: any permutation is optimal; must terminate."""
+    for n in (1, 2, 7):
+        cost = np.full((n, n), 2.5)
+        col = ALL_SOLVERS[name](cost)
+        _assert_perm(col, n)
+        assert _obj(cost, col) == pytest.approx(2.5 * n)
+
+
+@pytest.mark.parametrize("name", list(ALL_SOLVERS))
+def test_duplicate_optima(name):
+    """Two identical rows -> two optimal assignments with equal value."""
+    cost = np.array([
+        [1.0, 5.0, 9.0],
+        [1.0, 5.0, 9.0],
+        [9.0, 9.0, 0.0],
+    ])
+    col = ALL_SOLVERS[name](cost)
+    _assert_perm(col, 3)
+    assert _obj(cost, col) == pytest.approx(6.0)  # 1 + 5 + 0, either tie
+
+
+@pytest.mark.parametrize("name", list(ALL_SOLVERS))
+def test_nonsquare_raises(name):
+    with pytest.raises(ValueError):
+        ALL_SOLVERS[name](np.zeros((3, 4)))
+    with pytest.raises(ValueError):
+        ALL_SOLVERS[name](np.zeros(3))
+
+
+@pytest.mark.parametrize("name", list(ALL_SOLVERS))
+def test_forbidden_entries_feasible(name):
+    """+inf marks forbidden pairs; the optimum routes around them."""
+    cost = np.array([
+        [np.inf, 1.0, 4.0],
+        [2.0, np.inf, 6.0],
+        [3.0, 8.0, np.inf],
+    ])
+    col = ALL_SOLVERS[name](cost)
+    _assert_perm(col, 3)
+    assert np.isfinite(_obj(cost, col))
+    assert _obj(cost, col) == pytest.approx(1.0 + 3.0 + 6.0)
+
+
+@pytest.mark.parametrize("name", list(ALL_SOLVERS))
+def test_forbidden_entries_infeasible(name):
+    # rows 0 and 1 both admit only column 0: no feasible assignment, but
+    # neither a full row nor a full column is forbidden.
+    cost = np.array([
+        [1.0, np.inf, np.inf],
+        [1.0, np.inf, np.inf],
+        [1.0, 1.0, 1.0],
+    ])
+    with pytest.raises(ValueError):
+        ALL_SOLVERS[name](cost)
+
+
+def test_forbidden_entries_do_not_coarsen_quantization():
+    """The +inf sentinel is ~(n+1)x the finite costs; the quantization
+    grid must be derived from the finite entries only, or sub-1e-9
+    differences between assignments get merged and the auction returns a
+    measurably suboptimal matching."""
+    rng = np.random.default_rng(11)
+    n = 200
+    cost = rng.normal(size=(n, n))
+    forbidden = rng.random((n, n)) < 0.02
+    forbidden[np.arange(n), linear_assignment(cost)] = False  # stay feasible
+    cost[forbidden] = np.inf
+    col, _ = auction_assignment(cost)
+    ref = linear_assignment(cost)
+    assert abs(_obj(cost, col) - _obj(cost, ref)) < 1e-9
+
+
+@pytest.mark.parametrize("name", list(ALL_SOLVERS))
+def test_nan_and_neginf_rejected(name):
+    for bad in (np.nan, -np.inf):
+        cost = np.ones((3, 3))
+        cost[1, 2] = bad
+        with pytest.raises(ValueError):
+            ALL_SOLVERS[name](cost)
+
+
+# ---------------------------------------------------------------------------
+# solver agreement (property test via the hypothesis shim)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 24), st.integers(0, 100_000))
+def test_solvers_agree_on_objective(n, seed):
+    rng = np.random.default_rng(seed)
+    cost = rng.normal(size=(n, n)) * 10.0 ** rng.integers(-6, 6)
+    objs = {name: _obj(cost, fn(cost)) for name, fn in ALL_SOLVERS.items()}
+    ref = objs["scipy"]
+    scale = max(1.0, abs(ref))
+    for name, o in objs.items():
+        assert abs(o - ref) <= 1e-9 * scale, (name, objs)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 16), st.integers(0, 10_000))
+def test_solvers_agree_on_tied_integer_costs(n, seed):
+    """Small-integer costs produce many exact ties."""
+    rng = np.random.default_rng(seed)
+    cost = rng.integers(0, 3, size=(n, n)).astype(np.float64)
+    objs = {name: _obj(cost, fn(cost)) for name, fn in ALL_SOLVERS.items()}
+    assert len({round(o, 9) for o in objs.values()}) == 1, objs
+
+
+# ---------------------------------------------------------------------------
+# auction specifics: warm start, state threading, exactness
+# ---------------------------------------------------------------------------
+
+def test_auction_warm_start_exact_after_perturbation():
+    rng = np.random.default_rng(3)
+    n = 60
+    cost = rng.normal(size=(n, n))
+    col, state = auction_assignment(cost)
+    for it in range(5):
+        gamma = 1.0 / (it + 2)
+        cost = (1.0 - gamma) * cost + gamma * rng.normal(size=(n, n))
+        col, state = auction_assignment(cost, state.scaled(1.0 - gamma))
+        _assert_perm(col, n)
+        ref = linear_assignment(cost)
+        assert _obj(cost, col) == pytest.approx(_obj(cost, ref), abs=1e-9)
+
+
+def test_auction_warm_fast_path_identical_cost():
+    """Unchanged cost: the carried certificate returns with zero bidding."""
+    rng = np.random.default_rng(4)
+    cost = rng.normal(size=(32, 32))
+    col, state = auction_assignment(cost)
+    col2, state2 = auction_assignment(cost, state)
+    assert np.array_equal(col, col2)
+    assert state2.n_phases == 0 and state2.n_rounds == 0
+    assert state2.n_rebid_rows == 0
+
+
+def test_auction_state_scaled():
+    st_ = AuctionState(prices=np.array([1.0, -2.0]), col_of_row=np.array([1, 0]))
+    out = st_.scaled(0.5)
+    np.testing.assert_allclose(out.prices, [0.5, -1.0])
+    assert np.array_equal(out.col_of_row, st_.col_of_row)
+
+
+def test_auction_ignores_malformed_warm_state():
+    rng = np.random.default_rng(5)
+    cost = rng.normal(size=(10, 10))
+    ref = linear_assignment(cost)
+    bad_states = [
+        # wrong shape
+        AuctionState(prices=np.zeros(4), col_of_row=np.zeros(4, np.int64)),
+        # out-of-range column index (not a permutation)
+        AuctionState(
+            prices=np.zeros(10),
+            col_of_row=np.array([0, 1, 2, 3, 4, 5, 6, 7, 8, 15]),
+        ),
+        # non-finite prices
+        AuctionState(prices=np.full(10, np.inf), col_of_row=np.arange(10)),
+        # prices from a wildly differently-scaled problem: must fall back
+        # to a cold solve instead of bidding the 1e6 spread down eps-wise
+        AuctionState(prices=rng.normal(size=10) * 1e6, col_of_row=np.arange(10)),
+    ]
+    for bad in bad_states:
+        col, _ = auction_assignment(cost, bad)
+        assert _obj(cost, col) == pytest.approx(_obj(cost, ref), abs=1e-12)
+
+
+def test_solve_lmo_backends():
+    rng = np.random.default_rng(6)
+    grad = rng.normal(size=(12, 12))
+    ref_P, ref_col = solve_lmo(grad)
+    for backend in ("scipy", "hungarian", "auction"):
+        P, col = solve_lmo(grad, backend=backend)
+        assert float((P * grad).sum()) == pytest.approx(
+            float((ref_P * grad).sum()), abs=1e-12
+        )
+    with pytest.raises(ValueError):
+        solve_lmo(grad, backend="simplex")
+
+
+# ---------------------------------------------------------------------------
+# learn_topology integration: backend selection + trajectory equivalence
+# ---------------------------------------------------------------------------
+
+def test_resolve_lmo_backend():
+    assert resolve_lmo_backend("auto") in ("scipy", "auction")
+    assert resolve_lmo_backend("hungarian") == "hungarian"
+    with pytest.raises(ValueError):
+        resolve_lmo_backend("jv")
+
+
+@pytest.mark.parametrize("method", ["incremental", "reference"])
+def test_learn_topology_auction_matches_scipy_traces(method):
+    """The warm-started auction LMO reproduces the reference FW trajectory
+    (generic random Pi: the optimum is unique at the quantization grid)."""
+    rng = np.random.default_rng(7)
+    Pi = rng.dirichlet(np.ones(6) * 0.3, size=36)
+    ref = learn_topology(Pi, budget=12, lam=0.2, method=method, lmo="scipy")
+    auc = learn_topology(Pi, budget=12, lam=0.2, method=method, lmo="auction")
+    np.testing.assert_allclose(
+        auc.objective_trace, ref.objective_trace, atol=1e-9
+    )
+    np.testing.assert_allclose(auc.gamma_trace, ref.gamma_trace, atol=1e-9)
+    assert auc.lmo_backend == "auction" and ref.lmo_backend == "scipy"
+
+
+def test_learn_topology_one_hot_all_backends():
+    """Structured one-hot Pi (exactly tied LMO optima): every backend must
+    still eliminate bias by l = K - 1 and respect the degree bound."""
+    K, n = 5, 30
+    Pi = np.zeros((n, K))
+    Pi[np.arange(n), np.arange(n) % K] = 1.0
+    for backend in ("scipy", "hungarian", "auction"):
+        res = learn_topology(Pi, budget=K - 1, lam=0.5, lmo=backend)
+        assert res.bias_trace[-1] < 1e-12, backend
+        assert np.all(np.diff(res.objective_trace) <= 1e-12), backend
