@@ -1,27 +1,43 @@
-"""STL-FW LMO benchmarks: warm-started auction vs the exact references.
+"""STL-FW LMO benchmarks: compiled auction vs numpy auction vs the exact
+references.
 
 Sweeps n in {128, 512, 1024} x budget in {16, 64} on Dirichlet(0.1)
-label-skew Pi and measures, per combination:
+label-skew Pi and measures, per combination and per backend
+(scipy / auction / auction_jit):
 
-* end-to-end ``learn_topology`` wall clock for ``lmo="scipy"`` and
-  ``lmo="auction"`` (both incremental method, identical trajectories);
-* per-call LMO cost split into the cold first solve and the warm
-  remainder (the auction carries dual prices across FW iterations;
-  scipy re-solves cold every time);
+* end-to-end ``learn_topology`` wall clock (identical trajectories --
+  asserted in-bench: backend drift beyond 1e-9 on the objective trace
+  raises, so the CI smoke tier catches it);
+* per-call LMO cost split into the cold first solve -- which for
+  ``auction_jit`` includes the one-time trace+compile of the
+  ``lax.while_loop`` engine -- and the steady-state remainder, reported
+  as the MEDIAN over calls 2..budget (the mean would let the compile
+  call or one slow outlier pollute the steady number);
 * the dependency-free ``hungarian`` reference: measured end-to-end at
   the smallest n only (it is ~6 s *per LMO call* at n=512), measured
   per-call at n <= 512, and extrapolated end-to-end elsewhere as
   ``cold_lmo * budget + shared FW overhead`` (fields marked ``_est``).
 
-Honest headline (recorded in the JSON): against the pure-python
-Hungarian reference -- what a scipy-less deployment would otherwise run
--- the warm-started auction is 2-3 orders of magnitude faster end to
-end. Against scipy's C Jonker-Volgenant solver the numpy auction does
-NOT win at these sizes: the FW gradient update penalizes exactly the
-previously-matched pairs (the ``lam W`` term), so every warm solve
-still re-bids most rows, and a C inner loop beats a numpy one. That is
-why ``lmo="auto"`` resolves to scipy when it is importable and auction
-otherwise (see ROADMAP for the jitted-auction follow-up).
+Honest headline (recorded in the JSON, this container = 2 vCPU):
+
+* ``auction_jit`` beats the numpy ``auction`` ~1.8-3.1x steady-state at
+  every n (n=512/b=64: 35 vs 91 ms/solve, 2.6x) -- real, but well short
+  of the ~10x the dispatch-overhead arithmetic promised (and of this
+  issue's >= 5x target): once compiled, each Gauss-Seidel bid is
+  memory-bandwidth-bound (~6 O(n) passes), and the numpy solver's
+  Jacobi rounds amortize its dispatch better than the per-bid 10us
+  model assumed.
+* scipy's C Jonker-Volgenant REMAINS the fastest steady-state LMO at
+  every measured n (within ~1.7-1.9x of auction_jit at n >= 512, far
+  ahead at small n). ``auto`` therefore still resolves to scipy when
+  importable; ``auction_jit`` is the best scipy-less backend once its
+  ~1-3 s one-time compile amortizes
+  (see ``repro.core.stl_fw._jit_amortizes``).
+
+``--smoke`` runs the sweep at (n=32, budget=8), exercises ALL four
+backends including ``auction_jit`` (tracing-regression detector), and
+asserts every backend reaches the same ``<P, G>`` LMO objective on a
+fixed-seed gradient -- the backend-drift rot detector CI relies on.
 
 Writes experiments/bench/BENCH_stl_fw.json.
 """
@@ -33,13 +49,15 @@ import time
 import numpy as np
 
 from .common import emit, result_dir
-from repro.core.assignment import hungarian
+from repro.core.assignment import hungarian, solve_lmo
 from repro.core.stl_fw import LMOSolver, learn_topology, resolve_lmo_backend
 
 LAM = 0.1
 # hungarian is O(n^3) python: ~0.6 s/solve at n=128, ~6 s at n=512.
 HUNGARIAN_E2E_MAX_N = 128
 HUNGARIAN_LMO_MAX_N = 512
+# backends timed end-to-end in every combo (hungarian is special-cased)
+BACKENDS = ("scipy", "auction", "auction_jit")
 
 
 class _RecordingLMO(LMOSolver):
@@ -63,50 +81,62 @@ class _RecordingLMO(LMOSolver):
         return out
 
 
+def _steady(times: list[float]):
+    """Steady-state median, EXCLUDING the first call (compile/cold)."""
+    return float(np.median(times[1:])) if len(times) > 1 else None
+
+
 def _bench_combo(n: int, budget: int, results: dict, smoke: bool) -> None:
     rng = np.random.default_rng(n + budget)
     K = n
     Pi = rng.dirichlet(np.ones(K) * 0.1, size=n)
 
     combo: dict = {"n": n, "budget": budget, "K": K, "lam": LAM}
+    combo["e2e_s"] = {}
+    combo["lmo_cold_s"] = {}
+    combo["lmo_steady_median_s"] = {}
 
-    # --- end-to-end learn_topology, scipy vs auction -----------------------
-    lmo_scipy = _RecordingLMO("scipy")
-    lmo_scipy.keep_grads = n <= HUNGARIAN_LMO_MAX_N
-    t0 = time.perf_counter()
-    res_scipy = learn_topology(Pi, budget=budget, lam=LAM, lmo=lmo_scipy)
-    t_scipy = time.perf_counter() - t0
+    traces = {}
+    lmos = {}
+    for backend in BACKENDS:
+        lmo = _RecordingLMO(backend)
+        lmo.keep_grads = backend == "scipy" and n <= HUNGARIAN_LMO_MAX_N
+        t0 = time.perf_counter()
+        res = learn_topology(Pi, budget=budget, lam=LAM, lmo=lmo)
+        combo["e2e_s"][backend] = time.perf_counter() - t0
+        combo["lmo_cold_s"][backend] = lmo.times[0]
+        combo["lmo_steady_median_s"][backend] = _steady(lmo.times)
+        traces[backend] = res.objective_trace
+        lmos[backend] = lmo
 
-    lmo_auction = _RecordingLMO("auction")
-    t0 = time.perf_counter()
-    res_auction = learn_topology(Pi, budget=budget, lam=LAM, lmo=lmo_auction)
-    t_auction = time.perf_counter() - t0
-
-    trace_maxdiff = float(
-        np.abs(res_scipy.objective_trace - res_auction.objective_trace).max()
+    combo["trace_maxdiff_auction_vs_scipy"] = float(
+        np.abs(traces["scipy"] - traces["auction"]).max()
     )
-    combo["e2e_s"] = {"scipy": t_scipy, "auction": t_auction}
-    combo["trace_maxdiff_auction_vs_scipy"] = trace_maxdiff
-    combo["lmo_cold_s"] = {
-        "scipy": lmo_scipy.times[0],
-        "auction": lmo_auction.times[0],
-    }
-    combo["lmo_warm_avg_s"] = {
-        "scipy": float(np.mean(lmo_scipy.times[1:])) if budget > 1 else None,
-        "auction": float(np.mean(lmo_auction.times[1:])) if budget > 1 else None,
-    }
+    combo["trace_maxdiff_auction_jit_vs_scipy"] = float(
+        np.abs(traces["scipy"] - traces["auction_jit"]).max()
+    )
+    # trajectory-equivalence assertion (not just a recorded number): a
+    # backend whose FW trajectory drifts from the scipy reference fails
+    # the bench -- and therefore CI's smoke tier -- loudly
+    for backend in ("auction", "auction_jit"):
+        drift = combo[f"trace_maxdiff_{backend}_vs_scipy"]
+        assert drift <= 1e-9, (
+            f"LMO trajectory drift: {backend} diverged from scipy by "
+            f"{drift:.3e} at n={n}, budget={budget}"
+        )
     combo["auction_rebid_rows_avg"] = (
-        float(np.mean(lmo_auction.rebids[1:])) if budget > 1 else None
+        float(np.mean(lmos["auction"].rebids[1:])) if budget > 1 else None
     )
     # FW overhead shared by every backend (gradient assembly, line search,
     # state updates): end-to-end minus the time spent inside the LMO.
-    fw_overhead = t_scipy - float(np.sum(lmo_scipy.times))
+    fw_overhead = combo["e2e_s"]["scipy"] - float(np.sum(lmos["scipy"].times))
     combo["fw_overhead_s"] = fw_overhead
 
     # --- the dependency-free hungarian reference ---------------------------
-    if n <= HUNGARIAN_LMO_MAX_N and lmo_scipy.grads:
+    t_auction = combo["e2e_s"]["auction"]
+    if n <= HUNGARIAN_LMO_MAX_N and lmos["scipy"].grads:
         t0 = time.perf_counter()
-        hungarian(lmo_scipy.grads[0])
+        hungarian(lmos["scipy"].grads[0])
         t_h_cold = time.perf_counter() - t0
         combo["lmo_cold_s"]["hungarian"] = t_h_cold
         combo["e2e_hungarian_est_s"] = t_h_cold * budget + fw_overhead
@@ -119,23 +149,42 @@ def _bench_combo(n: int, budget: int, results: dict, smoke: bool) -> None:
         t_h = time.perf_counter() - t0
         combo["e2e_s"]["hungarian"] = t_h
         combo["trace_maxdiff_hungarian_vs_scipy"] = float(
-            np.abs(res_scipy.objective_trace - res_h.objective_trace).max()
+            np.abs(traces["scipy"] - res_h.objective_trace).max()
         )
         combo["speedup_e2e_auction_vs_hungarian"] = t_h / t_auction
 
-    combo["speedup_e2e_auction_vs_scipy"] = t_scipy / t_auction
+    # --- headline ratios (steady state = the warm re-solve regime) --------
+    sm = combo["lmo_steady_median_s"]
+    if sm["auction_jit"] and sm["auction"]:
+        combo["speedup_steady_auction_jit_vs_auction"] = (
+            sm["auction"] / sm["auction_jit"]
+        )
+    if sm["auction_jit"] and sm["scipy"]:
+        combo["speedup_steady_auction_jit_vs_scipy"] = (
+            sm["scipy"] / sm["auction_jit"]
+        )
+    combo["speedup_e2e_auction_vs_scipy"] = combo["e2e_s"]["scipy"] / t_auction
+    combo["speedup_e2e_auction_jit_vs_scipy"] = (
+        combo["e2e_s"]["scipy"] / combo["e2e_s"]["auction_jit"]
+    )
+    combo["auto_resolves_to"] = resolve_lmo_backend("auto", n=n, budget=budget)
 
     key = f"n{n}_b{budget}"
     results[key] = combo
-    emit(
-        f"stl_fw_e2e_scipy_{key}", t_scipy * 1e6,
-        f"cold_lmo={1e3 * combo['lmo_cold_s']['scipy']:.1f}ms",
-    )
-    emit(
-        f"stl_fw_e2e_auction_{key}", t_auction * 1e6,
-        f"{combo['speedup_e2e_auction_vs_scipy']:.2f}x_vs_scipy_"
-        f"tracediff={trace_maxdiff:.1e}",
-    )
+    for backend in BACKENDS:
+        steady = sm[backend]
+        emit(
+            f"stl_fw_e2e_{backend}_{key}", combo["e2e_s"][backend] * 1e6,
+            f"cold={1e3 * combo['lmo_cold_s'][backend]:.1f}ms_"
+            f"steady={1e3 * steady:.1f}ms" if steady else "single_call",
+        )
+    if "speedup_steady_auction_jit_vs_auction" in combo:
+        emit(
+            f"stl_fw_jit_vs_numpy_auction_{key}",
+            sm["auction_jit"] * 1e6,
+            f"{combo['speedup_steady_auction_jit_vs_auction']:.2f}x_steady_"
+            f"tracediff={combo['trace_maxdiff_auction_jit_vs_scipy']:.1e}",
+        )
     if "speedup_e2e_auction_vs_hungarian" in combo:
         emit(
             f"stl_fw_e2e_hungarian_{key}", combo["e2e_s"]["hungarian"] * 1e6,
@@ -148,8 +197,33 @@ def _bench_combo(n: int, budget: int, results: dict, smoke: bool) -> None:
         )
 
 
+def _assert_backend_agreement(results: dict) -> None:
+    """Rot detector: every LMO backend must reach the same ``<P, G>``
+    objective on a fixed-seed gradient. Catches silent backend drift
+    (e.g. a quantization change that desyncs the compiled engine from
+    the numpy solvers). Raises on mismatch so CI fails loudly."""
+    rng = np.random.default_rng(1234)
+    grad = rng.normal(size=(24, 24))
+    objs = {}
+    for backend in ("scipy", "hungarian", "auction", "auction_jit"):
+        P, _ = solve_lmo(grad, backend=backend)
+        objs[backend] = float((P * grad).sum())
+    ref = objs["scipy"]
+    scale = max(1.0, abs(ref))
+    for backend, obj in objs.items():
+        assert abs(obj - ref) <= 1e-9 * scale, (
+            f"LMO backend drift: {backend} objective {obj!r} != scipy {ref!r}"
+        )
+    results["backend_agreement"] = {"objectives": objs, "max_rel_diff": max(
+        abs(o - ref) / scale for o in objs.values()
+    )}
+    emit("stl_fw_backend_agreement", 0.0,
+         f"4_backends_objdiff={results['backend_agreement']['max_rel_diff']:.1e}")
+
+
 def main(smoke: bool = False) -> None:
     results: dict = {}
+    _assert_backend_agreement(results)
     sweep = [(32, 8)] if smoke else [
         (n, b) for n in (128, 512, 1024) for b in (16, 64)
     ]

@@ -1,6 +1,19 @@
 """Core library: the paper's contribution (topology learning for D-SGD)."""
 
-from . import assignment, dcliques, dsgd, heterogeneity, mixing, stl_fw, theory, topology
+# assignment_jit is deliberately NOT imported eagerly: importing it pulls
+# in jax at module scope, and the LMO dispatch (stl_fw.LMOSolver,
+# assignment.solve_lmo) loads it lazily only when the "auction_jit"
+# backend is actually selected.
+from . import (
+    assignment,
+    dcliques,
+    dsgd,
+    heterogeneity,
+    mixing,
+    stl_fw,
+    theory,
+    topology,
+)
 from .dsgd import DSGDState, dsgd_init, dsgd_step_sharded, dsgd_step_stacked
 from .mixing import (
     BirkhoffSchedule,

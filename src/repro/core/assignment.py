@@ -548,15 +548,21 @@ def solve_lmo(
     Returns ``(P, col_of_row)`` where ``P = argmin_{P perm} <P, grad>``.
 
     ``backend`` selects the solver: ``"scipy"`` (the reference
-    ``linear_assignment``), ``"hungarian"`` (numpy O(n^3)), or
-    ``"auction"`` (epsilon-scaling auction). This function is stateless;
-    for the warm-started auction that carries dual prices across FW
-    iterations, use ``repro.core.stl_fw.LMOSolver`` (or
-    ``learn_topology(lmo="auction")``), or call ``auction_assignment``
-    directly and thread its returned ``AuctionState`` yourself.
+    ``linear_assignment``), ``"hungarian"`` (numpy O(n^3)),
+    ``"auction"`` (epsilon-scaling auction), or ``"auction_jit"`` (the
+    compiled ``lax.while_loop`` auction, ``repro.core.assignment_jit``).
+    This function is stateless; for the warm-started auctions that carry
+    dual prices across FW iterations, use
+    ``repro.core.stl_fw.LMOSolver`` (or ``learn_topology(lmo=...)``), or
+    call ``auction_assignment`` / ``auction_assignment_jit`` directly
+    and thread the returned state yourself.
     """
     if backend == "auction":
         col_of_row, _ = auction_assignment(grad)
+    elif backend == "auction_jit":
+        from .assignment_jit import auction_assignment_jit
+
+        col_of_row, _ = auction_assignment_jit(grad)
     elif backend == "hungarian":
         col_of_row = hungarian(grad)
     elif backend == "scipy":

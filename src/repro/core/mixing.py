@@ -47,8 +47,11 @@ device mesh, complete  ``mix_allreduce``      all-reduce hardware path
 graph (C-PSGD)
 =====================  =====================  ===============================
 
-``mix_stacked`` picks between (1) and (2) automatically via
-``preferred_transport`` -- the cost model ``L <= n / dense_speedup``
+``mix_stacked`` picks between (1) and (2) automatically: a measured
+autotune table first (``autotune_transport`` -- per-(n, L, P)-bucket
+timings memoized to experiments/bench/transport_autotune.json, written
+explicitly via ``transport="autotune"``), falling back to the closed
+form ``preferred_transport`` -- the cost model ``L <= n / dense_speedup``
 (gather AXPYs are memory-bound at ~L reads/element; the dense matmul
 amortizes to ~n MACs/element but runs at matmul throughput, worth
 ``dense_speedup ~ 4x`` on CPU BLAS -- a calibrated, overridable
@@ -71,6 +74,9 @@ __all__ = [
     "ravel_stack",
     "unravel_stack",
     "preferred_transport",
+    "autotune_transport",
+    "measure_transport",
+    "transport_autotune_path",
     "mix_dense",
     "mix_schedule_stacked",
     "mix_stacked",
@@ -299,6 +305,216 @@ def preferred_transport(
 
 
 # ---------------------------------------------------------------------------
+# Measured transport autotune table
+# ---------------------------------------------------------------------------
+#
+# The closed form above is a CPU-calibrated model with a documented TPU
+# caveat. The autotune table replaces the model with measurements where
+# they exist: each (hardware, n_nodes, n_atoms, P) bucket -- sizes
+# rounded up to powers of two so nearby shapes share an entry, keyed by
+# a hardware fingerprint (cpu core count / accelerator device kind, see
+# _hw_tag) so one machine's timings never apply to different hardware --
+# is timed ONCE locally (both transports, jitted, steady state) and
+# memoized to experiments/bench/transport_autotune.json. Lookups never measure;
+# measuring is explicit (``autotune_transport(measure=True)`` or
+# ``mix_stacked(transport="autotune")``), so ``transport="auto"`` stays
+# side-effect free and falls back to the closed form on unmeasured
+# buckets -- which keeps the TPU caveat honest: an unmeasured accelerator
+# uses the conservative model until someone runs the autotuner there.
+
+_AUTOTUNE_ENV = "REPRO_TRANSPORT_AUTOTUNE"
+_autotune_cache: dict[str, dict] | None = None
+_autotune_cache_path: str | None = None
+
+
+def transport_autotune_path() -> str:
+    """Location of the autotune table (override via $REPRO_TRANSPORT_AUTOTUNE)."""
+    import os
+
+    env = os.environ.get(_AUTOTUNE_ENV)
+    if env:
+        return env
+    return os.path.normpath(os.path.join(
+        os.path.dirname(__file__), "..", "..", "..",
+        "experiments", "bench", "transport_autotune.json",
+    ))
+
+
+def _pow2_up(x: int) -> int:
+    return 1 if x <= 1 else 1 << (int(x) - 1).bit_length()
+
+
+# Measuring caps the timed buffer at this many total elements (n * P):
+# both transports stream linearly in P, so the per-element winner at the
+# capped width transfers to wider buffers -- while an uncapped pow2 P at
+# LM scale (P ~ 1e9) would allocate hundreds of GiB for the synthetic
+# theta and time minutes of dense matmuls.
+_MEASURE_MAX_ELEMENTS = 1 << 24  # 64 MiB of f32
+
+
+def _hw_tag() -> str:
+    """Hardware fingerprint for autotune keys.
+
+    A measured winner is only trusted on hardware like the machine that
+    measured it: the jax backend alone is too coarse (a 2-vCPU CI
+    container and a 64-core BLAS server are both "cpu" but disagree on
+    crossovers), so CPU keys carry the core count plus the machine
+    architecture, and accelerator keys the device kind. Foreign entries
+    simply miss, falling back to the conservative closed form. The tag
+    is a heuristic, not a guarantee: two same-arch hosts with the same
+    core count but different cache/BLAS behavior still share entries --
+    re-run ``transport="autotune"`` locally when in doubt (the local
+    measurement overwrites the shipped one).
+    """
+    import os
+    import platform
+    import re
+
+    backend = jax.default_backend()
+    if backend == "cpu":
+        arch = platform.machine() or "unknown"
+        return f"cpu{os.cpu_count()}-{arch.lower()}"
+    kind = getattr(jax.devices()[0], "device_kind", backend)
+    return re.sub(r"[^A-Za-z0-9]+", "-", str(kind)).strip("-").lower()
+
+
+def _bucket_key(n_nodes: int, n_atoms: int, p: int) -> str:
+    return (
+        f"{_hw_tag()}_n{_pow2_up(n_nodes)}"
+        f"_L{_pow2_up(n_atoms)}_P{_pow2_up(p)}"
+    )
+
+
+def _load_autotune(path: str) -> dict[str, dict]:
+    global _autotune_cache, _autotune_cache_path
+    if _autotune_cache is not None and _autotune_cache_path == path:
+        return _autotune_cache
+    import json
+    import os
+
+    table: dict[str, dict] = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                table = json.load(f)
+        except (OSError, ValueError):  # unreadable table == no table
+            table = {}
+    _autotune_cache, _autotune_cache_path = table, path
+    return table
+
+
+def measure_transport(
+    n_nodes: int, n_atoms: int, p: int, *, iters: int = 5, repeats: int = 3,
+    seed: int = 0
+) -> dict:
+    """Time both stacked transports once at this bucket size (jitted,
+    steady state, synthetic data) and return the measurement record.
+
+    The timed width is capped so the synthetic buffer stays at most
+    ``_MEASURE_MAX_ELEMENTS`` (both transports are linear in P; at LM
+    scale an uncapped pow2 P would allocate hundreds of GiB). The
+    record keeps the requested ``p`` plus the ``p_measured`` actually
+    timed. Each transport is timed ``repeats`` times and the MINIMUM
+    average kept -- on throttled shared machines single timings vary
+    2-4x and would flip near-crossover buckets run to run; the min is
+    the standard noise-robust estimator of achievable throughput.
+    """
+    import time
+
+    p_measured = min(int(p), max(4096, _MEASURE_MAX_ELEMENTS // max(1, n_nodes)))
+    rng = np.random.default_rng(seed)
+    theta = jnp.asarray(rng.normal(size=(n_nodes, p_measured)), jnp.float32)
+    perms = [rng.permutation(n_nodes) for _ in range(n_atoms)]
+    coeffs = np.full(n_atoms, 1.0 / n_atoms)
+    sched = BirkhoffSchedule(
+        coeffs=tuple(float(c) for c in coeffs),
+        perms=tuple(tuple(int(x) for x in p_) for p_ in perms),
+    )
+    W = jnp.asarray(sched.to_matrix(), jnp.float32)
+
+    f_sched = jax.jit(lambda x: _mix_schedule_flat(x, sched))
+    f_dense = jax.jit(lambda x: jnp.tensordot(W, x, axes=([1], [0])))
+
+    def timed(f):
+        out = f(theta)
+        jax.block_until_ready(out)
+        best = np.inf
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = f(theta)
+            jax.block_until_ready(out)
+            best = min(best, (time.perf_counter() - t0) / iters * 1e6)
+        return best
+
+    schedule_us = timed(f_sched)
+    dense_us = timed(f_dense)
+    return {
+        "n_nodes": n_nodes,
+        "n_atoms": n_atoms,
+        "p": p,
+        "p_measured": p_measured,
+        "schedule_us": schedule_us,
+        "dense_us": dense_us,
+        "winner": "schedule" if schedule_us <= dense_us else "dense",
+        "backend": jax.default_backend(),
+        "hw": _hw_tag(),
+    }
+
+
+def autotune_transport(
+    n_nodes: int,
+    n_atoms: int,
+    p: int,
+    *,
+    measure: bool = False,
+    path: str | None = None,
+    dense_speedup: float = DENSE_THROUGHPUT_ADVANTAGE,
+) -> str:
+    """``"schedule"`` or ``"dense"`` from the measured autotune table.
+
+    Looks up the power-of-two bucket of ``(n_nodes, n_atoms, p)`` in
+    ``transport_autotune_path()``. On a hit, returns the measured
+    winner. On a miss: with ``measure=True`` times both transports at
+    the bucket-rounded sizes, memoizes the record, and returns its
+    winner; otherwise falls back to the closed-form
+    :func:`preferred_transport` (the conservative model -- unmeasured
+    hardware keeps the documented crossover).
+    """
+    global _autotune_cache
+    import json
+    import os
+
+    path = path or transport_autotune_path()
+    key = _bucket_key(n_nodes, n_atoms, p)
+    table = _load_autotune(path)
+    entry = table.get(key)
+    if entry is not None and entry.get("winner") in ("schedule", "dense"):
+        return entry["winner"]
+    if not measure:
+        return preferred_transport(n_nodes, n_atoms, dense_speedup)
+
+    entry = measure_transport(_pow2_up(n_nodes), _pow2_up(n_atoms), _pow2_up(p))
+    table = dict(table)
+    table[key] = entry
+    # Persist only into a directory that already exists (the checkout's
+    # experiments/bench/, or wherever $REPRO_TRANSPORT_AUTOTUNE points
+    # after the caller created it): an installed package must not grow a
+    # junk `experiments/` tree inside the interpreter prefix just
+    # because its default relative path resolved somewhere writable.
+    try:
+        if os.path.isdir(os.path.dirname(path)):
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(table, f, indent=2, sort_keys=True)
+            os.replace(tmp, path)
+    except OSError:  # read-only install: keep the measurement in memory
+        pass
+    _autotune_cache = table
+    return entry["winner"]
+
+
+# ---------------------------------------------------------------------------
 # Transports
 # ---------------------------------------------------------------------------
 
@@ -423,28 +639,48 @@ def mix_stacked(
     """Unified stacked-mixing entry point with automatic transport choice.
 
     ``transport``:
-      * ``"auto"``     -- ``preferred_transport`` cost model when both a
-                          schedule and a W are usable, else whichever is
-                          available. ``dense_speedup`` tunes the cost
-                          model's crossover for the local hardware (see
-                          ``preferred_transport``).
+      * ``"auto"``     -- measured autotune-table winner for this
+                          (n, L, P) bucket when a measurement exists
+                          (``autotune_transport``; lookup only, never
+                          times anything), else the ``preferred_transport``
+                          closed form, when both a schedule and a W are
+                          usable -- else whichever is available.
+                          ``dense_speedup`` tunes the closed-form
+                          fallback's crossover.
+      * ``"autotune"`` -- like ``"auto"``, but on a table miss time both
+                          transports once at this bucket and memoize the
+                          result to ``transport_autotune_path()``.
       * ``"dense"``    -- force the einsum/matmul path (W required, or
                           densified from the schedule per call -- pass a
                           precomputed W on hot paths).
       * ``"schedule"`` -- force the Birkhoff gather path (schedule required).
     """
-    if transport not in ("auto", "dense", "schedule"):
+    if transport not in ("auto", "autotune", "dense", "schedule"):
         raise ValueError(f"unknown transport {transport!r}")
-    if transport == "auto":
+    if transport in ("auto", "autotune"):
+        measure = transport == "autotune"
         if schedule is None:
             transport = "dense"
         elif W is None:
+            # no usable W: the dense path would densify the schedule per
+            # call (O(L n^2) + transfer) -- a cost the measurement does
+            # not include -- so never let a memoized "dense" win here
             transport = "schedule"
         else:
             # identity atoms fold into a free scale in the schedule path
             # (no gather), so only communication atoms count as cost.
-            transport = preferred_transport(
-                schedule.n_nodes, schedule.n_communication_atoms, dense_speedup
+            leaves = jax.tree_util.tree_leaves(params_stack)
+            n_nodes = schedule.n_nodes
+            p_total = sum(
+                int(np.prod(leaf.shape[1:], dtype=np.int64)) if leaf.ndim > 1 else 1
+                for leaf in leaves
+            )
+            transport = autotune_transport(
+                n_nodes,
+                schedule.n_communication_atoms,
+                p_total,
+                measure=measure,
+                dense_speedup=dense_speedup,
             )
     if transport == "schedule":
         if schedule is None:

@@ -185,15 +185,17 @@ def learn_topology(
         recomputation. ``"reference"`` is the direct textbook evaluation;
         both produce the same traces to ~1e-12 (fp reassociation only).
       lmo: assignment solver for the linear minimization oracle.
-        ``"auto"`` (default) resolves to ``"scipy"`` when scipy is
-        importable and ``"auction"`` otherwise; ``"scipy"`` /
-        ``"hungarian"`` are the cold exact references; ``"auction"`` is
-        the warm-started epsilon-scaling auction whose dual prices are
-        carried across FW iterations (contracted by ``1 - gamma``
-        alongside W). All backends solve the same 1e-12-quantized
-        gradient exactly, so ``<P, G>`` objective values agree to far
-        better than 1e-9; assignments (and hence trajectories) may only
-        differ where the LMO has exactly tied optima.
+        ``"auto"`` (default) resolves to the measured winner for
+        ``(n, budget)`` -- see :func:`resolve_lmo_backend`. ``"scipy"``
+        / ``"hungarian"`` are the cold exact references; ``"auction"``
+        is the warm-started epsilon-scaling numpy auction and
+        ``"auction_jit"`` its compiled ``lax.while_loop`` twin
+        (``repro.core.assignment_jit``), both carrying dual prices
+        across FW iterations (contracted by ``1 - gamma`` alongside W).
+        All backends solve the same 1e-12-quantized gradient exactly,
+        so ``<P, G>`` objective values agree to far better than 1e-9;
+        assignments (and hence trajectories) may only differ where the
+        LMO has exactly tied optima.
 
     Returns:
       STLFWResult with the learned W, its Birkhoff decomposition and traces.
@@ -204,6 +206,7 @@ def learn_topology(
     if not np.allclose(Pi.sum(axis=1), 1.0, atol=1e-6):
         raise ValueError("rows of Pi must sum to 1 (class proportions)")
     solver = lmo if isinstance(lmo, LMOSolver) else LMOSolver(lmo)
+    solver.resolve(n=Pi.shape[0], budget=budget)
     if method == "incremental":
         return _learn_topology_incremental(Pi, budget, lam, dedup_atoms, solver)
     if method == "reference":
@@ -230,30 +233,87 @@ def _merge_atom(
     coeffs.append(gamma)
 
 
-def resolve_lmo_backend(lmo: str) -> str:
+def _jit_amortizes(n: int | None, budget: int | None) -> bool:
+    """Does ``auction_jit``'s one-time compile pay for itself here?
+
+    Measured on this container (benchmarks/bench_stl_fw.py): the
+    compiled auction's steady-state warm solve is ~2-3x faster than the
+    numpy auction's (n=128: 6 vs 18 ms, n=512: 35 vs 91 ms, n=1024:
+    172 vs 304 ms) but tracing + compiling the engine costs ~1-3 s
+    per n. The breakpoints below are where ``budget`` warm re-solves
+    win that back. ``budget=None`` means an open-ended solver (online
+    topology re-learning); assume amortization for n >= 512.
+    """
+    if n is None:
+        return False
+    if budget is None:
+        return n >= 512
+    return (
+        (n >= 1024 and budget >= 8)
+        or (n >= 512 and budget >= 24)
+        or (n >= 256 and budget >= 64)
+        or (n >= 128 and budget >= 128)
+    )
+
+
+def resolve_lmo_backend(lmo: str, n: int | None = None, budget: int | None = None) -> str:
     """Resolve the ``lmo=`` argument of :func:`learn_topology`.
 
-    ``"auto"`` picks ``"scipy"`` when scipy is importable (its C
-    Jonker-Volgenant solver is the fastest exact oracle on CPU) and
-    ``"auction"`` otherwise -- the warm-started auction beats the pure
-    python ``hungarian`` fallback by ~2 orders of magnitude at n >= 128,
-    so scipy-less deployments should never see the O(n^3) python loop.
+    ``"auto"`` picks the measured winner for the problem shape
+    (re-benchmarked with the compiled auction, BENCH_stl_fw.json):
+
+    * ``"scipy"`` when importable -- the honest finding stands from
+      PR 2: scipy's C Jonker-Volgenant remains the fastest steady-state
+      LMO on this CPU at every measured n (the compiled auction got
+      within ~1.7-1.9x at n >= 512, from 4-10x behind for the numpy
+      auction, but did not cross over);
+    * else ``"auction_jit"`` when jax is importable and the problem is
+      big enough to amortize the one-time compile
+      (:func:`_jit_amortizes` -- ~3x faster warm solves than the numpy
+      auction, ~1.5-3 s compile per n);
+    * else ``"auction"`` -- the warm-started numpy auction still beats
+      the pure python ``hungarian`` by ~2 orders of magnitude at
+      n >= 128, so scipy-less deployments never see the O(n^3) python
+      loop.
+
+    With ``n=None`` (shape unknown at resolve time) ``"auto"`` keeps the
+    conservative scipy-else-auction rule; :class:`LMOSolver` defers its
+    resolution to the first gradient when constructed with ``"auto"``.
 
     An explicit ``"scipy"`` without scipy installed resolves to
     ``"hungarian"`` -- that is what ``linear_assignment`` would actually
     run, and the resolved name is what ``STLFWResult.lmo_backend``
     reports, so the result never claims a solver that did not execute.
+    An explicit ``"auction_jit"`` without jax resolves to ``"auction"``
+    for the same reason.
     """
     from . import assignment as _assignment
 
     have_scipy = _assignment._scipy_lsa is not None
+    have_jax = _have_jax()
     if lmo == "auto":
-        return "scipy" if have_scipy else "auction"
+        if have_scipy:
+            return "scipy"
+        if have_jax and _jit_amortizes(n, budget):
+            return "auction_jit"
+        return "auction"
     if lmo == "scipy" and not have_scipy:
         return "hungarian"
-    if lmo in ("scipy", "hungarian", "auction"):
+    if lmo == "auction_jit" and not have_jax:
+        return "auction"
+    if lmo in ("scipy", "hungarian", "auction", "auction_jit"):
         return lmo
-    raise ValueError(f"unknown LMO backend {lmo!r}; expected auto|scipy|hungarian|auction")
+    raise ValueError(
+        f"unknown LMO backend {lmo!r}; expected auto|scipy|hungarian|auction|auction_jit"
+    )
+
+
+def _have_jax() -> bool:
+    try:  # pragma: no cover - import probing
+        import jax  # noqa: F401
+    except Exception:  # pragma: no cover
+        return False
+    return True
 
 
 class LMOSolver:
@@ -269,23 +329,50 @@ class LMOSolver:
     identical traces. The same grid doubles as the auction backend's
     exactness certificate (see ``repro.core.assignment``).
 
-    Warm start: with ``backend="auction"`` the dual prices of each solve
-    seed the next one. The FW update contracts the gradient by
-    ``(1 - gamma)`` before adding the new atom's contribution;
-    :meth:`contract` applies the matching contraction to the carried
-    prices (eps-CS is invariant under joint positive scaling), so only
-    the genuinely-changed entries force re-bidding.
+    Warm start: with ``backend="auction"`` or ``"auction_jit"`` the dual
+    prices of each solve seed the next one. The FW update contracts the
+    gradient by ``(1 - gamma)`` before adding the new atom's
+    contribution; :meth:`contract` applies the matching contraction to
+    the carried prices (eps-CS is invariant under joint positive
+    scaling), so only the genuinely-changed entries force re-bidding.
+    For ``"auction_jit"`` the prices stay device-resident and the
+    contraction is deferred into the next compiled solve.
+
+    Auto resolution: ``backend="auto"`` is resolved against the problem
+    shape -- either eagerly via :meth:`resolve` (``learn_topology`` calls
+    it with ``(n, budget)``) or lazily at the first gradient.
     """
 
     def __init__(self, backend: str = "auto"):
-        self.backend = resolve_lmo_backend(backend)
-        self.state = None  # AuctionState when backend == "auction"
+        # validate eagerly (unknown names must fail fast) but keep "auto"
+        # unresolved until a problem shape is known
+        self.backend = backend if backend == "auto" else resolve_lmo_backend(backend)
+        self.state = None  # AuctionState / AuctionJitState for auction backends
+
+    def resolve(self, n: int | None = None, budget: int | None = None) -> str:
+        """Finalize an ``"auto"`` backend for the given problem shape."""
+        if self.backend == "auto":
+            self.backend = resolve_lmo_backend("auto", n=n, budget=budget)
+        return self.backend
 
     def __call__(self, grad: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        grad = np.asarray(grad, dtype=np.float64)
+        if self.backend == "auto":
+            self.resolve(n=grad.shape[0] if grad.ndim == 2 else None)
+        if self.backend == "auction_jit":
+            # the compiled engine applies the identical grid snap inside
+            # its fused device prepass -- quantizing here would add a
+            # redundant O(n^2) host pass per FW iteration
+            from .assignment_jit import auction_assignment_jit
+
+            col_of_row, self.state = auction_assignment_jit(
+                grad, self.state, validate=False
+            )
+            return assignment_to_permutation(col_of_row), col_of_row
         # Same grid the auction derives its exactness certificate from:
         # quantizing here makes the snap a no-op inside auction_assignment
         # and keeps every backend solving the identical matrix.
-        grad, _ = _quantize(np.asarray(grad, dtype=np.float64), AUCTION_REL_GRID)
+        grad, _ = _quantize(grad, AUCTION_REL_GRID)
         if self.backend == "auction":
             col_of_row, self.state = auction_assignment(grad, self.state)
         elif self.backend == "hungarian":

@@ -54,6 +54,62 @@ class TrainSetup:
     def abstract_params(self) -> PyTree:
         return jax.eval_shape(self.init_params, jax.random.PRNGKey(0))
 
+    def multi_step_fn(self, rollout: str = "scan") -> Callable:
+        """Multi-step train fn: ``(params, opt_state, batches) -> (params,
+        opt_state, losses)`` where every ``batches`` leaf carries a leading
+        time axis ``(k, ...)`` of per-step batches.
+
+        ``rollout="scan"`` compiles all ``k`` inner steps into one
+        ``jax.lax.scan`` whose carry holds the (mixed) parameters and the
+        opt/step state -- so ``gossip_every`` off-steps, the grad-accum
+        microbatch scan, and the Birkhoff ppermute mixing all execute
+        with no per-step Python dispatch and no host sync inside the
+        segment (the per-step losses come back as one ``(k,)`` array).
+        ``rollout="loop"`` dispatches the same jitted ``train_step`` per
+        iteration from Python -- same trace per step, bit-identical
+        trajectories (verified in tests/test_distributed.py) -- kept for
+        debugging and A/B benchmarking, exactly like the simulator
+        drivers in ``train/trainer.py``.
+
+        Jit the scan variant (``jax.jit(setup.multi_step_fn())``) and
+        feed it segments of ``k`` steps between eval points.
+        """
+        if rollout == "scan":
+            def multi_step(params, momentum_state, batches):
+                def body(carry, batch_t):
+                    p, m = carry
+                    p, m, loss = self.train_step(p, m, batch_t)
+                    return (p, m), loss
+
+                (params, momentum_state), losses = jax.lax.scan(
+                    body, (params, momentum_state), batches
+                )
+                return params, momentum_state, losses
+
+            return multi_step
+        if rollout == "loop":
+            def multi_step(params, momentum_state, batches):
+                if self._jitted_step is None:
+                    self._jitted_step = jax.jit(self.train_step)
+                k = jax.tree_util.tree_leaves(batches)[0].shape[0]
+                losses = []
+                for t in range(k):
+                    batch_t = jax.tree_util.tree_map(lambda x: x[t], batches)
+                    params, momentum_state, loss = self._jitted_step(
+                        params, momentum_state, batch_t
+                    )
+                    losses.append(loss)
+                return params, momentum_state, jnp.stack(losses)
+
+            return multi_step
+        raise ValueError(f"unknown rollout {rollout!r}")
+
+    # cached jax.jit of train_step for the "loop" rollout (recompiling it
+    # per multi_step call would defeat the A/B comparison)
+    _jitted_step: Callable | None = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+
 
 def gossip_fn(
     mesh: Mesh, schedule: BirkhoffSchedule | None, axis: str, param_specs: PyTree

@@ -124,6 +124,52 @@ def test_gossip_every_k_amortization():
     assert "GOSSIP_EVERY_OK" in out
 
 
+def test_multi_step_scan_bitwise_equals_loop():
+    """The scanned multi-step train fn (lax.scan over k inner steps, mix in
+    the carry, gossip_every + grad-accum inside) must be bitwise-equivalent
+    to stepping the same jitted train_step from Python."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.compat import AxisType, make_compat_mesh, set_mesh, shard_map
+        from repro.configs import get_smoke_config
+        from repro.core import topology as T
+        from repro.core.mixing import schedule_from_matrix
+        from repro.train.lm_trainer import make_train_setup
+
+        mesh = make_compat_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+        cfg = get_smoke_config("qwen3-0.6b")
+        sched = schedule_from_matrix(T.ring(4))
+        setup = make_train_setup(cfg, mesh, mode="dsgd", schedule=sched,
+                                 lr=1e-2, momentum=0.9, gossip_every=2,
+                                 grad_accum=2)
+        sh = jax.tree.map(lambda s: NamedSharding(mesh, s), setup.param_specs,
+                          is_leaf=lambda x: isinstance(x, P))
+        k = 4
+        with set_mesh(mesh):
+            params = jax.jit(setup.init_params, out_shardings=sh)(jax.random.PRNGKey(0))
+            toks = jax.random.randint(jax.random.PRNGKey(1), (k, 4, 4, 32), 0, cfg.vocab_size)
+            batches = {"tokens": toks, "labels": toks}
+            zeros_m = jax.tree.map(jnp.zeros_like, params)
+            opt = {"step": jnp.zeros((), jnp.int32), "m": zeros_m}
+
+            scan_fn = jax.jit(setup.multi_step_fn("scan"))
+            p_scan, opt_scan, loss_scan = scan_fn(params, opt, batches)
+
+            loop_fn = setup.multi_step_fn("loop")
+            p_loop, opt_loop, loss_loop = loop_fn(params, opt, batches)
+
+        for a, b in zip(jax.tree.leaves(p_scan), jax.tree.leaves(p_loop)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), "params diverged"
+        for a, b in zip(jax.tree.leaves(opt_scan), jax.tree.leaves(opt_loop)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), "opt state diverged"
+        assert np.array_equal(np.asarray(loss_scan), np.asarray(loss_loop)), "losses"
+        assert int(opt_scan["step"]) == k
+        print("MULTI_STEP_BITWISE_OK", [float(x) for x in np.asarray(loss_scan)])
+    """)
+    assert "MULTI_STEP_BITWISE_OK" in out
+
+
 def test_fsdp_step_matches_loss_of_dsgd_complete():
     """fsdp (C-PSGD) and dsgd-with-complete-graph start from the same init
     and identical data => identical first-step loss."""

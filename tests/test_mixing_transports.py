@@ -228,3 +228,60 @@ def test_classification_scan_matches_loop_trace():
     la = run_classification(X, y, idx, T.ring(8), rollout="scan", **kwargs)
     lb = run_classification(X, y, idx, T.ring(8), rollout="loop", **kwargs)
     assert la.history == lb.history
+
+
+# ---------------------------------------------------------------------------
+# measured transport autotune table
+# ---------------------------------------------------------------------------
+
+def test_autotune_transport_fallback_and_memoize(tmp_path, monkeypatch):
+    from repro.core import mixing as M
+
+    path = str(tmp_path / "transport_autotune.json")
+    monkeypatch.setenv("REPRO_TRANSPORT_AUTOTUNE", path)
+    M._autotune_cache = None  # drop any table cached from other tests
+
+    # miss without measure => closed-form fallback, nothing written
+    assert M.autotune_transport(64, 4, 512) == M.preferred_transport(64, 4)
+    assert M.autotune_transport(64, 60, 512) == M.preferred_transport(64, 60)
+    assert not os.path.exists(path)
+
+    # miss with measure => record written at the power-of-two bucket,
+    # keyed by a hardware fingerprint so one machine's measurements
+    # never decide transports on different hardware
+    w = M.autotune_transport(60, 3, 500, measure=True)
+    assert w in ("schedule", "dense")
+    import json
+    key = M._bucket_key(60, 3, 500)
+    assert key.endswith("_n64_L4_P512") and key.startswith(M._hw_tag())
+    table = json.load(open(path))
+    assert key in table
+    for k in ("schedule_us", "dense_us", "winner", "backend", "hw"):
+        assert k in table[key]
+
+    # same bucket now resolves from the table even when the closed form
+    # would disagree (force disagreement via an absurd dense_speedup)
+    forced = M.autotune_transport(64, 4, 512, dense_speedup=1e9)
+    assert forced == w
+    M._autotune_cache = None  # don't leak the tmp table to other tests
+
+
+def test_mix_stacked_autotune_transport_matches_dense(tmp_path, monkeypatch):
+    from repro.core import mixing as M
+
+    monkeypatch.setenv("REPRO_TRANSPORT_AUTOTUNE", str(tmp_path / "t.json"))
+    M._autotune_cache = None
+    rng = np.random.default_rng(7)
+    n = 12
+    W = T.ring(n)
+    sched = M.schedule_from_matrix(W)
+    params = {"w": jnp.asarray(rng.normal(size=(n, 96)), jnp.float32),
+              "b": jnp.asarray(rng.normal(size=(n, 7)), jnp.float32)}
+    got = mix_stacked(params, W=jnp.asarray(W, jnp.float32), schedule=sched,
+                      transport="autotune")
+    want = mix_dense(params, jnp.asarray(W, jnp.float32))
+    for k in params:
+        np.testing.assert_allclose(
+            np.asarray(got[k]), np.asarray(want[k]), atol=1e-5
+        )
+    M._autotune_cache = None
