@@ -1,0 +1,232 @@
+"""Online topology adaptation benchmarks: the subsystem's three headline
+claims, measured (and asserted) rather than asserted in prose.
+
+1. **Warm refresh latency** -- at n=512/budget=64 (the ISSUE 4 acceptance
+   point), a warm ``TopologyRefresher.refresh`` (previous Birkhoff atoms
+   + persistent LMO duals + 1/4-budget cap + duality-gap stop) versus a
+   cold ``learn_topology`` at full budget, under repeated abrupt
+   node-permutation drifts. Steady-state MEDIANS over the drift rounds;
+   the non-smoke run asserts the >= 3x acceptance bar and records the
+   refreshed-vs-cold objective honestly (the warm solve's extra atom
+   capacity usually makes it slightly BETTER, not worse).
+   Measured on this 2-vCPU container: ~3.9x (cold ~3.2 s, warm
+   ~0.84 s; the warm solve always hits its 16-iteration cap because a
+   full node permutation relocates the optimum -- milder drifts stop
+   earlier on the gap certificate).
+
+2. **Post-drift convergence recovery** -- the abrupt label-swap scenario
+   on the Section 6.1 mean-estimation task: frozen-W vs oracle-W
+   (cold-solved on the true post-drift Pi, swapped exactly at the drift
+   step) vs the full online pipeline (streaming Pi_hat -> drift detector
+   -> warm refresh -> hot swap), all three on the SAME precomputed
+   observation stream at equal iteration count. Recovery of the
+   frozen->oracle error gap is reported in log space (strict: compares
+   convergence floors) and linear space; the non-smoke run asserts
+   log-recovery >= 0.8 (acceptance criterion a).
+
+3. **Zero retraces** -- every online run asserts
+   ``result["n_traces"] == 1``: the scanned rollout is compiled once
+   and schedule hot-swaps reach it as data. This assertion runs in
+   --smoke too, so CI catches any regression that turns a swap back
+   into a retrace (acceptance criterion c).
+
+Writes experiments/bench/BENCH_online.json.
+"""
+
+import json
+import os
+import time
+
+import numpy as np
+
+from .common import emit, result_dir
+from repro.core.mixing import schedule_from_result, schedule_to_arrays
+from repro.core.stl_fw import learn_topology
+from repro.data.drift import AbruptLabelSwap, labels_stream
+from repro.data.synthetic import mean_estimation_clusters
+from repro.online import (
+    OnlineTopologyController,
+    RefreshConfig,
+    StreamingPiEstimator,
+    TopologyRefresher,
+)
+from repro.train.trainer import run_mean_estimation
+
+LAM = 0.1
+
+
+def _bench_refresh_speed(results: dict, smoke: bool) -> None:
+    """Warm refresh vs cold solve under repeated abrupt drifts."""
+    n, K, budget = (32, 8, 8) if smoke else (512, 64, 64)
+    refresh_budget = max(4, budget // 4)
+    rounds = 3 if smoke else 5
+    rng = np.random.default_rng(0)
+    Pi0 = rng.dirichlet(0.1 * np.ones(K), size=n)
+
+    t0 = time.perf_counter()
+    res0 = learn_topology(Pi0, budget=budget, lam=LAM)
+    t_initial = time.perf_counter() - t0
+    ref = TopologyRefresher(res0, RefreshConfig(budget=refresh_budget, lam=LAM))
+
+    colds, warms, warm_iters, obj_pairs = [], [], [], []
+    Pi_t = Pi0
+    for _ in range(rounds):
+        Pi_t = Pi_t[rng.permutation(n)]  # abrupt node-permutation drift
+        t0 = time.perf_counter()
+        cold = learn_topology(Pi_t, budget=budget, lam=LAM)
+        colds.append(time.perf_counter() - t0)
+        warm = ref.refresh(Pi_t)
+        warms.append(ref.last_refresh_s)
+        warm_iters.append(ref.last_iters)
+        obj_pairs.append(
+            (float(cold.objective_trace[-1]), float(warm.objective_trace[-1]))
+        )
+
+    cold_med, warm_med = float(np.median(colds)), float(np.median(warms))
+    speedup = cold_med / warm_med
+    results["refresh_speed"] = {
+        "n": n, "K": K, "budget": budget, "refresh_budget": refresh_budget,
+        "lam": LAM, "rounds": rounds,
+        "initial_cold_s": t_initial,
+        "gap_ref": ref.gap_ref,
+        "cold_s": colds, "warm_s": warms,
+        "cold_median_s": cold_med, "warm_median_s": warm_med,
+        "speedup_warm_vs_cold": speedup,
+        "warm_iters": warm_iters,
+        "l_max": ref.l_max,
+        "objective_cold_vs_warm": obj_pairs,
+        # honesty note: warm objectives benefit from l_max > budget+1 atom
+        # capacity; the comparison point is "topology you actually deploy"
+        "warm_objective_worse_than_cold": max(
+            w - c for c, w in obj_pairs
+        ),
+    }
+    emit(
+        f"online_refresh_n{n}_b{budget}", warm_med * 1e6,
+        f"{speedup:.2f}x_vs_cold_{cold_med * 1e3:.0f}ms_iters={warm_iters}",
+    )
+    if not smoke:
+        assert speedup >= 3.0, (
+            f"acceptance (b) failed: warm refresh only {speedup:.2f}x faster "
+            f"than cold at n={n}/budget={budget}"
+        )
+
+
+def _bench_recovery_and_retrace(results: dict, smoke: bool) -> None:
+    """Abrupt label-swap: frozen vs oracle vs online-refreshed D-SGD."""
+    if smoke:
+        n, K, steps, seg, t_drift, budget = 12, 4, 120, 10, 40, 4
+    else:
+        n, K, steps, seg, t_drift, budget = 64, 8, 600, 20, 200, 8
+    lam, lr, batch, beta = 0.5, 0.05, 4, 0.2
+    task = mean_estimation_clusters(n_nodes=n, K=K, m=5.0, sigma_tilde2=1.0)
+    Pi0 = np.eye(K)[np.arange(n) % K].astype(float)
+    # seeded random node permutation (the half-rotation default is a
+    # symmetry of cyclic one-hot Pi -- see AbruptLabelSwap docstring)
+    perm = np.random.default_rng(11).permutation(n)
+    scenario = AbruptLabelSwap(Pi0, t_drift=t_drift, node_perm=perm)
+    labels = labels_stream(scenario, steps, batch, seed=0)
+    means = np.asarray(task.cluster_means)
+    zs = means[labels] + np.sqrt(task.sigma_tilde2) * np.random.default_rng(
+        1
+    ).normal(size=labels.shape)
+
+    res0 = learn_topology(Pi0, budget=budget, lam=lam)
+    oracle_res = learn_topology(scenario.Pi(t_drift), budget=budget, lam=lam)
+    ref = TopologyRefresher(res0, RefreshConfig(budget=budget, lam=lam))
+    sa0 = schedule_to_arrays(schedule_from_result(res0), ref.l_max)
+    sa_oracle = schedule_to_arrays(schedule_from_result(oracle_res), ref.l_max)
+
+    def run(hook):
+        return run_mean_estimation(
+            task, None, steps=steps, lr=lr, batch=batch, seed=2,
+            schedule=sa0, zs=zs, on_segment=hook, segment_len=seg,
+        )
+
+    out_frozen = run(None)
+
+    # first segment boundary at/after the drift step (robust to seg
+    # values that don't divide t_drift -- an exact-match hook would
+    # silently never swap and the oracle arm would measure frozen-W)
+    oracle_done = {"swapped": False}
+
+    def oracle_hook(t):
+        if not oracle_done["swapped"] and t >= t_drift - 1:
+            oracle_done["swapped"] = True
+            return sa_oracle
+        return None
+
+    out_oracle = run(oracle_hook)
+    assert oracle_done["swapped"], "oracle arm never swapped -- check seg/t_drift"
+
+    ctl = OnlineTopologyController(
+        ref, estimator=StreamingPiEstimator(n, K, beta=beta, init=Pi0)
+    )
+    fed = {"t": 0}
+
+    def online_hook(t):
+        while fed["t"] <= t:
+            ctl.observe(labels[fed["t"]])
+            fed["t"] += 1
+        return ctl.on_segment(t)
+
+    out_online = run(online_hook)
+
+    # acceptance (c): swaps reached the compiled rollout as data -- the
+    # scan traced exactly once per run, drift or no drift. Asserted in
+    # smoke too: this is the CI jit-cache-miss detector.
+    for name, out in (("frozen", out_frozen), ("oracle", out_oracle),
+                      ("online", out_online)):
+        assert out["n_traces"] == 1, (
+            f"hot-swap retraced the rollout in the {name} run: "
+            f"n_traces={out['n_traces']}"
+        )
+    assert ref.n_refreshes >= 1, "drift never detected -- no swap exercised"
+    assert out_online["swaps"], "refresh fired but no schedule swap landed"
+
+    tail = slice(-max(10, steps // 12), None)
+    e_frozen = float(np.median(out_frozen["mean_sq_error"][tail]))
+    e_oracle = float(np.median(out_oracle["mean_sq_error"][tail]))
+    e_online = float(np.median(out_online["mean_sq_error"][tail]))
+    log_rec = (np.log(e_frozen) - np.log(e_online)) / (
+        np.log(e_frozen) - np.log(e_oracle)
+    )
+    lin_rec = (e_frozen - e_online) / (e_frozen - e_oracle)
+    results["recovery"] = {
+        "n": n, "K": K, "steps": steps, "segment_len": seg,
+        "t_drift": t_drift, "budget": budget, "lam": lam, "lr": lr,
+        "batch": batch, "estimator_beta": beta,
+        "err_frozen": e_frozen, "err_oracle": e_oracle, "err_online": e_online,
+        "recovery_log": float(log_rec), "recovery_linear": float(lin_rec),
+        "n_refreshes": ref.n_refreshes,
+        "swap_steps": out_online["swaps"],
+        "detector_events": ctl.events[-6:],
+        "n_traces": {"frozen": out_frozen["n_traces"],
+                     "oracle": out_oracle["n_traces"],
+                     "online": out_online["n_traces"]},
+    }
+    emit(
+        f"online_recovery_n{n}", 0.0,
+        f"log={log_rec:.3f}_lin={lin_rec:.3f}_refreshes={ref.n_refreshes}"
+        f"_retraces=0",
+    )
+    if not smoke:
+        assert log_rec >= 0.8, (
+            f"acceptance (a) failed: online refresh recovered only "
+            f"{log_rec:.3f} of the frozen->oracle gap (log space)"
+        )
+
+
+def main(smoke: bool = False) -> None:
+    results: dict = {"smoke": smoke}
+    _bench_refresh_speed(results, smoke)
+    _bench_recovery_and_retrace(results, smoke)
+    os.makedirs(result_dir(), exist_ok=True)
+    path = os.path.join(result_dir(), "BENCH_online.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    emit("bench_online_json", 0.0, path)
+
+
+if __name__ == "__main__":
+    main()

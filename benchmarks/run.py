@@ -21,6 +21,7 @@ from . import (
     bench_fig2,
     bench_kernels,
     bench_mixing,
+    bench_online,
     bench_stl_fw,
     bench_tables,
     bench_theory,
@@ -36,6 +37,7 @@ BENCHES = {
     "theory": bench_theory.main,
     "kernels": bench_kernels.main,
     "mixing": bench_mixing.main,
+    "online": bench_online.main,
     "stl_fw": bench_stl_fw.main,
 }
 

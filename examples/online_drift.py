@@ -1,0 +1,127 @@
+"""Online topology adaptation end-to-end: drift -> detect -> warm refresh.
+
+The Section 6.1 mean-estimation task with an abrupt label swap halfway
+through training. Three D-SGD runs on the SAME observation stream:
+
+* frozen    -- the pre-drift STL-FW topology, never updated;
+* oracle    -- a cold-solved topology on the true post-drift Pi, swapped
+               in at exactly the drift step (what a clairvoyant would do);
+* online    -- the repro.online pipeline: streaming Pi_hat from minibatch
+               labels, drift detector on the Prop.-2 heterogeneity proxy,
+               warm STL-FW refresh, zero-retrace schedule hot-swap.
+
+    PYTHONPATH=src python examples/online_drift.py --nodes 32 --steps 300
+
+Prints the detector's event log and the final error of each run. See
+docs/online_adaptation.md for the walk-through.
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import learn_topology
+from repro.core.mixing import schedule_from_result, schedule_to_arrays
+from repro.data.drift import AbruptLabelSwap, labels_stream
+from repro.data.synthetic import mean_estimation_clusters
+from repro.online import (
+    OnlineTopologyController,
+    RefreshConfig,
+    StreamingPiEstimator,
+    TopologyRefresher,
+)
+from repro.train.trainer import run_mean_estimation
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=32)
+    ap.add_argument("--classes", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--budget", type=int, default=8)
+    ap.add_argument("--segment", type=int, default=20)
+    args = ap.parse_args()
+    n, K, steps = args.nodes, args.classes, args.steps
+    t_drift, lam, lr, batch = steps // 3, 0.5, 0.05, 4
+
+    task = mean_estimation_clusters(n_nodes=n, K=K, m=5.0, sigma_tilde2=1.0)
+    Pi0 = np.eye(K)[np.arange(n) % K].astype(float)
+    scenario = AbruptLabelSwap(
+        Pi0, t_drift=t_drift, node_perm=np.random.default_rng(11).permutation(n)
+    )
+    labels = labels_stream(scenario, steps, batch, seed=0)
+    means = np.asarray(task.cluster_means)
+    zs = means[labels] + np.random.default_rng(1).normal(size=labels.shape)
+
+    print(f"learning the initial topology (n={n}, budget={args.budget})...")
+    res0 = learn_topology(Pi0, budget=args.budget, lam=lam)
+    oracle = learn_topology(scenario.Pi(t_drift), budget=args.budget, lam=lam)
+    ref = TopologyRefresher(res0, RefreshConfig(budget=args.budget, lam=lam))
+    sa0 = schedule_to_arrays(schedule_from_result(res0), ref.l_max)
+    sa_oracle = schedule_to_arrays(schedule_from_result(oracle), ref.l_max)
+
+    def run(hook):
+        return run_mean_estimation(
+            task, None, steps=steps, lr=lr, batch=batch, seed=2,
+            schedule=sa0, zs=zs, on_segment=hook, segment_len=args.segment,
+        )
+
+    print(f"training 3x{steps} D-SGD steps (drift at t={t_drift})...")
+    out_frozen = run(None)
+
+    # swap at the first segment boundary at/after the drift -- robust to
+    # --segment values that don't divide t_drift
+    oracle_done = {"swapped": False}
+
+    def oracle_hook(t):
+        if not oracle_done["swapped"] and t >= t_drift - 1:
+            oracle_done["swapped"] = True
+            return sa_oracle
+        return None
+
+    out_oracle = run(oracle_hook)
+
+    ctl = OnlineTopologyController(
+        ref, estimator=StreamingPiEstimator(n, K, beta=0.2, init=Pi0)
+    )
+    fed = {"t": 0}
+
+    def online_hook(t):
+        while fed["t"] <= t:
+            ctl.observe(labels[fed["t"]])
+            fed["t"] += 1
+        return ctl.on_segment(t)
+
+    out_online = run(online_hook)
+
+    print("\ndetector event log (one row per segment boundary):")
+    for e in ctl.events:
+        mark = " <-- REFRESH" if e["triggered"] else ""
+        extra = (
+            f" ({e['refresh_iters']} FW iters, {e['refresh_s'] * 1e3:.1f} ms)"
+            if e["triggered"] else ""
+        )
+        print(f"  t={e['t']:4d}  proxy={e['proxy']:.4f}{mark}{extra}")
+
+    tail = slice(-max(10, steps // 12), None)
+    print(f"\nfinal mean squared error (median of last {-tail.start} steps):")
+    for name, out in (("frozen", out_frozen), ("oracle", out_oracle),
+                      ("online", out_online)):
+        err = float(np.median(out["mean_sq_error"][tail]))
+        print(f"  {name:8s} {err:.5f}   (rollout traces: {out['n_traces']})")
+    n_lengths = len({min(args.segment, steps - t0)
+                     for t0 in range(0, steps, args.segment)})
+    print(
+        f"\nonline pipeline: {ref.n_refreshes} warm refresh(es), schedule "
+        f"swaps at steps {out_online['swaps']}; rollout traced "
+        f"{out_online['n_traces']}x = once per distinct segment length "
+        f"({n_lengths} here) -- the swaps themselves compiled nothing."
+    )
+
+
+if __name__ == "__main__":
+    main()

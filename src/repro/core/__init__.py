@@ -17,11 +17,14 @@ from . import (
 from .dsgd import DSGDState, dsgd_init, dsgd_step_sharded, dsgd_step_stacked
 from .mixing import (
     BirkhoffSchedule,
+    ScheduleArrays,
     mix_allreduce,
     mix_dense,
     mix_ppermute,
     schedule_from_matrix,
     schedule_from_result,
+    schedule_to_arrays,
+    truncate_schedule,
 )
 from .stl_fw import STLFWResult, fw_upper_bound, learn_topology, stl_fw_objective
 
@@ -39,11 +42,14 @@ __all__ = [
     "dsgd_step_sharded",
     "dsgd_step_stacked",
     "BirkhoffSchedule",
+    "ScheduleArrays",
     "mix_allreduce",
     "mix_dense",
     "mix_ppermute",
     "schedule_from_matrix",
     "schedule_from_result",
+    "schedule_to_arrays",
+    "truncate_schedule",
     "STLFWResult",
     "fw_upper_bound",
     "learn_topology",

@@ -21,7 +21,13 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .mixing import BirkhoffSchedule, mix_allreduce, mix_ppermute, mix_stacked
+from .mixing import (
+    BirkhoffSchedule,
+    ScheduleArrays,
+    mix_allreduce,
+    mix_ppermute,
+    mix_stacked,
+)
 
 __all__ = ["DSGDState", "dsgd_init", "dsgd_step_stacked", "dsgd_step_sharded"]
 
@@ -63,7 +69,7 @@ def dsgd_step_stacked(
     lr: float | jax.Array,
     momentum: float = 0.0,
     use_kernel: bool = False,
-    schedule: BirkhoffSchedule | None = None,
+    schedule: BirkhoffSchedule | ScheduleArrays | None = None,
     transport: str = "auto",
     single_buffer: bool = False,
 ) -> tuple[PyTree, DSGDState]:
@@ -77,9 +83,12 @@ def dsgd_step_stacked(
       lr: stepsize eta_t.
       momentum: heavy-ball coefficient (0 = the paper's plain D-SGD).
       use_kernel: route the mixing through the Pallas gossip kernels.
-      schedule: static Birkhoff decomposition of W. When present, the sparse
-        gather transport becomes available; ``transport`` ("auto" | "dense" |
-        "schedule") picks between it and the dense matmul (see
+      schedule: Birkhoff decomposition of W -- a static ``BirkhoffSchedule``
+        (closure format) or a fixed-shape ``ScheduleArrays`` (data format:
+        hot-swappable mid-run with zero retraces, the online-adaptation
+        path). When present, the sparse gather transport becomes
+        available; ``transport`` ("auto" | "dense" | "schedule") picks
+        between it and the dense matmul (see
         ``repro.core.mixing.preferred_transport`` for the auto cost model).
       single_buffer: on the schedule transport, flatten the pytree into one
         (n, P) buffer so mixing is one dispatch per step (for eager use;

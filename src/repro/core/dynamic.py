@@ -14,6 +14,12 @@ This module provides the useful schedules:
   STL-FW topology one atom per step: per-step communication cost of ONE
   permutation while the k-step composite approximates the full W. This is
   the beyond-paper schedule evaluated in EXPERIMENTS.md §Perf.
+* ``OnlineSchedule``   -- composes any of the above with a *refreshing* W
+  (the ``repro.online`` subsystem): each topology refresh pushes a new
+  payload, a fresh inner schedule is built from it, and ``matrix(t)``
+  delegates to the segment active at ``t``. Every per-step matrix is a
+  doubly-stochastic ``W^(t)``, so refresh boundaries stay inside the
+  paper's changing-topology analysis (Sec. 3 / Koloskova et al. 2020).
 
 All schedules expose ``matrix(t) -> np.ndarray`` and are directly usable
 with the simulator (`run_mean_estimation(..., W=schedule)` accepts a
@@ -23,13 +29,20 @@ callable) and convertible per-step to Birkhoff ppermute schedules.
 from __future__ import annotations
 
 import dataclasses
+from typing import Any, Callable
 
 import numpy as np
 
 from .mixing import BirkhoffSchedule
 from .stl_fw import STLFWResult
 
-__all__ = ["PeriodicGossip", "RandomMatching", "AtomCycling", "composite_matrix"]
+__all__ = [
+    "PeriodicGossip",
+    "RandomMatching",
+    "AtomCycling",
+    "OnlineSchedule",
+    "composite_matrix",
+]
 
 
 @dataclasses.dataclass
@@ -103,6 +116,67 @@ class AtomCycling:
         W = np.eye(n) * (1.0 - g)
         W[np.arange(n), perm] += g
         return W
+
+
+class OnlineSchedule:
+    """Time-varying schedule whose underlying W refreshes online.
+
+    Bridges the refresh controller to the per-step schedules above: a
+    ``factory`` maps a refresh payload (an ``STLFWResult``, a dense W,
+    whatever the factory expects) to an inner schedule exposing
+    ``matrix(t)``; each topology refresh appends a segment via
+    :meth:`push`. ``matrix(t)`` delegates to the segment active at
+    ``t`` with *segment-local* time, so phase-dependent inners
+    (``AtomCycling``'s ``t mod L``, ``PeriodicGossip``'s ``t mod k``)
+    restart cleanly at each refresh boundary instead of inheriting an
+    arbitrary phase from the previous topology's clock.
+
+    Example::
+
+        online = OnlineSchedule(AtomCycling, initial=result0)
+        ...                       # refresh fires at step 120:
+        online.push(120, result1)
+        W_t = online.matrix(t)    # pre-120 cycles result0's atoms,
+                                  # post-120 cycles result1's
+
+    Every emitted matrix is one of the inner schedules' matrices --
+    doubly stochastic whenever the inners are (asserted across refresh
+    boundaries in tests/test_dynamic_and_compression.py).
+    """
+
+    def __init__(self, factory: Callable[[Any], Any], initial: Any):
+        self._factory = factory
+        self._segments: list[tuple[int, Any]] = [(0, factory(initial))]
+
+    @property
+    def n_segments(self) -> int:
+        return len(self._segments)
+
+    def push(self, t: int, payload: Any) -> None:
+        """Refresh at step ``t``: steps >= t use a schedule built on payload."""
+        t = int(t)
+        if t <= self._segments[-1][0]:
+            raise ValueError(
+                f"refresh at t={t} is not after the last boundary "
+                f"t={self._segments[-1][0]}"
+            )
+        self._segments.append((t, self._factory(payload)))
+
+    def segment_at(self, t: int) -> tuple[int, Any]:
+        """(start_step, inner_schedule) of the segment covering step t."""
+        if t < 0:
+            raise ValueError("t must be >= 0")
+        active = self._segments[0]
+        for seg in self._segments[1:]:
+            if seg[0] <= t:
+                active = seg
+            else:
+                break
+        return active
+
+    def matrix(self, t: int) -> np.ndarray:
+        start, inner = self.segment_at(t)
+        return inner.matrix(t - start)
 
 
 def composite_matrix(schedule, steps: int) -> np.ndarray:

@@ -62,7 +62,7 @@ transports act on arbitrary parameter pytrees.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -70,6 +70,12 @@ import numpy as np
 
 __all__ = [
     "BirkhoffSchedule",
+    "ScheduleArrays",
+    "schedule_to_arrays",
+    "arrays_to_matrix",
+    "truncate_schedule",
+    "mix_schedule_arrays",
+    "mix_dense_sharded",
     "StackRavelSpec",
     "ravel_stack",
     "unravel_stack",
@@ -189,6 +195,215 @@ def schedule_from_matrix(W: np.ndarray, max_atoms: int | None = None, tol: float
     s = sum(coeffs)
     coeffs = [c / s for c in coeffs]
     return BirkhoffSchedule(coeffs=tuple(coeffs), perms=tuple(perms))
+
+
+# ---------------------------------------------------------------------------
+# Data-plane schedule format (online topology adaptation)
+# ---------------------------------------------------------------------------
+#
+# ``BirkhoffSchedule`` is deliberately *static*: its atoms are python
+# tuples a jitted step function closes over, which is what lets XLA fold
+# identity atoms into a free scale and constant-fold the gather indices.
+# The flip side is that swapping W mid-run changes the closure and
+# RETRACES every compiled rollout -- unacceptable for online topology
+# adaptation, where a refresh controller replaces W while a scanned
+# trainer is running. ``ScheduleArrays`` is the data-plane twin: the
+# same Birkhoff decomposition as two fixed-shape arrays (coefficients
+# and a permutation table, padded to a fixed atom capacity ``l_max``
+# with zero-weight identity atoms) that travel through jit/scan carries
+# as ordinary operands. Two schedules with the same ``(l_max, n)`` are
+# interchangeable values of ONE compiled computation: a hot swap is a
+# buffer update, never a retrace (asserted in tests/test_online.py and
+# the CI smoke tier via benchmarks/bench_online.py).
+
+
+class ScheduleArrays(NamedTuple):
+    """A Birkhoff schedule as data: ``W = sum_l gammas[l] P_{perms[l]}``.
+
+    Attributes:
+      gammas: (l_max,) float32 convex coefficients (sum to 1; padding
+        atoms carry exactly 0).
+      perms: (l_max, n) int32 permutation table, ``perms[l, i] = j``
+        meaning node ``i`` receives node ``j``'s parameters in atom
+        ``l``; padding rows are the identity permutation.
+
+    A NamedTuple of two arrays is natively a pytree, so a
+    ``ScheduleArrays`` can sit in a ``lax.scan`` carry, be donated, or
+    be passed straight through ``jax.jit`` -- the compiled trace is
+    keyed on shapes only, which is the whole point.
+    """
+
+    gammas: jax.Array
+    perms: jax.Array
+
+    @property
+    def l_max(self) -> int:
+        return self.perms.shape[0]
+
+    @property
+    def n_nodes(self) -> int:
+        return self.perms.shape[1]
+
+
+def schedule_to_arrays(
+    schedule: BirkhoffSchedule, l_max: int | None = None
+) -> ScheduleArrays:
+    """Pad a static schedule into the fixed-shape data-plane format.
+
+    ``l_max`` fixes the atom capacity; every refresh must pad to the
+    SAME ``l_max`` or the hot swap stops being shape-stable (and
+    retraces). Padding atoms are identity permutations with coefficient
+    0 -- they gather and add exact zeros, so the mixed result is
+    bitwise what the unpadded schedule produces.
+    """
+    L = schedule.n_atoms
+    n = schedule.n_nodes
+    if l_max is None:
+        l_max = L
+    if L > l_max:
+        raise ValueError(
+            f"schedule has {L} atoms > l_max={l_max}; truncate first "
+            "(see truncate_schedule)"
+        )
+    gammas = np.zeros((l_max,), np.float32)
+    perms = np.tile(np.arange(n, dtype=np.int32), (l_max, 1))
+    gammas[:L] = schedule.coeff_array()
+    if L:
+        perms[:L] = schedule.perm_array()
+    return ScheduleArrays(gammas=jnp.asarray(gammas), perms=jnp.asarray(perms))
+
+
+def arrays_to_matrix(arrays: ScheduleArrays) -> np.ndarray:
+    """Densify a data-plane schedule (host-side, for validation/analysis)."""
+    gammas = np.asarray(arrays.gammas, np.float64)
+    perms = np.asarray(arrays.perms)
+    n = perms.shape[1]
+    W = np.zeros((n, n))
+    rows = np.arange(n)
+    for g, perm in zip(gammas, perms):
+        W[rows, perm] += g
+    return W
+
+
+def truncate_schedule(schedule: BirkhoffSchedule, l_max: int) -> BirkhoffSchedule:
+    """Keep the ``l_max`` largest-coefficient atoms and renormalize.
+
+    A renormalized sub-combination of permutation atoms is still doubly
+    stochastic, so the truncated W stays a valid mixing matrix; what is
+    lost is a small amount of mixing mass (bounded by the dropped
+    coefficients' sum). Online refreshes use this to keep the schedule's
+    atom count -- and hence the data-plane capacity and per-step
+    communication degree -- fixed across refreshes.
+    """
+    if l_max < 1:
+        raise ValueError("l_max must be >= 1")
+    if schedule.n_atoms <= l_max:
+        return schedule
+    order = np.argsort(np.asarray(schedule.coeffs))[::-1][:l_max]
+    order = np.sort(order)  # keep original atom order (identity first)
+    coeffs = [schedule.coeffs[i] for i in order]
+    total = sum(coeffs)
+    if total <= 0.0:
+        raise ValueError("truncate_schedule: kept atoms carry no mass")
+    return BirkhoffSchedule(
+        coeffs=tuple(c / total for c in coeffs),
+        perms=tuple(schedule.perms[i] for i in order),
+    )
+
+
+def _mix_arrays_flat(flat: jax.Array, arrays: ScheduleArrays) -> jax.Array:
+    """``out = sum_l gammas[l] flat[perms[l]]`` with traced gammas/perms.
+
+    A ``lax.scan`` over the atom axis keeps the HLO size O(1) in
+    ``l_max`` (the static schedule path unrolls instead, which is fine
+    because identity atoms constant-fold there; here every atom is a
+    runtime value, including the zero-weight padding, whose gathers
+    contribute exact zeros).
+    """
+    if flat.shape[0] != arrays.n_nodes:
+        raise ValueError(
+            f"schedule arrays are for {arrays.n_nodes} nodes but the stacked "
+            f"parameters have leading axis {flat.shape[0]}"
+        )
+
+    def body(acc, gp):
+        g, perm = gp
+        return acc + g.astype(flat.dtype) * jnp.take(flat, perm, axis=0), None
+
+    acc, _ = jax.lax.scan(
+        body, jnp.zeros_like(flat), (arrays.gammas, arrays.perms)
+    )
+    return acc
+
+
+def mix_schedule_arrays(
+    params_stack: PyTree,
+    arrays: ScheduleArrays,
+    *,
+    single_buffer: bool = False,
+    use_kernel: bool = False,
+    block_p: int | None = None,
+) -> PyTree:
+    """Data-plane Birkhoff mixing: ``l_max`` gathers + AXPYs, schedule as
+    runtime arrays (the online hot-swap transport).
+
+    Semantics match :func:`mix_schedule_stacked` on the equivalent
+    static schedule; cost is ``O(l_max n P)`` (padding atoms are not
+    free here -- choose ``l_max`` as the actual communication budget).
+    ``use_kernel`` routes through the Pallas ``gossip_schedule`` kernel
+    (implies single_buffer) -- its coefficient/permutation operands are
+    ordinary arrays, so the kernel path hot-swaps as freely as the XLA
+    one.
+    """
+    if use_kernel:
+        from repro.kernels.gossip_mix import ops as gossip_ops
+        from repro.kernels.gossip_mix.gossip_schedule import DEFAULT_BLOCK_P
+
+        pad_to = block_p or DEFAULT_BLOCK_P
+        flat, spec = ravel_stack(params_stack, pad_to=pad_to)
+        mixed = gossip_ops.gossip_schedule(
+            flat,
+            arrays.gammas,
+            arrays.perms,
+            block_p=pad_to,
+            pre_padded=True,
+        )
+        return unravel_stack(mixed, spec)
+    if single_buffer:
+        flat, spec = ravel_stack(params_stack, pad_to=block_p)
+        flat = jax.lax.optimization_barrier(flat)
+        return unravel_stack(_mix_arrays_flat(flat, arrays), spec)
+    return jax.tree_util.tree_map(
+        lambda x: _mix_arrays_flat(x.reshape(x.shape[0], -1), arrays).reshape(x.shape),
+        params_stack,
+    )
+
+
+def mix_dense_sharded(params: PyTree, W: jax.Array, axis_name: str) -> PyTree:
+    """Dense mixing *inside* ``shard_map`` with W as data (traced).
+
+    Each index along ``axis_name`` holds one node's parameter pytree;
+    the mixed result is ``theta_i <- sum_j W[i, j] theta_j`` via an
+    ``all_gather`` over the node axis followed by a row contraction.
+    This is the mesh-trainer twin of :func:`mix_schedule_arrays`: W is
+    an ordinary operand, so an online refresh swaps it with zero
+    retraces -- ``lax.ppermute`` cannot do that (its permutation pairs
+    are baked into the trace). The price is communication: an
+    all-gather moves ``O(n P)`` bytes where the static ppermute
+    schedule moves ``d_max`` permutes; use this transport while a
+    topology is being adapted online, and drop back to the static
+    ppermute schedule (one retrace) once it settles.
+
+    The contraction runs in f32 (same rationale as ``mix_allreduce``).
+    """
+    i = jax.lax.axis_index(axis_name)
+    row = W[i].astype(jnp.float32)
+
+    def mix_leaf(x):
+        g = jax.lax.all_gather(x.astype(jnp.float32), axis_name)
+        return jnp.tensordot(row, g, axes=([0], [0])).astype(x.dtype)
+
+    return jax.tree_util.tree_map(mix_leaf, params)
 
 
 # ---------------------------------------------------------------------------
@@ -629,7 +844,7 @@ def mix_schedule_stacked(
 def mix_stacked(
     params_stack: PyTree,
     W: jax.Array | None = None,
-    schedule: BirkhoffSchedule | None = None,
+    schedule: BirkhoffSchedule | ScheduleArrays | None = None,
     *,
     transport: str = "auto",
     use_kernel: bool = False,
@@ -637,6 +852,14 @@ def mix_stacked(
     dense_speedup: float = DENSE_THROUGHPUT_ADVANTAGE,
 ) -> PyTree:
     """Unified stacked-mixing entry point with automatic transport choice.
+
+    ``schedule`` may be a static :class:`BirkhoffSchedule` (closure
+    format -- constant-folds, retraces on change) or a
+    :class:`ScheduleArrays` (data format -- hot-swappable with zero
+    retraces). The data format always executes on the arrays transport:
+    any static W passed alongside it is, by construction, stale the
+    moment a hot swap lands, so the dense path is refused rather than
+    silently mixing with yesterday's topology.
 
     ``transport``:
       * ``"auto"``     -- measured autotune-table winner for this
@@ -657,6 +880,24 @@ def mix_stacked(
     """
     if transport not in ("auto", "autotune", "dense", "schedule"):
         raise ValueError(f"unknown transport {transport!r}")
+    if isinstance(schedule, ScheduleArrays):
+        # A hot-swappable schedule is by definition never in sync with a
+        # precomputed static W: auto-selecting the dense transport here
+        # would mix with the STALE W forever and turn every online
+        # refresh into a silent no-op (the swap still lands in the carry
+        # and n_traces stays 1, so nothing would look wrong). The data
+        # format therefore always takes the arrays path; an explicit
+        # transport="dense" is rejected rather than half-honored.
+        if transport == "dense":
+            raise ValueError(
+                "transport='dense' cannot execute a ScheduleArrays (it would "
+                "mix with a static W that a hot swap never updates); convert "
+                "with arrays_to_matrix host-side if you really want dense"
+            )
+        return mix_schedule_arrays(
+            params_stack, schedule,
+            single_buffer=single_buffer, use_kernel=use_kernel,
+        )
     if transport in ("auto", "autotune"):
         measure = transport == "autotune"
         if schedule is None:

@@ -116,12 +116,23 @@ class STLFWResult:
       W: final (n, n) doubly-stochastic mixing matrix.
       coeffs: convex-combination coefficients, one per atom (sum to 1).
       perms: per-atom permutations as ``col_of_row`` index arrays; atom 0 is
-        always the identity (the FW initialization).
-      objective_trace: ``g(W^(l))`` for l = 0..L.
+        the identity when the solve started cold (the FW initialization) --
+        a warm solve (``init=``) inherits the previous result's atoms.
+      objective_trace: ``g(W^(l))`` for l = 0..L (L may be < budget when
+        the FW-gap early stop fired, see ``learn_topology(stop_tol=...)``).
       gamma_trace: line-search step sizes per iteration.
       bias_trace / variance_trace: the two terms of Eq. (8) per iteration.
       lmo_backend: the resolved LMO solver that produced the atoms
         (``"scipy"``, ``"hungarian"`` or ``"auction"``).
+      gap_trace: Frank-Wolfe duality gap ``<grad, W - P>`` per iteration
+        (an upper bound on ``g(W) - g*``). The last entry always
+        certifies the RETURNED W: a full-budget solve spends one extra
+        LMO call measuring the final iterate's gap (the in-loop entries
+        are pre-update), while an early-stopped solve's last in-loop
+        entry already is the final iterate's.
+      lam: the Eq. (8) trade-off this solve optimized -- recorded so
+        downstream consumers (the online refresher's gap target) can
+        refuse to compare gaps across different objectives.
     """
 
     W: np.ndarray
@@ -132,6 +143,8 @@ class STLFWResult:
     bias_trace: np.ndarray
     variance_trace: np.ndarray
     lmo_backend: str = ""
+    gap_trace: np.ndarray | None = None
+    lam: float | None = None
 
     @property
     def n_atoms(self) -> int:
@@ -168,6 +181,9 @@ def learn_topology(
     dedup_atoms: bool = True,
     method: str = "incremental",
     lmo: "str | LMOSolver" = "auto",
+    init: "STLFWResult | tuple | None" = None,
+    stop_tol: float | None = None,
+    stop_gap: float | None = None,
 ) -> STLFWResult:
     """Run STL-FW (Algorithm 2) for ``budget`` Frank-Wolfe iterations.
 
@@ -196,6 +212,26 @@ def learn_topology(
         so ``<P, G>`` objective values agree to far better than 1e-9;
         assignments (and hence trajectories) may only differ where the
         LMO has exactly tied optima.
+      init: warm start for online topology refresh. ``None`` (default)
+        starts from the identity (Algorithm 2). An ``STLFWResult`` (or a
+        ``(coeffs, perms)`` pair) restarts Frank-Wolfe from that W --
+        expressed through its Birkhoff atoms, so the refreshed result's
+        decomposition stays explicit. Passing a *persistent*
+        ``LMOSolver`` instance via ``lmo=`` additionally carries the
+        auction backends' dual prices across refreshes (the
+        ``repro.online`` subsystem does both).
+      stop_tol: optional early stop relative to *this solve's* initial
+        Frank-Wolfe gap: iteration halts once ``gap <= stop_tol *
+        gap_trace[0]`` where ``gap = <grad, W - P>`` upper-bounds
+        ``g(W) - g*``.
+      stop_gap: optional *absolute* gap target: halt once
+        ``gap <= stop_gap``. This is the online-refresh criterion --
+        the controller records the cold solve's final gap and refreshes
+        only until the warm iterate is certifiably as converged, which
+        is what makes a refresh cost a few FW steps instead of a full
+        budget. Both stops may be combined (first to fire wins);
+        ``None``/``None`` always runs ``budget`` iterations (the
+        paper's fixed-budget Algorithm 2).
 
     Returns:
       STLFWResult with the learned W, its Birkhoff decomposition and traces.
@@ -207,11 +243,57 @@ def learn_topology(
         raise ValueError("rows of Pi must sum to 1 (class proportions)")
     solver = lmo if isinstance(lmo, LMOSolver) else LMOSolver(lmo)
     solver.resolve(n=Pi.shape[0], budget=budget)
+    atoms = _normalize_init(init, Pi.shape[0])
     if method == "incremental":
-        return _learn_topology_incremental(Pi, budget, lam, dedup_atoms, solver)
+        return _learn_topology_incremental(
+            Pi, budget, lam, dedup_atoms, solver, atoms, stop_tol, stop_gap
+        )
     if method == "reference":
-        return _learn_topology_reference(Pi, budget, lam, dedup_atoms, solver)
+        return _learn_topology_reference(
+            Pi, budget, lam, dedup_atoms, solver, atoms, stop_tol, stop_gap
+        )
     raise ValueError(f"unknown method {method!r}")
+
+
+def _gap_stop(
+    gap: float, gap0: float, stop_tol: float | None, stop_gap: float | None
+) -> bool:
+    """First-to-fire early-stop test shared by both method implementations."""
+    if stop_gap is not None and gap <= stop_gap:
+        return True
+    return stop_tol is not None and gap <= stop_tol * (gap0 + 1e-18)
+
+
+def _normalize_init(
+    init: "STLFWResult | tuple | None", n: int
+) -> tuple[list[float], list[np.ndarray]] | None:
+    """Canonicalize a warm start into (coeffs, perms) Birkhoff atoms."""
+    if init is None:
+        return None
+    if isinstance(init, STLFWResult):
+        pairs = init.active_atoms()
+        coeffs = [float(c) for c, _ in pairs]
+        perms = [np.asarray(p, dtype=np.int64).copy() for _, p in pairs]
+    else:
+        raw_coeffs, raw_perms = init
+        coeffs = [float(c) for c in raw_coeffs]
+        perms = [np.asarray(p, dtype=np.int64).copy() for p in raw_perms]
+    if not coeffs or len(coeffs) != len(perms):
+        raise ValueError("init needs matching, non-empty coeffs and perms")
+    ref = np.arange(n)
+    for p in perms:
+        if p.shape != (n,) or not np.array_equal(np.sort(p), ref):
+            raise ValueError(f"init perm is not a permutation of {n} elements")
+    if min(coeffs) < 0.0:
+        raise ValueError("init coeffs must be non-negative")
+    total = sum(coeffs)
+    if total <= 0.0:
+        raise ValueError("init coeffs must have positive mass")
+    # renormalize: any convex combination of permutations is a valid
+    # (doubly stochastic) FW iterate, so a slightly-off sum (fp residue
+    # from a previous solve or a truncated schedule) just gets snapped
+    coeffs = [c / total for c in coeffs]
+    return coeffs, perms
 
 
 def _merge_atom(
@@ -388,22 +470,41 @@ class LMOSolver:
 
 
 def _learn_topology_reference(
-    Pi: np.ndarray, budget: int, lam: float, dedup_atoms: bool, solver: LMOSolver
+    Pi: np.ndarray,
+    budget: int,
+    lam: float,
+    dedup_atoms: bool,
+    solver: LMOSolver,
+    atoms: tuple[list[float], list[np.ndarray]] | None = None,
+    stop_tol: float | None = None,
+    stop_gap: float | None = None,
 ) -> STLFWResult:
     """Direct evaluation of Algorithm 2 (dense recomputation per iteration)."""
     n = Pi.shape[0]
-    W = np.eye(n)
     identity = np.arange(n)
-    coeffs: list[float] = [1.0]
-    perms: list[np.ndarray] = [identity.copy()]
+    rows = np.arange(n)
+    if atoms is None:
+        W = np.eye(n)
+        coeffs: list[float] = [1.0]
+        perms: list[np.ndarray] = [identity.copy()]
+    else:
+        coeffs, perms = list(atoms[0]), [p.copy() for p in atoms[1]]
+        W = np.zeros((n, n))
+        for c, p in zip(coeffs, perms):
+            W[rows, p] += c
     obj_trace = [stl_fw_objective(W, Pi, lam)]
     bias0, var0 = _terms(W, Pi)
     bias_trace, var_trace = [bias0], [var0]
     gamma_trace: list[float] = []
+    gap_trace: list[float] = []
 
     for _ in range(budget):
         grad = stl_fw_gradient(W, Pi, lam)
         P, col_of_row = solver(grad)
+        gap = float(np.sum(grad * W) - grad[rows, col_of_row].sum())
+        gap_trace.append(gap)
+        if _gap_stop(gap, gap_trace[0], stop_tol, stop_gap):
+            break
         gamma = line_search_gamma(W, P, Pi, lam)
         gamma_trace.append(gamma)
         if gamma > 0.0:
@@ -415,6 +516,16 @@ def _learn_topology_reference(
         bias_trace.append(b)
         var_trace.append(v)
 
+    if budget > 0 and len(gamma_trace) == budget:
+        # the loop records gaps *before* each update, so a full-budget run
+        # would otherwise certify only the penultimate iterate; one extra
+        # LMO call measures the gap of the W actually returned (an early
+        # stop needs nothing -- it breaks before updating, so its last
+        # recorded gap already belongs to the final W).
+        grad = stl_fw_gradient(W, Pi, lam)
+        _, col_of_row = solver(grad)
+        gap_trace.append(float(np.sum(grad * W) - grad[rows, col_of_row].sum()))
+
     return STLFWResult(
         W=W,
         coeffs=np.asarray(coeffs),
@@ -424,11 +535,20 @@ def _learn_topology_reference(
         bias_trace=np.asarray(bias_trace),
         variance_trace=np.asarray(var_trace),
         lmo_backend=solver.backend,
+        gap_trace=np.asarray(gap_trace),
+        lam=lam,
     )
 
 
 def _learn_topology_incremental(
-    Pi: np.ndarray, budget: int, lam: float, dedup_atoms: bool, solver: LMOSolver
+    Pi: np.ndarray,
+    budget: int,
+    lam: float,
+    dedup_atoms: bool,
+    solver: LMOSolver,
+    atoms: tuple[list[float], list[np.ndarray]] | None = None,
+    stop_tol: float | None = None,
+    stop_gap: float | None = None,
 ) -> STLFWResult:
     """Algorithm 2 with Gram precomputation and rank-update state.
 
@@ -459,14 +579,28 @@ def _learn_topology_incremental(
     G = Pi @ Pi.T                             # (n, n)
     b = Pi @ pibar_row                        # (n,); (pibar Pi^T)[i, j] =
     # pibar_row . Pi[j] = b[j] -- rank one with constant columns.
-    W = np.eye(n)
-    WPi = Pi.copy()                           # W = I
-    M = G.copy()                              # W G = G
-    nW2 = float(n)                            # ||I||_F^2
-    d0 = Pi - pibar_row[None, :]
-    bias = float(np.einsum("ik,ik->", d0, d0) / n)
     identity = np.arange(n)
     rows = np.arange(n)
+    if atoms is None:
+        W = np.eye(n)
+        WPi = Pi.copy()                       # W = I
+        M = G.copy()                          # W G = G
+        nW2 = float(n)                        # ||I||_F^2
+        init_coeffs: list[float] = [1.0]
+        init_perms: list[np.ndarray] = [identity.copy()]
+    else:
+        # warm start: rebuild the maintained quantities once from the
+        # carried atoms (O(L n K) gathers + two BLAS matmuls); every
+        # iteration after that costs the same as a cold one.
+        init_coeffs, init_perms = list(atoms[0]), [p.copy() for p in atoms[1]]
+        W = np.zeros((n, n))
+        for c, p in zip(init_coeffs, init_perms):
+            W[rows, p] += c
+        WPi = W @ Pi
+        M = W @ G
+        nW2 = float(np.einsum("ij,ij->", W, W))
+    d_init = WPi - pibar_row[None, :]
+    bias = float(np.einsum("ik,ik->", d_init, d_init) / n)
     # scratch buffers: the loop below does no O(nK)/O(n^2) allocations
     grad = np.empty((n, n))
     PiP = np.empty((n, K))
@@ -475,11 +609,12 @@ def _learn_topology_incremental(
     def var_of(nW2_):
         return float((nW2_ - 1.0) / n)
 
-    coeffs: list[float] = [1.0]
-    perms: list[np.ndarray] = [identity.copy()]
+    coeffs: list[float] = init_coeffs
+    perms: list[np.ndarray] = init_perms
     obj_trace = [bias + lam * var_of(nW2)]
     bias_trace, var_trace = [bias], [var_of(nW2)]
     gamma_trace: list[float] = []
+    gap_trace: list[float] = []
 
     for _ in range(budget):
         # gradient: (2/n) ((W Pi - pibar) Pi^T + lam (W - J/n))
@@ -490,6 +625,10 @@ def _learn_topology_incremental(
         grad -= lam / n
         grad *= 2.0 / n
         _, col_of_row = solver(grad)
+        gap = float(np.einsum("ij,ij->", grad, W) - grad[rows, col_of_row].sum())
+        gap_trace.append(gap)
+        if _gap_stop(gap, gap_trace[0], stop_tol, stop_gap):
+            break
 
         # line search, all in the maintained quantities:
         #   DPi = P Pi - W Pi = Pi[perm] - WPi
@@ -531,6 +670,18 @@ def _learn_topology_incremental(
         bias_trace.append(bias)
         var_trace.append(var_l)
 
+    if budget > 0 and len(gamma_trace) == budget:
+        # final-iterate gap; see the reference implementation's comment
+        np.copyto(grad, M)
+        grad -= b[None, :]
+        grad += lam * W
+        grad -= lam / n
+        grad *= 2.0 / n
+        _, col_of_row = solver(grad)
+        gap_trace.append(
+            float(np.einsum("ij,ij->", grad, W) - grad[rows, col_of_row].sum())
+        )
+
     return STLFWResult(
         W=W,
         coeffs=np.asarray(coeffs),
@@ -540,4 +691,6 @@ def _learn_topology_incremental(
         bias_trace=np.asarray(bias_trace),
         variance_trace=np.asarray(var_trace),
         lmo_backend=solver.backend,
+        gap_trace=np.asarray(gap_trace),
+        lam=lam,
     )

@@ -1,6 +1,13 @@
 """Data substrate: heterogeneous partitioners + synthetic datasets/pipelines."""
 
-from . import partition, synthetic, tokens
+from . import drift, partition, synthetic, tokens
+from .drift import (
+    AbruptLabelSwap,
+    GradualDirichlet,
+    NodeChurn,
+    labels_stream,
+    partition_from_pi,
+)
 from .partition import (
     cluster_partition,
     dirichlet_partition,
@@ -11,9 +18,15 @@ from .synthetic import MeanEstimationTask, gaussian_blobs, mean_estimation_clust
 from .tokens import DomainSkewCorpus, TokenBatcher
 
 __all__ = [
+    "drift",
     "partition",
     "synthetic",
     "tokens",
+    "AbruptLabelSwap",
+    "GradualDirichlet",
+    "NodeChurn",
+    "labels_stream",
+    "partition_from_pi",
     "cluster_partition",
     "dirichlet_partition",
     "proportions_from_labels",

@@ -1,0 +1,280 @@
+"""Synthetic drift scenarios: reproducible workloads for online adaptation.
+
+Each scenario is a time-indexed label-distribution process: ``Pi(t)``
+returns the true (n, K) per-node class proportions at step ``t`` and
+``sample_labels(t, batch, rng)`` draws the (n, batch) minibatch labels a
+node would observe -- the exact signal ``repro.online.streaming``
+consumes. Three drift shapes cover the deployment stories the online
+subsystem exists for:
+
+* ``AbruptLabelSwap``       -- at ``t_drift`` the nodes' distributions are
+  permuted (the classic "two shards trade places" shift). The optimal
+  topology changes discontinuously; this is the headline benchmark
+  scenario (BENCH_online.json).
+* ``GradualDirichlet``      -- row-wise linear interpolation from ``Pi0``
+  to ``Pi1`` over ``[t_start, t_end]`` (rows stay on the simplex, so
+  every intermediate matrix is a valid Pi). Models slow data-collection
+  shift; exercises the detector's baseline tracking.
+* ``NodeChurn``             -- point events where a node's distribution is
+  replaced by a fresh Dirichlet draw (a "new participant" taking over
+  the slot) and optional offline windows during which the node emits no
+  observations (labels = -1, which the streaming estimator masks).
+
+``labels_stream`` materializes any scenario into a (steps, n, batch)
+array for presampled rollouts, and ``partition_from_pi`` resamples a
+dataset partition matching a target Pi -- the bridge from a drifted
+distribution back to ``run_classification``'s per-node index lists.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "AbruptLabelSwap",
+    "GradualDirichlet",
+    "NodeChurn",
+    "labels_stream",
+    "partition_from_pi",
+]
+
+
+def _check_pi(Pi: np.ndarray, name: str = "Pi") -> np.ndarray:
+    Pi = np.asarray(Pi, dtype=np.float64)
+    if Pi.ndim != 2:
+        raise ValueError(f"{name} must be (n, K)")
+    if not np.allclose(Pi.sum(axis=1), 1.0, atol=1e-6):
+        raise ValueError(f"rows of {name} must sum to 1")
+    return Pi
+
+
+def _sample_rows(Pi_t: np.ndarray, batch: int, rng: np.random.Generator) -> np.ndarray:
+    """Vectorized per-row categorical sampling: (n, K) -> (n, batch) int32.
+
+    Inverse-CDF against one uniform draw per (node, sample) -- one
+    ``searchsorted`` per node row, no python-level class loops.
+    """
+    n, K = Pi_t.shape
+    cdf = np.cumsum(Pi_t, axis=1)
+    cdf[:, -1] = 1.0  # guard fp undershoot so u < cdf[-1] always
+    u = rng.random((n, batch))
+    out = np.empty((n, batch), np.int32)
+    for i in range(n):
+        out[i] = np.searchsorted(cdf[i], u[i], side="right")
+    return np.minimum(out, K - 1).astype(np.int32)
+
+
+@dataclasses.dataclass
+class AbruptLabelSwap:
+    """``Pi(t) = Pi0`` for ``t < t_drift``, else ``Pi0[node_perm]``.
+
+    ``node_perm=None`` defaults to the half-rotation (node ``i`` takes
+    node ``(i + n//2) % n``'s distribution), which changes every node's
+    distribution. Caveat: on *structured* Pi the rotation can be a
+    symmetry of the topology-learning problem -- e.g. cyclic one-hot
+    rows (``class(i) = i mod K``) rotate onto an equally-well-mixed
+    assignment, so a W learned pre-drift is exactly as good post-drift
+    and the heterogeneity criterion (correctly) never fires. Pass an
+    explicit random permutation to guarantee a criterion-visible drift.
+    """
+
+    Pi0: np.ndarray
+    t_drift: int
+    node_perm: np.ndarray | None = None
+
+    def __post_init__(self) -> None:
+        self.Pi0 = _check_pi(self.Pi0, "Pi0")
+        n = self.Pi0.shape[0]
+        if self.node_perm is None:
+            self.node_perm = (np.arange(n) + n // 2) % n
+        self.node_perm = np.asarray(self.node_perm)
+        if not np.array_equal(np.sort(self.node_perm), np.arange(n)):
+            raise ValueError("node_perm must be a permutation of the nodes")
+
+    @property
+    def n_nodes(self) -> int:
+        return self.Pi0.shape[0]
+
+    @property
+    def num_classes(self) -> int:
+        return self.Pi0.shape[1]
+
+    def Pi(self, t: int) -> np.ndarray:
+        return self.Pi0 if t < self.t_drift else self.Pi0[self.node_perm]
+
+    def sample_labels(self, t: int, batch: int, rng: np.random.Generator) -> np.ndarray:
+        return _sample_rows(self.Pi(t), batch, rng)
+
+
+@dataclasses.dataclass
+class GradualDirichlet:
+    """Row-wise linear interpolation ``Pi0 -> Pi1`` over ``[t_start, t_end]``.
+
+    ``Pi1=None`` draws it as Dirichlet(alpha) label skew (a fresh
+    independent skew pattern), seeded for reproducibility.
+    """
+
+    Pi0: np.ndarray
+    t_start: int
+    t_end: int
+    Pi1: np.ndarray | None = None
+    alpha: float = 0.5
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        self.Pi0 = _check_pi(self.Pi0, "Pi0")
+        if self.t_end <= self.t_start:
+            raise ValueError("need t_end > t_start")
+        if self.Pi1 is None:
+            rng = np.random.default_rng(self.seed)
+            self.Pi1 = rng.dirichlet(
+                self.alpha * np.ones(self.Pi0.shape[1]), size=self.Pi0.shape[0]
+            )
+        self.Pi1 = _check_pi(self.Pi1, "Pi1")
+        if self.Pi1.shape != self.Pi0.shape:
+            raise ValueError("Pi1 must match Pi0's shape")
+
+    @property
+    def n_nodes(self) -> int:
+        return self.Pi0.shape[0]
+
+    @property
+    def num_classes(self) -> int:
+        return self.Pi0.shape[1]
+
+    def Pi(self, t: int) -> np.ndarray:
+        if t <= self.t_start:
+            return self.Pi0
+        if t >= self.t_end:
+            return self.Pi1
+        w = (t - self.t_start) / (self.t_end - self.t_start)
+        return (1.0 - w) * self.Pi0 + w * self.Pi1
+
+    def sample_labels(self, t: int, batch: int, rng: np.random.Generator) -> np.ndarray:
+        return _sample_rows(self.Pi(t), batch, rng)
+
+
+@dataclasses.dataclass(frozen=True)
+class _ChurnEvent:
+    t: int
+    node: int
+    offline_until: int  # labels masked (-1) for t in [t, offline_until)
+
+
+@dataclasses.dataclass
+class NodeChurn:
+    """Node-replacement drift: at each event a node leaves and a new one
+    (fresh Dirichlet(alpha) label distribution) joins its slot.
+
+    Args:
+      Pi0: initial proportions.
+      events: ``(t, node)`` or ``(t, node, offline_steps)`` tuples. The
+        node's distribution changes to a fresh draw at step ``t``; with
+        ``offline_steps > 0`` the slot first goes dark (labels -1) for
+        that many steps before the new node starts emitting.
+      alpha: Dirichlet concentration of the replacement distributions.
+      seed: draw seed (one independent draw per event).
+    """
+
+    Pi0: np.ndarray
+    events: tuple
+    alpha: float = 0.5
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        self.Pi0 = _check_pi(self.Pi0, "Pi0")
+        n, K = self.Pi0.shape
+        rng = np.random.default_rng(self.seed)
+        parsed = []
+        for ev in self.events:
+            if len(ev) == 2:
+                t, node, offline = int(ev[0]), int(ev[1]), 0
+            else:
+                t, node, offline = int(ev[0]), int(ev[1]), int(ev[2])
+            if not 0 <= node < n:
+                raise ValueError(f"event node {node} out of range")
+            parsed.append(
+                (_ChurnEvent(t=t, node=node, offline_until=t + offline),
+                 rng.dirichlet(self.alpha * np.ones(K)))
+            )
+        self._events = sorted(parsed, key=lambda pair: pair[0].t)
+
+    @property
+    def n_nodes(self) -> int:
+        return self.Pi0.shape[0]
+
+    @property
+    def num_classes(self) -> int:
+        return self.Pi0.shape[1]
+
+    def Pi(self, t: int) -> np.ndarray:
+        Pi_t = self.Pi0.copy()
+        for ev, row in self._events:
+            if ev.t <= t:
+                Pi_t[ev.node] = row
+        return Pi_t
+
+    def offline_nodes(self, t: int) -> np.ndarray:
+        """Indices of nodes emitting no observations at step t."""
+        off = [ev.node for ev, _ in self._events if ev.t <= t < ev.offline_until]
+        return np.asarray(sorted(set(off)), dtype=np.int64)
+
+    def sample_labels(self, t: int, batch: int, rng: np.random.Generator) -> np.ndarray:
+        labels = _sample_rows(self.Pi(t), batch, rng)
+        off = self.offline_nodes(t)
+        if off.size:
+            labels[off] = -1
+        return labels
+
+
+def labels_stream(
+    scenario, steps: int, batch: int, seed: int = 0
+) -> np.ndarray:
+    """Materialize a scenario's label stream: (steps, n, batch) int32.
+
+    One rng drives the whole stream, so the same (scenario, steps,
+    batch, seed) is bit-reproducible -- the property every drift
+    benchmark and test here relies on.
+    """
+    rng = np.random.default_rng(seed)
+    return np.stack(
+        [scenario.sample_labels(t, batch, rng) for t in range(steps)]
+    ) if steps else np.zeros((0, scenario.n_nodes, batch), np.int32)
+
+
+def partition_from_pi(
+    labels: np.ndarray,
+    Pi: np.ndarray,
+    samples_per_node: int,
+    seed: int = 0,
+) -> list[np.ndarray]:
+    """Resample a per-node index partition matching a target Pi.
+
+    Draws ``samples_per_node`` indices per node (with replacement, from
+    the per-class index pools of ``labels``) so node ``i``'s empirical
+    class counts follow ``Pi[i]``. Classes with zero pool mass are
+    renormalized away from that node's row; a node whose entire row
+    lands on empty pools gets an empty index list (the trainers' padded
+    stacking and ``proportions_from_labels`` both handle that). This is
+    the bridge from a drifted Pi(t) back to ``run_classification``'s
+    data format.
+    """
+    labels = np.asarray(labels)
+    Pi = _check_pi(Pi)
+    n, K = Pi.shape
+    rng = np.random.default_rng(seed)
+    pools = [np.nonzero(labels == k)[0] for k in range(K)]
+    have = np.asarray([len(p) > 0 for p in pools])
+    indices_per_node: list[np.ndarray] = []
+    for i in range(n):
+        row = np.where(have, Pi[i], 0.0)
+        total = row.sum()
+        if total <= 0.0:
+            indices_per_node.append(np.array([], dtype=np.int64))
+            continue
+        counts = rng.multinomial(samples_per_node, row / total)
+        idx = [rng.choice(pools[k], size=c) for k, c in enumerate(counts) if c > 0]
+        indices_per_node.append(np.sort(np.concatenate(idx)) if idx else np.array([], dtype=np.int64))
+    return indices_per_node

@@ -30,16 +30,53 @@ __all__ = [
 def proportions_from_labels(
     labels: np.ndarray, indices_per_node: list[np.ndarray], num_classes: int
 ) -> np.ndarray:
-    """Empirical per-node class proportions Pi from a partition."""
+    """Empirical per-node class proportions Pi from a partition.
+
+    Empty nodes (churn, extreme skew) get the uniform row -- the
+    agnostic prior, which also keeps every row on the simplex so
+    ``learn_topology``'s input contract holds under drift resampling.
+    """
+    labels = np.asarray(labels)
     n = len(indices_per_node)
     Pi = np.zeros((n, num_classes))
     for i, idx in enumerate(indices_per_node):
         if len(idx) == 0:
             Pi[i] = 1.0 / num_classes
             continue
-        counts = np.bincount(labels[idx], minlength=num_classes)
+        node_labels = labels[idx]
+        if node_labels.min() < 0 or node_labels.max() >= num_classes:
+            # out-of-range labels would silently widen bincount and
+            # break the (n, K) shape contract downstream
+            raise ValueError(
+                f"node {i} has labels outside [0, {num_classes}); pass the "
+                "task's true num_classes"
+            )
+        counts = np.bincount(node_labels, minlength=num_classes)
         Pi[i] = counts / counts.sum()
     return Pi
+
+
+def _resolve_num_classes(labels: np.ndarray, num_classes: int | None) -> int:
+    """K for a partitioner: explicit wins; else inferred from the labels.
+
+    Under drift resampling a class can be temporarily absent from the
+    observed labels -- inferring K from ``labels.max()`` then silently
+    *shrinks Pi's width* between resamples, which breaks every consumer
+    that compares or warm-starts across time (the streaming estimator,
+    the refresh controller). Callers that resample over time must pass
+    the task's true ``num_classes``.
+    """
+    if num_classes is not None:
+        if num_classes < 1:
+            raise ValueError(f"num_classes must be >= 1, got {num_classes}")
+        if labels.size and labels.max() >= num_classes:
+            raise ValueError(
+                f"labels contain class {int(labels.max())} >= num_classes={num_classes}"
+            )
+        return int(num_classes)
+    if labels.size == 0:
+        raise ValueError("cannot infer num_classes from empty labels; pass it")
+    return int(labels.max()) + 1
 
 
 def shard_partition(
@@ -47,6 +84,7 @@ def shard_partition(
     n_nodes: int,
     shards_per_node: int = 2,
     seed: int = 0,
+    num_classes: int | None = None,
 ) -> tuple[list[np.ndarray], np.ndarray]:
     """McMahan-style shard partition (sort by label, deal shards).
 
@@ -55,9 +93,11 @@ def shard_partition(
       n_nodes: number of agents.
       shards_per_node: shards dealt to each node (2 in the paper).
       seed: shard-dealing rng seed.
+      num_classes: fixed K for the returned Pi; pass it when resampling
+        under drift (see ``_resolve_num_classes``), else inferred.
     """
     labels = np.asarray(labels)
-    num_classes = int(labels.max()) + 1
+    num_classes = _resolve_num_classes(labels, num_classes)
     order = np.argsort(labels, kind="stable")
     n_shards = n_nodes * shards_per_node
     shards = np.array_split(order, n_shards)
@@ -77,10 +117,17 @@ def dirichlet_partition(
     n_nodes: int,
     alpha: float = 0.5,
     seed: int = 0,
+    num_classes: int | None = None,
 ) -> tuple[list[np.ndarray], np.ndarray]:
-    """Dirichlet(alpha) label-skew partition (lower alpha = more skew)."""
+    """Dirichlet(alpha) label-skew partition (lower alpha = more skew).
+
+    Robust to the drift-resampling edge cases: a class absent from
+    ``labels`` contributes empty chunks (pass ``num_classes`` so Pi
+    keeps its width), and nodes that end up with zero samples get the
+    uniform Pi row from ``proportions_from_labels``.
+    """
     labels = np.asarray(labels)
-    num_classes = int(labels.max()) + 1
+    num_classes = _resolve_num_classes(labels, num_classes)
     rng = np.random.default_rng(seed)
     idx_by_class = [np.nonzero(labels == k)[0] for k in range(num_classes)]
     node_lists: list[list[np.ndarray]] = [[] for _ in range(n_nodes)]
@@ -99,11 +146,11 @@ def dirichlet_partition(
 
 
 def cluster_partition(
-    labels: np.ndarray, n_nodes: int, seed: int = 0
+    labels: np.ndarray, n_nodes: int, seed: int = 0, num_classes: int | None = None
 ) -> tuple[list[np.ndarray], np.ndarray]:
     """One class per node (Section 6.1): node i gets class ``i % K`` data."""
     labels = np.asarray(labels)
-    num_classes = int(labels.max()) + 1
+    num_classes = _resolve_num_classes(labels, num_classes)
     rng = np.random.default_rng(seed)
     idx_by_class = [rng.permutation(np.nonzero(labels == k)[0]) for k in range(num_classes)]
     counters = [0] * num_classes

@@ -1,0 +1,37 @@
+"""Online topology adaptation: streaming Pi estimation + mid-training
+STL-FW refresh with zero-retrace schedule hot-swap.
+
+The paper (Section 5) learns a topology once, before training, from a
+fixed label-proportion matrix Pi. This subsystem relearns it *during*
+training when Pi drifts:
+
+1. ``streaming``  -- exponentially-weighted Pi_hat from minibatch labels
+   plus a drift detector on the neighborhood-heterogeneity proxy
+   (Proposition 2's ``tau_bar`` evaluated at Pi_hat).
+2. ``refresh``    -- a controller that re-runs ``learn_topology`` warm
+   (previous Birkhoff atoms + persistent LMO dual prices + duality-gap
+   early stop), truncates back to a fixed atom capacity, and emits the
+   result as fixed-shape ``ScheduleArrays``.
+3. The trainers (``repro.train.trainer`` drivers, ``lm_trainer``'s
+   ``online_w`` mode) consume those arrays as *data*, so a mid-run W
+   swap never retraces a compiled rollout.
+
+Drift workloads to drive it live in ``repro.data.drift``; the headline
+claims (warm-refresh speedup, zero retraces, post-drift convergence
+recovery) are measured in ``benchmarks/bench_online.py``. See
+docs/online_adaptation.md for the tutorial.
+"""
+
+from . import refresh, streaming
+from .refresh import OnlineTopologyController, RefreshConfig, TopologyRefresher
+from .streaming import DriftDetector, StreamingPiEstimator
+
+__all__ = [
+    "refresh",
+    "streaming",
+    "OnlineTopologyController",
+    "RefreshConfig",
+    "TopologyRefresher",
+    "DriftDetector",
+    "StreamingPiEstimator",
+]

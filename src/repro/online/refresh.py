@@ -1,0 +1,271 @@
+"""Mid-training topology refresh: warm STL-FW re-solves + hot-swap plumbing.
+
+The pieces the streaming estimator feeds:
+
+* ``TopologyRefresher`` -- re-runs :func:`repro.core.stl_fw.learn_topology`
+  *warm*: Frank-Wolfe restarts from the previous W's Birkhoff atoms
+  (``init=``), a single persistent ``LMOSolver`` carries the auction
+  backends' dual prices across refreshes, and the solve early-stops at
+  the duality-gap level the initial cold solve certified (``stop_gap``).
+  A refresh therefore costs a few FW steps, not a cold ``budget``-length
+  solve (measured in benchmarks/bench_online.py, BENCH_online.json).
+  After each solve the atom set is truncated back to a fixed capacity
+  ``l_max`` (largest coefficients kept, renormalized -- still doubly
+  stochastic), so the data-plane schedule the trainers consume never
+  changes shape.
+* ``OnlineTopologyController`` -- the object a training loop talks to.
+  It owns the estimator, the drift detector, and the refresher;
+  ``observe(labels)`` streams minibatch labels in, and ``on_segment(t)``
+  (the hook the drivers in ``repro.train.trainer`` call at segment
+  boundaries) evaluates the heterogeneity proxy, consults the detector,
+  and -- on a trigger -- refreshes W and returns the new fixed-shape
+  :class:`~repro.core.mixing.ScheduleArrays` for a zero-retrace swap.
+
+Layering: this module imports core + data only. The trainers never
+import it -- they accept any object with the ``on_segment`` protocol --
+so ``repro.train`` stays independent of ``repro.online``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.heterogeneity import tau_bar_label_skew
+from repro.core.mixing import (
+    BirkhoffSchedule,
+    ScheduleArrays,
+    schedule_from_result,
+    schedule_to_arrays,
+    truncate_schedule,
+)
+from repro.core.stl_fw import LMOSolver, STLFWResult, learn_topology
+
+from .streaming import DriftDetector, StreamingPiEstimator
+
+__all__ = ["RefreshConfig", "TopologyRefresher", "OnlineTopologyController"]
+
+
+@dataclasses.dataclass
+class RefreshConfig:
+    """Policy knobs for warm mid-training refreshes.
+
+    Attributes:
+      budget: max FW iterations per refresh (the cap that guarantees a
+        refresh is cheap even when the drift is total; the gap stop
+        usually fires earlier).
+      lam: Eq. (8) bias/variance trade-off. ``None`` (default) inherits
+        the initial solve's recorded ``lam`` -- the only choice under
+        which the gap target compares like with like. Setting it
+        explicitly to a different value is allowed but then the
+        refresher discards ``gap_ref`` (gaps of different objectives
+        are incomparable) and falls back to the relative ``stop_tol``.
+      gap_slack: the refresh stops once its FW gap reaches
+        ``gap_slack x`` the initial cold solve's final gap (1.0 =
+        "certifiably as converged as the cold solve").
+      stop_tol: fallback relative gap stop when the warm start has no
+        recorded reference gap.
+      l_max: fixed atom capacity of the emitted data-plane schedule
+        (which is also the per-step gather/communication degree of the
+        data-plane transport). ``None`` defaults to the initial
+        result's atom count plus one refresh ``budget`` of headroom:
+        a single refresh then fits without truncating its new atoms,
+        and across repeated refreshes the contraction-decayed old atoms
+        are the ones dropped. A tight ``l_max`` (= initial atom count)
+        keeps communication minimal at a measurable topology-quality
+        cost -- the trade-off is the operator's.
+      method: ``learn_topology`` method ("incremental" | "reference").
+    """
+
+    budget: int = 16
+    lam: float | None = None
+    gap_slack: float = 1.0
+    stop_tol: float | None = 0.05
+    l_max: int | None = None
+    method: str = "incremental"
+
+
+class TopologyRefresher:
+    """Warm re-learner with persistent LMO state and fixed atom capacity.
+
+    Args:
+      initial: the cold-solved topology training started with (its atoms
+        seed the first warm refresh; its final FW gap is the quality
+        target every refresh stops at).
+      config: refresh policy.
+      lmo: LMO backend name, or a pre-built persistent ``LMOSolver``.
+        The same solver instance is reused across every refresh, so the
+        auction backends' dual prices (device-resident for
+        ``auction_jit``) warm-start each solve; ``"auto"`` resolves with
+        ``budget=None`` -- the open-ended online rule.
+    """
+
+    def __init__(
+        self,
+        initial: STLFWResult,
+        config: RefreshConfig | None = None,
+        lmo: "str | LMOSolver" = "auto",
+    ):
+        self.config = config or RefreshConfig()
+        self.solver = lmo if isinstance(lmo, LMOSolver) else LMOSolver(lmo)
+        self.solver.resolve(n=initial.W.shape[0], budget=None)
+        sched = schedule_from_result(initial)
+        # `is None`, not truthiness: an explicit l_max=0 must hit
+        # truncate_schedule's validation, not silently become the default
+        if self.config.l_max is not None:
+            self.l_max = int(self.config.l_max)
+        else:
+            self.l_max = sched.n_atoms + self.config.budget
+        sched = truncate_schedule(sched, self.l_max)
+        self._atoms = (list(sched.coeffs), [np.asarray(p) for p in sched.perms])
+        self.result = initial
+        if self.config.lam is not None:
+            self.lam = float(self.config.lam)
+        elif initial.lam is not None:
+            self.lam = float(initial.lam)
+        else:
+            self.lam = 0.1  # the paper's default; pre-lam-field results only
+        gap_ref = None
+        # the gap target is only meaningful against the SAME objective:
+        # require a recorded lam that matches (a result without one --
+        # hand-built or pre-lam-field -- could have been solved at any
+        # lam, so its gap is incomparable and we fall back to stop_tol)
+        same_objective = initial.lam is not None and float(initial.lam) == self.lam
+        if same_objective and initial.gap_trace is not None and len(initial.gap_trace):
+            gap_ref = float(initial.gap_trace[-1])
+        self.gap_ref = gap_ref
+        self.n_refreshes = 0
+        self.last_refresh_s: float | None = None
+        self.last_iters: int | None = None
+
+    @property
+    def schedule(self) -> BirkhoffSchedule:
+        """Current (truncated) static schedule."""
+        return BirkhoffSchedule(
+            coeffs=tuple(float(c) for c in self._atoms[0]),
+            perms=tuple(tuple(int(x) for x in p) for p in self._atoms[1]),
+        )
+
+    @property
+    def W(self) -> np.ndarray:
+        """Current dense W (rebuilt from the truncated atoms)."""
+        return self.schedule.to_matrix()
+
+    def schedule_arrays(self) -> ScheduleArrays:
+        """Current schedule in the fixed-shape data-plane format."""
+        return schedule_to_arrays(self.schedule, self.l_max)
+
+    def refresh(self, Pi_hat: np.ndarray) -> STLFWResult:
+        """Warm re-solve against the streamed Pi estimate.
+
+        Returns the (un-truncated) STLFWResult; the refresher's own
+        schedule/arrays views reflect the ``l_max``-truncated atoms.
+        """
+        cfg = self.config
+        stop_gap = None if self.gap_ref is None else self.gap_ref * cfg.gap_slack
+        stop_tol = cfg.stop_tol if stop_gap is None else None
+        t0 = time.perf_counter()
+        res = learn_topology(
+            Pi_hat,
+            cfg.budget,
+            lam=self.lam,
+            method=cfg.method,
+            lmo=self.solver,
+            init=self._atoms,
+            stop_tol=stop_tol,
+            stop_gap=stop_gap,
+        )
+        self.last_refresh_s = time.perf_counter() - t0
+        self.last_iters = len(res.gamma_trace)
+        sched = truncate_schedule(schedule_from_result(res), self.l_max)
+        self._atoms = (list(sched.coeffs), [np.asarray(p) for p in sched.perms])
+        self.result = res
+        self.n_refreshes += 1
+        return res
+
+
+class OnlineTopologyController:
+    """Streaming estimation -> drift detection -> warm refresh, as one hook.
+
+    The training drivers call ``on_segment(t)`` at segment boundaries
+    (duck-typed -- ``repro.train`` never imports this module). Between
+    those calls the label stream is fed in with ``observe`` (labels are
+    exogenous to the compiled training step, so this happens host-side
+    at zero hot-path cost).
+
+    Args:
+      refresher: warm re-learner holding the current topology.
+      estimator: streaming Pi estimator (defaults: seeded from the
+        refresher's n plus ``num_classes``, uniform init).
+      detector: drift detector on the heterogeneity proxy.
+      num_classes: K, required when ``estimator`` is not given.
+      Pi0: the Pi the initial topology was learned from; seeds the
+        default estimator so the proxy does not ramp from the uniform
+        init to its stationary value (a ramp the detector would read as
+        drift). Ignored when ``estimator`` is given.
+      proxy_B / proxy_sigma2: the ``B`` and ``sigma_max^2`` constants of
+        Proposition 2's ``tau_bar_label_skew`` proxy. The *relative*
+        detector only cares about B up to scale; sigma adds the
+        variance term, which does not depend on Pi_hat -- keep it 0 to
+        track the drift-sensitive bias part alone.
+    """
+
+    def __init__(
+        self,
+        refresher: TopologyRefresher,
+        estimator: StreamingPiEstimator | None = None,
+        detector: DriftDetector | None = None,
+        *,
+        num_classes: int | None = None,
+        Pi0: np.ndarray | None = None,
+        proxy_B: float = 1.0,
+        proxy_sigma2: float = 0.0,
+    ):
+        self.refresher = refresher
+        n = refresher.W.shape[0]
+        if estimator is None:
+            if num_classes is None and Pi0 is None:
+                raise ValueError("pass num_classes, Pi0, or a pre-built estimator")
+            if num_classes is None:
+                num_classes = int(np.asarray(Pi0).shape[1])
+            estimator = StreamingPiEstimator(n, num_classes, init=Pi0)
+        if estimator.n_nodes != n:
+            raise ValueError(
+                f"estimator is for {estimator.n_nodes} nodes, topology has {n}"
+            )
+        self.estimator = estimator
+        self.detector = detector or DriftDetector()
+        self.proxy_B = float(proxy_B)
+        self.proxy_sigma2 = float(proxy_sigma2)
+        self.events: list[dict] = []
+        self._W = refresher.W
+
+    def observe(self, labels: np.ndarray) -> None:
+        """Stream one step's (n, batch) minibatch labels in."""
+        self.estimator.update(labels)
+
+    def proxy(self) -> float:
+        """Current neighborhood-heterogeneity proxy (Prop. 2 at Pi_hat)."""
+        return tau_bar_label_skew(
+            self._W, self.estimator.Pi_hat, self.proxy_B, self.proxy_sigma2
+        )
+
+    def on_segment(self, t: int) -> ScheduleArrays | None:
+        """Segment-boundary hook: returns new arrays iff a refresh fired."""
+        value = self.proxy()
+        triggered = self.detector.update(value)
+        event = {"t": int(t), "proxy": float(value), "triggered": bool(triggered)}
+        if triggered:
+            self.refresher.refresh(self.estimator.Pi_hat)
+            self._W = self.refresher.W
+            event["refresh_s"] = self.refresher.last_refresh_s
+            event["refresh_iters"] = self.refresher.last_iters
+            self.detector.rebase(self.proxy())
+        self.events.append(event)
+        return self.refresher.schedule_arrays() if triggered else None
+
+    def schedule_arrays(self) -> ScheduleArrays:
+        """Current schedule in the trainers' data-plane format."""
+        return self.refresher.schedule_arrays()

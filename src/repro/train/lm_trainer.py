@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.mixing import BirkhoffSchedule, mix_ppermute
+from repro.core.mixing import BirkhoffSchedule, mix_dense_sharded, mix_ppermute
 from repro.models import registry
 from repro.models.common import ModelConfig
 from .sharding import make_param_specs
@@ -42,14 +42,21 @@ __all__ = ["TrainSetup", "make_train_setup", "gossip_fn"]
 
 @dataclasses.dataclass
 class TrainSetup:
-    """Everything needed to jit / lower a distributed train step."""
+    """Everything needed to jit / lower a distributed train step.
 
-    train_step: Callable  # (params, opt_state, batch) -> (params, opt_state, loss)
+    With ``online_w=True`` the step function takes the mixing matrix as
+    a trailing *data* argument -- ``train_step(params, opt_state, batch,
+    mix_w)`` -- so an online topology refresh swaps W by passing a
+    different (n, n) array, never by rebuilding/retracing the step.
+    """
+
+    train_step: Callable  # (params, opt_state, batch[, mix_w]) -> (params, opt_state, loss)
     init_params: Callable  # (rng) -> params (abstract-safe via jax.eval_shape)
     param_specs: PyTree
     batch_spec: PyTree
     mode: str
     n_nodes: int
+    online_w: bool = False
 
     def abstract_params(self) -> PyTree:
         return jax.eval_shape(self.init_params, jax.random.PRNGKey(0))
@@ -73,12 +80,21 @@ class TrainSetup:
 
         Jit the scan variant (``jax.jit(setup.multi_step_fn())``) and
         feed it segments of ``k`` steps between eval points.
+
+        With ``online_w=True`` both variants take the mixing matrix as a
+        trailing argument -- ``multi_step(params, opt_state, batches,
+        mix_w)`` -- and thread it through the scan as an ordinary traced
+        operand: calling the same jitted multi-step with a refreshed W
+        is a value change, not a shape change, so the hot swap compiles
+        nothing (asserted in tests/test_distributed.py).
         """
         if rollout == "scan":
-            def multi_step(params, momentum_state, batches):
+            def multi_step(params, momentum_state, batches, *mix_w):
+                self._check_online_args(mix_w)
+
                 def body(carry, batch_t):
                     p, m = carry
-                    p, m, loss = self.train_step(p, m, batch_t)
+                    p, m, loss = self.train_step(p, m, batch_t, *mix_w)
                     return (p, m), loss
 
                 (params, momentum_state), losses = jax.lax.scan(
@@ -88,7 +104,8 @@ class TrainSetup:
 
             return multi_step
         if rollout == "loop":
-            def multi_step(params, momentum_state, batches):
+            def multi_step(params, momentum_state, batches, *mix_w):
+                self._check_online_args(mix_w)
                 if self._jitted_step is None:
                     self._jitted_step = jax.jit(self.train_step)
                 k = jax.tree_util.tree_leaves(batches)[0].shape[0]
@@ -96,13 +113,23 @@ class TrainSetup:
                 for t in range(k):
                     batch_t = jax.tree_util.tree_map(lambda x: x[t], batches)
                     params, momentum_state, loss = self._jitted_step(
-                        params, momentum_state, batch_t
+                        params, momentum_state, batch_t, *mix_w
                     )
                     losses.append(loss)
                 return params, momentum_state, jnp.stack(losses)
 
             return multi_step
         raise ValueError(f"unknown rollout {rollout!r}")
+
+    def _check_online_args(self, mix_w: tuple) -> None:
+        if self.online_w and len(mix_w) != 1:
+            raise TypeError(
+                "online_w setup: call multi_step(params, opt_state, batches, mix_w)"
+            )
+        if not self.online_w and mix_w:
+            raise TypeError(
+                "this setup was built without online_w; no mix_w argument expected"
+            )
 
     # cached jax.jit of train_step for the "loop" rollout (recompiling it
     # per multi_step call would defeat the A/B comparison)
@@ -165,10 +192,20 @@ def make_train_setup(
     impl: str = "xla",
     grad_accum: int = 1,
     gossip_every: int = 1,
+    online_w: bool = False,
 ) -> TrainSetup:
     """Build the distributed train step for (cfg, mesh, mode).
 
     ``schedule=None`` in dsgd/dsgd_pod modes means complete-graph mixing.
+    ``online_w=True`` builds the *online-adaptation* step: the mixing
+    matrix is a trailing (n, n) data argument (``train_step(params,
+    opt_state, batch, mix_w)``) instead of a baked-in schedule, so a
+    mid-training topology refresh swaps W with zero retraces. In dsgd
+    mode the per-node mixing then runs as ``mix_dense_sharded``
+    (all-gather + row contraction -- O(n P) bytes where the static
+    ppermute schedule moves d_max permutes; the documented price of
+    hot-swappability, see repro.core.mixing). Incompatible with a
+    static ``schedule`` and with fsdp mode (whose all-reduce has no W).
     ``grad_accum > 1`` splits the per-step batch into microbatches and
     accumulates gradients in a scan -- same math, ~grad_accum x smaller
     live-activation footprint (the big lever for DeepSeek-V2 -- §Perf).
@@ -178,6 +215,13 @@ def make_train_setup(
     then takes a step counter through the momentum_state slot convention
     (see train_step signature below: ``step`` is carried in opt state).
     """
+    if online_w and mode == "fsdp":
+        raise ValueError("online_w needs a node axis (dsgd/dsgd_pod); fsdp has no W")
+    if online_w and schedule is not None:
+        raise ValueError(
+            "online_w and a static schedule are mutually exclusive -- pass the "
+            "initial W as the mix_w argument of the step instead"
+        )
     axes = mesh.axis_names
     if mode == "dsgd":
         node_axis = "data"
@@ -265,7 +309,7 @@ def make_train_setup(
     else:
         grad_of = grad_of_single
 
-    def train_step(params, momentum_state, batch):
+    def _step_impl(params, momentum_state, batch, mix_w=None):
         if node_axis is None:
             loss, grads = grad_of(params, batch)
             new_params, new_m = _sgd_update(params, grads, momentum_state, lr, momentum)
@@ -281,11 +325,14 @@ def make_train_setup(
 
             losses, grads = jax.vmap(grad_of)(params, batch)
             half, new_m = _sgd_update(params, grads, momentum_state, lr, momentum)
-            W_pod = (
-                jnp.asarray(schedule.to_matrix(), jnp.float32)
-                if schedule is not None
-                else jnp.full((n_nodes, n_nodes), 1.0 / n_nodes, jnp.float32)
-            )
+            if online_w:
+                W_pod = mix_w.astype(jnp.float32)
+            else:
+                W_pod = (
+                    jnp.asarray(schedule.to_matrix(), jnp.float32)
+                    if schedule is not None
+                    else jnp.full((n_nodes, n_nodes), 1.0 / n_nodes, jnp.float32)
+                )
             mixed = jax.tree_util.tree_map(
                 lambda x: jnp.einsum(
                     "pq,q...->p...", W_pod, x.astype(jnp.float32)
@@ -302,7 +349,7 @@ def make_train_setup(
         squeeze = lambda t: jax.tree_util.tree_map(lambda x: x[0], t)
         unsqueeze = lambda t: jax.tree_util.tree_map(lambda x: x[None], t)
 
-        def per_node(p, m, b):
+        def per_node(p, m, b, *w_args):
             p1, b1 = squeeze(p), squeeze(b)
             step = m.get("step") if isinstance(m, dict) else None
             m_tree = m.get("m") if isinstance(m, dict) else m
@@ -314,6 +361,8 @@ def make_train_setup(
             half, new_m = _sgd_update(p1, grads, m1, lr, momentum)
 
             def do_mix(h):
+                if online_w:
+                    return mix_dense_sharded(h, w_args[0], node_axis)
                 if schedule is None:
                     return jax.tree_util.tree_map(
                         lambda x: jax.lax.pmean(x.astype(jnp.float32), node_axis).astype(x.dtype),
@@ -349,14 +398,26 @@ def make_train_setup(
         else:
             mom_specs = m_inner
         bspec = jax.tree_util.tree_map(lambda _: P(node_axis), batch)
+        in_specs = (node_specs, mom_specs, bspec)
+        args = (params, momentum_state, batch)
+        if online_w:
+            in_specs = in_specs + (P(),)  # W replicated to every node shard
+            args = args + (mix_w,)
         return shard_map(
             per_node,
             mesh=mesh,
-            in_specs=(node_specs, mom_specs, bspec),
+            in_specs=in_specs,
             out_specs=(node_specs, mom_specs, P()),
             axis_names={node_axis},
             check_vma=False,
-        )(params, momentum_state, batch)
+        )(*args)
+
+    if online_w:
+        def train_step(params, momentum_state, batch, mix_w):
+            return _step_impl(params, momentum_state, batch, mix_w)
+    else:
+        def train_step(params, momentum_state, batch):
+            return _step_impl(params, momentum_state, batch)
 
     return TrainSetup(
         train_step=train_step,
@@ -365,4 +426,5 @@ def make_train_setup(
         batch_spec=batch_spec_for,
         mode=mode,
         n_nodes=n_nodes,
+        online_w=online_w,
     )

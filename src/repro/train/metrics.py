@@ -37,9 +37,15 @@ def node_spread(values: jax.Array) -> dict[str, float]:
 
 @dataclasses.dataclass
 class MetricLogger:
-    """In-memory metric store with CSV export (offline container: no W&B)."""
+    """In-memory metric store with CSV export (offline container: no W&B).
+
+    ``aux`` carries run-level (non-per-step) diagnostics -- e.g. the
+    online drivers record ``n_traces`` (compiled-rollout trace count;
+    must stay 1 across schedule hot-swaps) and ``swaps`` there.
+    """
 
     history: list[dict] = dataclasses.field(default_factory=list)
+    aux: dict = dataclasses.field(default_factory=dict)
 
     def log(self, step: int, **metrics: float) -> None:
         row = {"step": step}

@@ -33,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dsgd import dsgd_init, dsgd_step_stacked
-from repro.core.mixing import BirkhoffSchedule
+from repro.core.mixing import BirkhoffSchedule, ScheduleArrays
 from repro.data.synthetic import MeanEstimationTask
 from .metrics import MetricLogger, consensus_distance
 
@@ -61,9 +61,12 @@ def run_mean_estimation(
     batch: int = 1,
     seed: int = 0,
     use_kernel: bool = False,
-    schedule: BirkhoffSchedule | None = None,
+    schedule: BirkhoffSchedule | ScheduleArrays | None = None,
     transport: str = "auto",
     rollout: str = "scan",
+    zs: np.ndarray | None = None,
+    on_segment=None,
+    segment_len: int | None = None,
 ) -> dict:
     """D-SGD on ``F_i(theta, z) = (theta - z)^2``; returns error traces.
 
@@ -75,6 +78,19 @@ def run_mean_estimation(
     ``lax.scan`` (noise is presampled host-side with the same RNG call
     sequence as the loop, so both rollouts traverse identical data);
     ``rollout="loop"`` dispatches the same jitted step per iteration.
+
+    Online topology adaptation: pass ``schedule`` as a fixed-shape
+    ``ScheduleArrays`` and the mixing matrix becomes *data* -- the
+    rollout is compiled once and a mid-run schedule swap never
+    retraces it (the returned dict carries ``"n_traces"`` to prove it).
+    ``on_segment(t) -> ScheduleArrays | None`` is called after each
+    ``segment_len``-step segment (e.g. an
+    ``repro.online.OnlineTopologyController``); a non-None return hot-
+    swaps the schedule for the following segments. ``zs`` overrides the
+    presampled observations with an explicit (steps, n, batch) stream
+    (how the drift scenarios of ``repro.data.drift`` are injected --
+    the observation noise is exogenous to training, so a drifting task
+    is just a different precomputed stream).
     """
     if rollout not in ("scan", "loop"):
         raise ValueError(f"unknown rollout {rollout!r}")
@@ -84,21 +100,46 @@ def run_mean_estimation(
     state = dsgd_init(theta)
     Wj = jnp.asarray(W, jnp.float32) if W is not None else None
     theta_star = jnp.asarray(task.theta_star, jnp.float32)
-    # Presample the noise exactly as the per-step loop would draw it.
-    zs_host = [task.sample(batch, rng) for _ in range(steps)]
-    zs = jnp.asarray(
-        np.stack(zs_host) if zs_host else np.zeros((0, n, batch)), jnp.float32
-    )  # (steps, n, batch)
+    if zs is None:
+        # Presample the noise exactly as the per-step loop would draw it.
+        zs_host = [task.sample(batch, rng) for _ in range(steps)]
+        zs = jnp.asarray(
+            np.stack(zs_host) if zs_host else np.zeros((0, n, batch)), jnp.float32
+        )  # (steps, n, batch)
+    else:
+        zs = jnp.asarray(zs, jnp.float32)
+        if zs.ndim != 3 or zs.shape[0] != steps or zs.shape[1] != n:
+            raise ValueError(
+                f"zs must be (steps={steps}, n={n}, batch), got {zs.shape}"
+            )
 
-    def step(carry, z):
-        theta, st = carry
-        grads = 2.0 * (theta - z.mean(axis=1, keepdims=True))
-        theta, st = dsgd_step_stacked(
-            theta, grads, st, Wj, lr,
-            use_kernel=use_kernel, schedule=schedule, transport=transport,
+    online = isinstance(schedule, ScheduleArrays)
+    if on_segment is not None and not online:
+        raise ValueError(
+            "on_segment hot-swapping needs the schedule as ScheduleArrays "
+            "(a static BirkhoffSchedule is baked into the trace)"
         )
-        err = jnp.square(theta[:, 0] - theta_star)
-        return (theta, st), (jnp.mean(err), jnp.max(err), jnp.min(err))
+
+    def make_step(sched):
+        def step(carry, z):
+            theta, st = carry
+            grads = 2.0 * (theta - z.mean(axis=1, keepdims=True))
+            theta, st = dsgd_step_stacked(
+                theta, grads, st, Wj, lr,
+                use_kernel=use_kernel, schedule=sched, transport=transport,
+            )
+            err = jnp.square(theta[:, 0] - theta_star)
+            return (theta, st), (jnp.mean(err), jnp.max(err), jnp.min(err))
+        return step
+
+    if online:
+        return _run_mean_estimation_online(
+            theta, state, zs, make_step, schedule,
+            steps=steps, segment_len=segment_len, on_segment=on_segment,
+            rollout=rollout,
+        )
+
+    step = make_step(schedule)
 
     if rollout == "scan":
         @jax.jit
@@ -125,6 +166,88 @@ def run_mean_estimation(
         "max_sq_error": mx,
         "min_sq_error": mn,
         "theta": np.asarray(theta),
+    }
+
+
+def _run_mean_estimation_online(
+    theta,
+    state,
+    zs,
+    make_step,
+    sched0: ScheduleArrays,
+    *,
+    steps: int,
+    segment_len: int | None,
+    on_segment,
+    rollout: str,
+) -> dict:
+    """Mean-estimation driver with the schedule threaded as data.
+
+    The ``ScheduleArrays`` rides in the rollout carry, so every segment
+    -- before or after a hot swap -- executes the SAME compiled
+    computation. ``n_traces`` in the returned dict counts actual traces
+    of the rollout: 1 per distinct segment length (exactly 1 when
+    ``segment_len`` divides ``steps``), regardless of how many times
+    the schedule was swapped.
+    """
+    n_traces = 0
+    if rollout == "scan":
+        def roll_impl(carry, zs_seg):
+            nonlocal n_traces
+            n_traces += 1
+            theta, st, sa = carry
+            (theta, st), traces = jax.lax.scan(make_step(sa), (theta, st), zs_seg)
+            return (theta, st, sa), traces
+        roll = jax.jit(roll_impl)
+    else:
+        def step_impl(carry, z):
+            nonlocal n_traces
+            n_traces += 1
+            theta, st, sa = carry
+            (theta, st), out = make_step(sa)((theta, st), z)
+            return (theta, st, sa), out
+        step_j = jax.jit(step_impl)
+
+        def roll(carry, zs_seg):
+            outs = []
+            for t in range(zs_seg.shape[0]):
+                carry, out = step_j(carry, zs_seg[t])
+                outs.append(out)
+            stacked = [jnp.stack([o[i] for o in outs]) for i in range(3)]
+            return carry, tuple(stacked)
+
+    # NB: `is None`, not truthiness -- segment_len=0 must hit the
+    # validation below, not silently become one full-run segment
+    seg = int(segment_len) if segment_len is not None else max(steps, 1)
+    if seg < 1:
+        raise ValueError(f"segment_len must be >= 1, got {segment_len}")
+    carry = (theta, state, sched0)
+    mse_l, mx_l, mn_l = [], [], []
+    swaps: list[int] = []
+    t0 = 0
+    while t0 < steps:
+        length = min(seg, steps - t0)
+        carry, (e_mean, e_max, e_min) = roll(carry, zs[t0 : t0 + length])
+        mse_l.append(np.asarray(e_mean))
+        mx_l.append(np.asarray(e_max))
+        mn_l.append(np.asarray(e_min))
+        t0 += length
+        if on_segment is not None and t0 < steps:
+            # no hook after the final segment: a refresh triggered there
+            # would burn a warm solve whose schedule nothing executes
+            new_sa = on_segment(t0 - 1)
+            if new_sa is not None:
+                carry = (carry[0], carry[1], new_sa)
+                swaps.append(t0 - 1)
+    theta = carry[0]
+    empty = np.zeros((0,))
+    return {
+        "mean_sq_error": np.concatenate(mse_l) if mse_l else empty,
+        "max_sq_error": np.concatenate(mx_l) if mx_l else empty,
+        "min_sq_error": np.concatenate(mn_l) if mn_l else empty,
+        "theta": np.asarray(theta),
+        "n_traces": n_traces,
+        "swaps": swaps,
     }
 
 
@@ -237,9 +360,10 @@ def run_classification(
     y_test: np.ndarray | None = None,
     seed: int = 0,
     use_kernel: bool = False,
-    schedule: BirkhoffSchedule | None = None,
+    schedule: BirkhoffSchedule | ScheduleArrays | None = None,
     transport: str = "auto",
     rollout: str = "scan",
+    on_segment=None,
 ) -> MetricLogger:
     """D-SGD classification with per-node local data (Algorithm 1).
 
@@ -249,9 +373,24 @@ def run_classification(
     per-step losses come back as one array per segment -- no host sync in
     the hot loop); ``rollout="loop"`` runs the same jitted step per
     iteration and produces a bit-identical trace.
+
+    Online topology adaptation: with ``schedule`` as a fixed-shape
+    ``ScheduleArrays`` the mixing schedule travels in the rollout carry
+    as data, and ``on_segment(t) -> ScheduleArrays | None`` (called
+    after each scan segment / at eval boundaries) can hot-swap it with
+    zero retraces. The returned logger's ``aux`` dict records
+    ``n_traces`` (compiled-rollout traces: one per distinct segment
+    length -- swaps add none) and ``swaps`` (steps where a swap
+    landed).
     """
     if rollout not in ("scan", "loop"):
         raise ValueError(f"unknown rollout {rollout!r}")
+    online = isinstance(schedule, ScheduleArrays)
+    if on_segment is not None and not online:
+        raise ValueError(
+            "on_segment hot-swapping needs the schedule as ScheduleArrays "
+            "(a static BirkhoffSchedule is baked into the trace)"
+        )
     n = len(indices_per_node)
     num_classes = int(y.max()) + 1
     dim = X.shape[1]
@@ -271,7 +410,12 @@ def run_classification(
     grad_fn = jax.grad(classifier_loss)
 
     def step(carry, _):
-        params, state, key = carry
+        if online:
+            params, state, key, sa = carry
+            sched_t = sa
+        else:
+            params, state, key = carry
+            sched_t = schedule
         key, sub = jax.random.split(key)
         keys = jax.random.split(sub, n)
 
@@ -285,9 +429,12 @@ def run_classification(
         grads, losses = jax.vmap(node_grads)(params, data.x, data.y, data.lengths, keys)
         new_params, new_state = dsgd_step_stacked(
             params, grads, state, Wj, lr,
-            use_kernel=use_kernel, schedule=schedule, transport=transport,
+            use_kernel=use_kernel, schedule=sched_t, transport=transport,
         )
-        return (new_params, new_state, key), losses.mean()
+        out_carry = (
+            (new_params, new_state, key, sa) if online else (new_params, new_state, key)
+        )
+        return out_carry, losses.mean()
 
     @jax.jit
     def eval_fn(params, X_t, y_t):
@@ -316,21 +463,58 @@ def run_classification(
             else:
                 logger.log(t, loss=float(loss))
 
+    n_traces = 0
+    swaps: list[int] = []
+
+    def maybe_swap(t: int, carry):
+        """Hot-swap the carried schedule if the hook hands back a new one."""
+        if on_segment is None:
+            return carry
+        new_sa = on_segment(t)
+        if new_sa is None:
+            return carry
+        swaps.append(t)
+        return (*carry[:-1], new_sa)
+
+    # on_segment needs segment boundaries even when there is no eval
+    # data: segmenting is decoupled from evaluation (the eval calls
+    # themselves stay gated on do_eval), so a hook-driven run without
+    # X_test still swaps at eval_every boundaries -- identically in
+    # both rollouts -- instead of silently degrading to one
+    # end-of-run call.
+    segmented = do_eval or on_segment is not None
+
     if rollout == "scan":
         @functools.partial(jax.jit, static_argnames=("length",))
         def roll(carry, length: int):
+            nonlocal n_traces
+            n_traces += 1
             return jax.lax.scan(step, carry, None, length=length)
 
-        carry = (params, state, key)
+        carry = (params, state, key, schedule) if online else (params, state, key)
         t0 = 0
-        for seg_len, evaluate in _eval_segments(steps, eval_every, do_eval):
+        for seg_len, evaluate in _eval_segments(steps, eval_every, segmented):
             carry, losses = roll(carry, seg_len)
-            log_segment(t0, np.asarray(losses), carry[0], evaluate)
+            log_segment(t0, np.asarray(losses), carry[0], evaluate and do_eval)
             t0 += seg_len
+            if t0 < steps:  # no hook after the final segment (see above)
+                carry = maybe_swap(t0 - 1, carry)
     else:
-        step_j = jax.jit(step)
-        carry = (params, state, key)
+        def step_impl(carry, x):
+            nonlocal n_traces
+            n_traces += 1
+            return step(carry, x)
+
+        step_j = jax.jit(step_impl)
+        carry = (params, state, key, schedule) if online else (params, state, key)
         for t in range(steps):
             carry, loss = step_j(carry, None)
             log_segment(t, np.asarray(loss)[None], carry[0], do_eval)
+            # same boundaries the scan segments end on, minus the final
+            # step; the hook guard also keeps eval_every=0 runs (legal
+            # when neither eval nor a hook needs boundaries) modulo-free
+            if on_segment is not None and t % eval_every == 0 and t < steps - 1:
+                carry = maybe_swap(t, carry)
+    logger.aux["n_traces"] = n_traces
+    logger.aux["swaps"] = swaps
     return logger

@@ -204,3 +204,87 @@ def test_fsdp_step_matches_loss_of_dsgd_complete():
         print("MODES_CONSISTENT", float(loss_f), float(loss_d))
     """)
     assert "MODES_CONSISTENT" in out
+
+
+def test_online_w_matches_static_schedule_and_swaps_without_retrace():
+    """The online-adaptation step (W as data, all-gather mixing) must equal
+    the static ppermute-schedule step on the same W, and a W hot-swap
+    through the scanned multi-step must compile nothing new."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.compat import AxisType, make_compat_mesh, set_mesh
+        from repro.configs import get_smoke_config
+        from repro.core import learn_topology, schedule_from_result
+        from repro.train.lm_trainer import make_train_setup
+
+        mesh = make_compat_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+        cfg = get_smoke_config("qwen3-0.6b")
+        Pi = np.eye(2)[np.arange(4) % 2].astype(float)
+        sched = schedule_from_result(learn_topology(Pi, budget=2, lam=0.5))
+        W = jnp.asarray(sched.to_matrix(), jnp.float32)
+
+        s_static = make_train_setup(cfg, mesh, mode="dsgd", schedule=sched, lr=2e-2)
+        s_online = make_train_setup(cfg, mesh, mode="dsgd", online_w=True, lr=2e-2)
+        sh = jax.tree.map(lambda s: NamedSharding(mesh, s), s_static.param_specs,
+                          is_leaf=lambda x: isinstance(x, P))
+        with set_mesh(mesh):
+            params = jax.jit(s_static.init_params, out_shardings=sh)(jax.random.PRNGKey(0))
+            toks = np.random.default_rng(0).integers(0, 50, size=(4, 2, 32))
+            batch = {k: jnp.asarray(toks, jnp.int32) for k in ("tokens", "labels")}
+            p1, _, l1 = jax.jit(s_static.train_step)(params, None, batch)
+            p2, _, l2 = jax.jit(s_online.train_step)(params, None, batch, W)
+            d = max(float(jnp.abs(a - b).max())
+                    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+            assert d < 2e-5, d
+            assert abs(float(l1) - float(l2)) < 1e-5
+
+            n_traces = [0]
+            ms = s_online.multi_step_fn("scan")
+            def counted(p, m, b, w):
+                n_traces[0] += 1
+                return ms(p, m, b, w)
+            msj = jax.jit(counted)
+            batches = {k: jnp.stack([batch[k]] * 3) for k in batch}
+            p, _, _ = msj(params, None, batches, W)
+            W2 = jnp.full((4, 4), 0.25, jnp.float32)   # hot swap: uniform W
+            p, _, losses2 = msj(p, None, batches, W2)
+            assert n_traces[0] == 1, n_traces          # swap retraced nothing
+            assert np.isfinite(np.asarray(losses2)).all()
+        print("ONLINE_W_OK", d)
+    """)
+    assert "ONLINE_W_OK" in out
+
+
+def test_online_w_rejects_invalid_configs():
+    from repro.configs import get_smoke_config  # noqa: F401  (import-path smoke)
+    code = """
+        import numpy as np, pytest
+        from repro.compat import AxisType, make_compat_mesh
+        from repro.configs import get_smoke_config
+        from repro.core import learn_topology, schedule_from_result
+        from repro.train.lm_trainer import make_train_setup
+
+        mesh = make_compat_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+        cfg = get_smoke_config("qwen3-0.6b")
+        Pi = np.eye(2)[np.arange(4) % 2].astype(float)
+        sched = schedule_from_result(learn_topology(Pi, budget=2, lam=0.5))
+        for kwargs in ({"mode": "fsdp", "online_w": True},
+                       {"mode": "dsgd", "online_w": True, "schedule": sched}):
+            try:
+                make_train_setup(cfg, mesh, lr=1e-2, **kwargs)
+            except ValueError:
+                continue
+            raise AssertionError(f"{kwargs} should have been rejected")
+        setup = make_train_setup(cfg, mesh, mode="dsgd", online_w=True, lr=1e-2)
+        ms = setup.multi_step_fn("scan")
+        try:
+            ms(None, None, {"tokens": np.zeros((1, 4, 2, 32))})  # missing mix_w
+        except TypeError:
+            pass
+        else:
+            raise AssertionError("missing mix_w should raise")
+        print("ONLINE_W_VALIDATION_OK")
+    """
+    out = run_with_devices(code)
+    assert "ONLINE_W_VALIDATION_OK" in out

@@ -1,0 +1,170 @@
+"""Drift scenario generators + partition edge cases under drift resampling."""
+
+import numpy as np
+import pytest
+
+from repro.data.drift import (
+    AbruptLabelSwap,
+    GradualDirichlet,
+    NodeChurn,
+    labels_stream,
+    partition_from_pi,
+)
+from repro.data.partition import (
+    cluster_partition,
+    dirichlet_partition,
+    proportions_from_labels,
+    shard_partition,
+)
+
+
+def _dirichlet_pi(n, K, seed=0, alpha=0.5):
+    return np.random.default_rng(seed).dirichlet(alpha * np.ones(K), size=n)
+
+
+# ---------------------------------------------------------------------------
+# scenarios
+# ---------------------------------------------------------------------------
+
+def test_abrupt_label_swap_switches_at_t_drift():
+    Pi0 = _dirichlet_pi(10, 4)
+    perm = np.random.default_rng(1).permutation(10)
+    sc = AbruptLabelSwap(Pi0, t_drift=5, node_perm=perm)
+    np.testing.assert_allclose(sc.Pi(4), Pi0)
+    np.testing.assert_allclose(sc.Pi(5), Pi0[perm])
+    with pytest.raises(ValueError):
+        AbruptLabelSwap(Pi0, t_drift=5, node_perm=np.zeros(10, np.int64))
+
+
+def test_sampled_labels_match_distribution():
+    Pi0 = _dirichlet_pi(6, 5, seed=2)
+    sc = AbruptLabelSwap(Pi0, t_drift=100)
+    big = sc.sample_labels(0, 20000, np.random.default_rng(3))
+    emp = np.stack([np.bincount(big[i], minlength=5) / 20000 for i in range(6)])
+    assert np.abs(emp - Pi0).max() < 0.02
+
+
+def test_labels_stream_reproducible_and_shaped():
+    sc = AbruptLabelSwap(_dirichlet_pi(4, 3), t_drift=2)
+    a = labels_stream(sc, 7, 5, seed=9)
+    b = labels_stream(sc, 7, 5, seed=9)
+    assert a.shape == (7, 4, 5) and a.dtype == np.int32
+    np.testing.assert_array_equal(a, b)
+    assert labels_stream(sc, 0, 5).shape == (0, 4, 5)
+
+
+def test_gradual_dirichlet_interpolates_on_simplex():
+    Pi0 = _dirichlet_pi(8, 4, seed=4)
+    gd = GradualDirichlet(Pi0, t_start=10, t_end=20, seed=5)
+    np.testing.assert_allclose(gd.Pi(10), Pi0)
+    np.testing.assert_allclose(gd.Pi(20), gd.Pi1)
+    for t in (12, 15, 18):
+        Pi_t = gd.Pi(t)
+        assert np.allclose(Pi_t.sum(axis=1), 1.0, atol=1e-12)
+        assert Pi_t.min() >= 0.0
+    mid = gd.Pi(15)
+    np.testing.assert_allclose(mid, 0.5 * (Pi0 + gd.Pi1))
+    with pytest.raises(ValueError):
+        GradualDirichlet(Pi0, t_start=5, t_end=5)
+
+
+def test_node_churn_replaces_rows_and_masks_offline_windows():
+    Pi0 = _dirichlet_pi(6, 4, seed=6)
+    ch = NodeChurn(Pi0, events=((3, 1, 2), (5, 4)), seed=7)
+    np.testing.assert_allclose(ch.Pi(2), Pi0)
+    assert not np.allclose(ch.Pi(3)[1], Pi0[1])       # replaced at t=3
+    np.testing.assert_allclose(ch.Pi(3)[0], Pi0[0])   # others untouched
+    assert not np.allclose(ch.Pi(5)[4], Pi0[4])
+    rng = np.random.default_rng(0)
+    lab3 = ch.sample_labels(3, 4, rng)
+    assert np.all(lab3[1] == -1)                      # offline window [3, 5)
+    lab5 = ch.sample_labels(5, 4, rng)
+    assert np.all(lab5[1] >= 0)                       # back online
+    assert np.array_equal(ch.offline_nodes(4), [1])
+    assert ch.offline_nodes(5).size == 0
+    with pytest.raises(ValueError):
+        NodeChurn(Pi0, events=((1, 99),))
+
+
+def test_partition_from_pi_matches_target_proportions():
+    rng = np.random.default_rng(8)
+    K = 4
+    labels = rng.integers(0, K, size=4000)
+    Pi = _dirichlet_pi(10, K, seed=9)
+    parts = partition_from_pi(labels, Pi, samples_per_node=500, seed=10)
+    emp = proportions_from_labels(labels, parts, K)
+    assert np.abs(emp - Pi).max() < 0.08
+    for idx in parts:
+        assert len(idx) == 500
+
+
+def test_partition_from_pi_handles_missing_class_pools():
+    # class 2 has no samples at all: rows renormalize away from it
+    labels = np.array([0, 0, 1, 1, 3, 3] * 20)
+    Pi = np.array([[0.0, 0.0, 1.0, 0.0],     # entire row on the empty pool
+                   [0.25, 0.25, 0.25, 0.25]])
+    parts = partition_from_pi(labels, Pi, samples_per_node=40, seed=0)
+    assert len(parts[0]) == 0                 # nothing to draw for node 0
+    assert len(parts[1]) == 40
+    assert not np.any(labels[parts[1]] == 2)
+
+
+# ---------------------------------------------------------------------------
+# partition regression: drift-resampling edge cases
+# ---------------------------------------------------------------------------
+
+def test_partitioners_keep_fixed_k_under_drift_resampling():
+    """A temporarily-absent class must not shrink Pi's width."""
+    rng = np.random.default_rng(11)
+    labels_full = rng.integers(0, 5, size=300)
+    labels_drifted = labels_full[labels_full != 4]  # class 4 vanished
+    for fn in (shard_partition, dirichlet_partition, cluster_partition):
+        _, Pi = fn(labels_drifted, 6, num_classes=5)
+        assert Pi.shape == (6, 5)
+        assert np.allclose(Pi.sum(axis=1), 1.0, atol=1e-12)
+        # class-4 mass per row: 0 (observed data) or 1/K (an empty node's
+        # uniform prior row) -- never anything data-driven
+        for v in Pi[:, 4]:
+            assert np.isclose(v, 0.0) or np.isclose(v, 0.2), Pi[:, 4]
+
+
+def test_partitioners_single_class_and_empty_nodes():
+    labels = np.zeros(10, np.int64)
+    idx, Pi = dirichlet_partition(labels, 8, num_classes=1, seed=0)
+    assert Pi.shape == (8, 1)
+    np.testing.assert_allclose(Pi, 1.0)       # single class: all rows [1.0]
+    # more nodes than samples: some nodes end up empty -> uniform rows
+    idx, Pi = dirichlet_partition(labels, 8, num_classes=3, seed=0)
+    empty = [i for i, ix in enumerate(idx) if len(ix) == 0]
+    for i in empty:
+        np.testing.assert_allclose(Pi[i], 1.0 / 3)
+    covered = np.concatenate([ix for ix in idx if len(ix)])
+    assert sorted(covered.tolist()) == list(range(10))  # no sample lost
+
+
+def test_partitioners_reject_inconsistent_num_classes():
+    labels = np.array([0, 1, 5])
+    for fn in (shard_partition, dirichlet_partition, cluster_partition):
+        with pytest.raises(ValueError):
+            fn(labels, 2, num_classes=3)      # label 5 out of range
+        with pytest.raises(ValueError):
+            fn(np.array([], dtype=np.int64), 2)  # K not inferable
+        idx, Pi = fn(np.array([], dtype=np.int64), 2, num_classes=4)
+        assert Pi.shape == (2, 4)             # empty labels + explicit K is fine
+        np.testing.assert_allclose(Pi, 0.25)
+
+
+def test_proportions_from_labels_rejects_out_of_range():
+    labels = np.array([0, 1, 2, 7])
+    with pytest.raises(ValueError):
+        proportions_from_labels(labels, [np.arange(4)], num_classes=3)
+    Pi = proportions_from_labels(labels, [np.array([], np.int64)], num_classes=3)
+    np.testing.assert_allclose(Pi, 1.0 / 3)
+
+
+def test_shard_partition_more_shards_than_samples():
+    labels = np.array([0, 1, 0, 1])
+    idx, Pi = shard_partition(labels, 4, shards_per_node=2, num_classes=2)
+    assert Pi.shape == (4, 2)
+    covered = np.concatenate([ix for ix in idx if len(ix)])
+    assert sorted(covered.tolist()) == [0, 1, 2, 3]

@@ -8,6 +8,7 @@ from repro.core import topology as T
 from repro.core.compression import bf16_compress, ef_gossip_step, topk_compress
 from repro.core.dynamic import (
     AtomCycling,
+    OnlineSchedule,
     PeriodicGossip,
     RandomMatching,
     composite_matrix,
@@ -50,6 +51,32 @@ def test_atom_cycling_composite_mixes():
     comp = composite_matrix(sched, 8)
     # the composite over a full cycle must actually mix (p > 0)
     assert T.mixing_parameter(comp) > 0.0
+
+
+def test_online_schedule_composite_doubly_stochastic_across_refresh():
+    """Satellite requirement: AtomCycling/PeriodicGossip composed with a
+    refreshing W must keep the k-step composite doubly stochastic even
+    when the window spans a refresh boundary."""
+    rng = np.random.default_rng(0)
+    n, K = 12, 4
+    Pi0 = np.eye(K)[np.arange(n) % K].astype(float)
+    r0 = learn_topology(Pi0, budget=4, lam=0.3)
+    r1 = learn_topology(Pi0[rng.permutation(n)], budget=4, lam=0.3)
+
+    for factory in (AtomCycling, lambda res: PeriodicGossip(res.W, period=3)):
+        online = OnlineSchedule(factory, initial=r0)
+        online.push(7, r1)          # refresh mid-window
+        for t in (0, 6, 7, 8, 13):  # per-step matrices around the boundary
+            assert T.is_doubly_stochastic(online.matrix(t))
+        comp = composite_matrix(online, 14)  # spans the boundary at t=7
+        assert T.is_doubly_stochastic(comp)
+    # segment-local time: the refreshed PeriodicGossip gossips at its own t=0
+    online = OnlineSchedule(lambda res: PeriodicGossip(res.W, period=3), initial=r0)
+    online.push(7, r1)
+    assert np.allclose(online.matrix(7), r1.W)
+    assert np.allclose(online.matrix(8), np.eye(n))
+    with pytest.raises(ValueError):
+        online.push(5, r0)          # refreshes must move forward in time
 
 
 def _run_dynamic(task, schedule, steps=80, lr=0.15):
