@@ -30,11 +30,38 @@ claims, measured (and asserted) rather than asserted in prose.
    --smoke too, so CI catches any regression that turns a swap back
    into a retrace (acceptance criterion c).
 
+ISSUE 5 adds two more measured claims:
+
+4. **Staged-pool sharded mixing** (subprocess, forced host devices) --
+   the pre-staged ppermute atom pool vs the all-gather on the online
+   MESH trainer: bytes/step from the comm counter (the pool must move
+   <= (d_max+1)/n of the all-gather's bytes -- asserted), median
+   segment wall time for both transports, zero retraces across >= 3
+   consecutive in-pool gamma swaps (asserted, smoke included), and the
+   pool-miss fallback costing exactly ONE counted recompile (asserted).
+   Also runs the sharded-transport autotuner once on the forced-device
+   mesh, memoizing the ``sh_`` bucket into the autotune table.
+
+5. **Overlapped refresh** -- the background-thread refresh on the
+   n=512/budget=64 simulator rollout: wall clock of frozen vs
+   synchronous-refresh vs overlapped-refresh runs on identical data,
+   hidden-latency fraction = (wall_sync - wall_async) / solve_total.
+   Asserts (smoke included) that every in-run refresh was collected
+   with ``blocked_s == 0`` (the hook never waits on the solver) and
+   that segment-time jitter while a solve is in flight stays bounded
+   (no rollout serialization behind the solve). The >= 50% hidden
+   target is recorded honestly (``target_met``) rather than asserted:
+   on a 2-vCPU container the solver and the rollout share cores, and
+   the floor is explained in the JSON when missed.
+
 Writes experiments/bench/BENCH_online.json.
 """
 
 import json
 import os
+import subprocess
+import sys
+import textwrap
 import time
 
 import numpy as np
@@ -217,10 +244,307 @@ def _bench_recovery_and_retrace(results: dict, smoke: bool) -> None:
         )
 
 
+_SHARDED_SCRIPT = """
+    import json
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.compat import AxisType, make_compat_mesh, set_mesh
+    from repro.configs import get_smoke_config
+    from repro.core import learn_topology
+    from repro.core.mixing import (BirkhoffSchedule, PermPool, PoolSwap,
+                                   autotune_sharded_transport,
+                                   schedule_from_result)
+    from repro.online import RefreshConfig, TopologyRefresher
+    from repro.train.lm_trainer import make_train_setup
+
+    cfgd = json.loads(%r)
+    n, K, steps, seg = cfgd["n"], cfgd["K"], cfgd["steps"], cfgd["seg"]
+
+    rng = np.random.default_rng(0)
+    Pi = rng.dirichlet(0.2 * np.ones(K), size=n)
+    res0 = learn_topology(Pi, budget=cfgd["budget"], lam=0.1)
+    ref = TopologyRefresher(res0, RefreshConfig(budget=2, lam=0.1))
+    sched = ref.schedule
+    pool = PermPool.from_schedule(sched, capacity=ref.l_max)
+    g0, _ = pool.project(sched)
+    W = sched.to_matrix()
+    d_max = int(max((np.abs(W[i]) > 1e-9).sum() - (W[i, i] > 1e-9)
+                    for i in range(n)))
+
+    mesh = make_compat_mesh((n, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    cfg = get_smoke_config("qwen3-0.6b")
+    mk = lambda tr, pl: make_train_setup(cfg, mesh, mode="dsgd", online_w=True,
+                                         sharded_transport=tr, pool=pl, lr=1e-2)
+    s_pool, s_ag = mk("pool", pool), mk("allgather", None)
+    sh = jax.tree.map(lambda s: NamedSharding(mesh, s), s_pool.param_specs,
+                      is_leaf=lambda x: isinstance(x, P))
+    out = {"n": n, "d_max": d_max, "pool_capacity": pool.capacity,
+           "pool_comm_slots": pool.n_comm_slots,
+           "pool_bytes_per_step": s_pool.comm_bytes_per_step,
+           "allgather_bytes_per_step": s_ag.comm_bytes_per_step}
+
+    with set_mesh(mesh):
+        params = jax.jit(s_pool.init_params, out_shardings=sh)(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (steps, n, 1, 32), 0,
+                                  cfg.vocab_size)
+        batches = {"tokens": toks, "labels": toks}
+
+        # (a) >= 3 consecutive in-pool gamma swaps: zero retraces
+        g1 = np.roll(g0, 1).astype(np.float32); g1 /= max(g1.sum(), 1e-9)
+        swaps = iter([PoolSwap(gammas=g1), PoolSwap(gammas=g0),
+                      PoolSwap(gammas=g1)])
+        r_pool = s_pool.run_segments(params, None, batches, g0, segment_len=seg,
+                                     on_segment=lambda t: next(swaps, None))
+        assert r_pool["n_traces"] == 1 and r_pool["recompiles"] == 0, r_pool
+        assert len(r_pool["swaps"]) >= 3
+        assert np.isfinite(r_pool["losses"]).all()
+
+        # (b) pool miss: exactly one counted recompile
+        new_perm = tuple(int(v) for v in np.roll(np.arange(n), n // 2 + 1))
+        ns = BirkhoffSchedule(coeffs=(0.5, 0.5),
+                              perms=(tuple(range(n)), new_perm))
+        np2 = PermPool.from_schedule(ns, capacity=pool.capacity)
+        ng, _ = np2.project(ns)
+        miss = iter([PoolSwap(gammas=ng, pool=np2)])
+        r_miss = s_pool.run_segments(r_pool["params"], None, batches, g0,
+                                     segment_len=seg,
+                                     on_segment=lambda t: next(miss, None))
+        assert r_miss["recompiles"] == 1 and r_miss["n_traces"] == 2, r_miss
+
+        # (c) wall clock: same batches, no swaps, both transports
+        r_p = s_pool.run_segments(params, None, batches, g0, segment_len=seg)
+        Wj = jnp.asarray(W, jnp.float32)
+        r_a = s_ag.run_segments(params, None, batches, Wj, segment_len=seg)
+        out["pool_segment_s"] = r_p["segment_s"]
+        out["allgather_segment_s"] = r_a["segment_s"]
+        out["pool_comm"] = r_p["comm"]
+        out["allgather_comm"] = r_a["comm"]
+        out["in_pool_swaps"] = len(r_pool["swaps"])
+        out["miss_recompiles"] = r_miss["recompiles"]
+
+        # (d) sharded autotune: measure once on this forced-device mesh
+        p_total = out["allgather_bytes_per_step"] // ((n - 1) * 4)
+        out["autotune_winner"] = autotune_sharded_transport(
+            n, pool.n_comm_slots, p_total, measure=True, mesh=mesh)
+
+    print("RESULT_JSON " + json.dumps(out))
+"""
+
+
+def _bench_sharded_pool(results: dict, smoke: bool) -> None:
+    """Staged-pool vs all-gather on the online mesh trainer (subprocess:
+    the main process must keep its single-device view)."""
+    n = 8
+    cfgd = {"n": n, "K": 4, "budget": 3,
+            "steps": 8 if smoke else 24, "seg": 2 if smoke else 4}
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = (
+        os.path.join(os.path.dirname(__file__), "..", "src")
+        + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    # the sharded autotune entry lands next to the other bench artifacts
+    # (the committed table on full runs, the smoke dir in CI)
+    os.makedirs(result_dir(), exist_ok=True)
+    env["REPRO_TRANSPORT_AUTOTUNE"] = os.path.join(
+        result_dir(), "transport_autotune.json"
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_SHARDED_SCRIPT % json.dumps(cfgd))],
+        capture_output=True, text=True, timeout=1800, env=env,
+    )
+    assert proc.returncode == 0, f"sharded bench failed:\n{proc.stderr[-4000:]}"
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT_JSON ")]
+    out = json.loads(line[0][len("RESULT_JSON "):])
+
+    ratio = out["pool_bytes_per_step"] / out["allgather_bytes_per_step"]
+    bound = (out["d_max"] + 1) / out["n"]
+    out["bytes_ratio_pool_vs_allgather"] = ratio
+    out["bytes_ratio_bound"] = bound
+    # acceptance: the staged pool moves <= (d_max + eps)/n of the
+    # all-gather's bytes/step, from the comm counters (eps = 1 atom)
+    assert ratio <= bound, (ratio, bound)
+    # steady-state medians, first segment (compile) excluded
+    pool_med = float(np.median(out["pool_segment_s"][1:]))
+    ag_med = float(np.median(out["allgather_segment_s"][1:]))
+    out["pool_segment_median_s"] = pool_med
+    out["allgather_segment_median_s"] = ag_med
+    results["sharded_pool"] = out
+    emit(
+        f"online_pool_mix_n{out['n']}", pool_med * 1e6,
+        f"bytes_ratio={ratio:.3f}<=bound_{bound:.3f}_retraces=0"
+        f"_miss_recompiles={out['miss_recompiles']}"
+        f"_vs_allgather_{ag_med * 1e6:.0f}us",
+    )
+
+
+def _bench_overlap(results: dict, smoke: bool) -> None:
+    """Overlapped (background-thread) refresh vs inline refresh on the
+    n=512/budget=64 rollout: how much solve latency the rollout hides.
+
+    The three arms (frozen / sync / overlap) run the SAME precomputed
+    observation stream -- this measures scheduling, not learning (the
+    recovery bench above owns the quality claim). Drifts are scripted
+    ``request_refresh`` calls on an estimator snapshotted from drifted
+    labels, so all arms solve comparable problems deterministically.
+    """
+    if smoke:
+        n, K, budget, rbudget = 32, 8, 8, 4
+        steps, seg, batch = 600, 50, 4
+        drift_segs = (3, 7)
+    else:
+        n, K, budget, rbudget = 512, 64, 64, 16
+        steps, seg, batch = 40000, 1000, 1
+        drift_segs = (8, 20, 32)
+    rng = np.random.default_rng(0)
+    Pi0 = rng.dirichlet(0.1 * np.ones(K), size=n)
+    task = mean_estimation_clusters(n_nodes=n, K=K, m=5.0, sigma_tilde2=1.0)
+    zs = np.stack([task.sample(batch, rng) for _ in range(steps)]).astype(np.float32)
+
+    t0 = time.perf_counter()
+    res0 = learn_topology(Pi0, budget=budget, lam=LAM)
+    t_initial = time.perf_counter() - t0
+    # the initial arrays MUST use the refresher's l_max (zero-weight
+    # atoms dropped + refresh-budget headroom): any other capacity would
+    # make the first swap a shape change, i.e. a retrace
+    sched0 = schedule_from_result(res0)
+    sa0 = schedule_to_arrays(sched0, sched0.n_atoms + rbudget)
+
+    # drifted Pi per scripted refresh + a label batch that imprints it on
+    # a beta=1 estimator (empirical snapshot) at the drift boundary
+    drift_pis = []
+    Pi_t = Pi0
+    for _ in drift_segs:
+        Pi_t = Pi_t[rng.permutation(n)]
+        drift_pis.append(Pi_t)
+    label_rng = np.random.default_rng(7)
+    drift_labels = [
+        np.stack([label_rng.choice(K, size=256, p=Pi_d[i]) for i in range(n)])
+        for Pi_d in drift_pis
+    ]
+
+    def run_arm(overlap: bool | None) -> dict:
+        """overlap=None => frozen arm (no controller at all)."""
+        arm: dict = {}
+        hook = None
+        ctl = None
+        seg_times: list[tuple[float, bool]] = []
+        if overlap is not None:
+            ref = TopologyRefresher(res0, RefreshConfig(budget=rbudget, lam=LAM))
+            ctl = OnlineTopologyController(
+                ref, estimator=StreamingPiEstimator(n, K, beta=1.0, init=Pi0),
+                overlap=overlap,
+            )
+            state = {"seg": 0, "drift": 0, "last": None}
+
+            def hook(t):
+                now = time.perf_counter()
+                if state["last"] is not None:
+                    seg_times.append((now - state["last"], ctl.refresh_pending))
+                state["seg"] += 1
+                if (state["drift"] < len(drift_segs)
+                        and state["seg"] == drift_segs[state["drift"]]):
+                    ctl.observe(drift_labels[state["drift"]])
+                    state["drift"] += 1
+                    ctl.request_refresh()
+                ret = ctl.on_segment(t)
+                state["last"] = time.perf_counter()
+                return ret
+
+        t0 = time.perf_counter()
+        out = run_mean_estimation(
+            task, None, steps=steps, lr=0.05, batch=batch, seed=2,
+            schedule=sa0, zs=zs, on_segment=hook, segment_len=seg,
+        )
+        if ctl is not None:
+            ctl.flush()
+            ctl.close()
+        arm["wall_s"] = time.perf_counter() - t0
+        arm["n_traces"] = out["n_traces"]
+        assert out["n_traces"] == 1, out["n_traces"]
+        if ctl is not None:
+            arm["refresh_log"] = ctl.refresh_log
+            arm["solve_total_s"] = float(
+                sum(r["solve_s"] for r in ctl.refresh_log)
+            )
+            arm["n_refreshes"] = ctl.refresher.n_refreshes
+            idle = [s for s, pending in seg_times if not pending]
+            busy = [s for s, pending in seg_times if pending]
+            arm["segment_median_idle_s"] = float(np.median(idle)) if idle else None
+            arm["segment_max_pending_s"] = float(max(busy)) if busy else None
+        return arm
+
+    frozen = run_arm(None)
+    sync = run_arm(False)
+    over = run_arm(True)
+
+    solve_total = sync["solve_total_s"]
+    hidden = (sync["wall_s"] - over["wall_s"]) / max(solve_total, 1e-9)
+    hidden = float(np.clip(hidden, -1.0, 1.0))
+    # the >= 0.5 target is a FULL-SIZE claim: at smoke sizes the solves
+    # are ~ms, so the wall-clock difference is scheduling noise divided
+    # by a tiny denominator -- record it, but only judge the target
+    # where the measurement is meaningful (CI smoke still asserts the
+    # non-blocking contract below, which is size-independent)
+    target_met = None if smoke else hidden >= 0.5
+
+    # the overlap contract, asserted in smoke too: every in-run refresh
+    # was COLLECTED at a boundary, never waited for (blocked_s == 0 --
+    # a final flush after the last segment is the only legal wait), and
+    # no segment serialized behind a full solve (bounded jitter).
+    in_run = [r for r in over["refresh_log"] if r["t_collect"] >= 0]
+    assert in_run, "no overlapped refresh landed inside the run"
+    for r in in_run:
+        assert r["blocked_s"] == 0.0, r
+    if over["segment_max_pending_s"] is not None:
+        solve_med = float(np.median([r["solve_s"] for r in in_run]))
+        jitter_bound = 5.0 * over["segment_median_idle_s"] + 0.8 * solve_med + 0.1
+        assert over["segment_max_pending_s"] <= jitter_bound, (
+            f"rollout serialized behind the solve: pending segment took "
+            f"{over['segment_max_pending_s']:.3f}s > bound {jitter_bound:.3f}s"
+        )
+
+    results["overlap"] = {
+        "n": n, "K": K, "budget": budget, "refresh_budget": rbudget,
+        "steps": steps, "segment_len": seg, "drift_segments": list(drift_segs),
+        "initial_cold_solve_s": t_initial,
+        "wall_frozen_s": frozen["wall_s"],
+        "wall_sync_s": sync["wall_s"],
+        "wall_overlap_s": over["wall_s"],
+        "solve_total_sync_s": solve_total,
+        "solve_total_overlap_s": over["solve_total_s"],
+        "hidden_latency_fraction": hidden,
+        "target_met": target_met,
+        "overlap_refresh_log": over["refresh_log"],
+        "sync_refresh_log": sync["refresh_log"],
+        "segment_median_idle_s": over["segment_median_idle_s"],
+        "segment_max_pending_s": over["segment_max_pending_s"],
+        # honesty note kept in the artifact, not only in prose: on a
+        # 2-vCPU container the BLAS solve and the XLA rollout share
+        # cores, so "hidden" latency is bounded by the spare-core time;
+        # the >= 0.5 target assumes at least one core is free for the
+        # solver while the rollout computes.
+        "floor_note": (
+            "hidden fraction is bounded by spare-core availability; "
+            "solver (BLAS, GIL released) and rollout (XLA CPU) share "
+            f"{os.cpu_count()} cores here"
+        ),
+    }
+    emit(
+        f"online_overlap_n{n}_b{budget}", over["wall_s"] * 1e6,
+        f"hidden={hidden:.2f}_of_{solve_total * 1e3:.0f}ms"
+        f"_sync_{sync['wall_s']:.2f}s_overlap_{over['wall_s']:.2f}s"
+        f"_target_met={target_met}",
+    )
+
+
 def main(smoke: bool = False) -> None:
     results: dict = {"smoke": smoke}
     _bench_refresh_speed(results, smoke)
     _bench_recovery_and_retrace(results, smoke)
+    _bench_sharded_pool(results, smoke)
+    _bench_overlap(results, smoke)
     os.makedirs(result_dir(), exist_ok=True)
     path = os.path.join(result_dir(), "BENCH_online.json")
     with open(path, "w") as f:

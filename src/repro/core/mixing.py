@@ -76,6 +76,13 @@ __all__ = [
     "truncate_schedule",
     "mix_schedule_arrays",
     "mix_dense_sharded",
+    "PermPool",
+    "PoolSwap",
+    "mix_ppermute_pool",
+    "mix_arrays_sharded",
+    "preferred_sharded_transport",
+    "autotune_sharded_transport",
+    "measure_sharded_transport",
     "StackRavelSpec",
     "ravel_stack",
     "unravel_stack",
@@ -379,7 +386,36 @@ def mix_schedule_arrays(
     )
 
 
-def mix_dense_sharded(params: PyTree, W: jax.Array, axis_name: str) -> PyTree:
+def _serialized_leaf_map(params: PyTree, mix_leaf, serialize: bool) -> PyTree:
+    """tree_map with an explicit leaf-to-leaf data dependency.
+
+    Gather-based sharded transports materialize an ``(n, P_leaf)``
+    all-gather output per leaf; without ordering constraints XLA's
+    scheduler is free to issue every leaf's gather before any leaf's
+    contraction, so the peak live footprint is the FULL gathered stack
+    ``n x sum_leaf P_leaf`` (the PR-4 regression). Chaining each leaf's
+    input through an ``optimization_barrier`` on the previous leaf's
+    output forces gather_k to wait for contraction_{k-1}, so at most
+    ONE leaf's gather is live at a time: peak ``n x max_leaf`` instead
+    of ``n x P_total`` (verified by a compiled-memory check in
+    tests/test_distributed.py). The barrier is the identity on values
+    -- results are bitwise unchanged.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    outs: list[jax.Array] = []
+    token = None
+    for x in leaves:
+        if serialize and token is not None:
+            x, _ = jax.lax.optimization_barrier((x, token))
+        out = mix_leaf(x)
+        token = out
+        outs.append(out)
+    return jax.tree_util.tree_unflatten(treedef, outs)
+
+
+def mix_dense_sharded(
+    params: PyTree, W: jax.Array, axis_name: str, *, serialize: bool = True
+) -> PyTree:
     """Dense mixing *inside* ``shard_map`` with W as data (traced).
 
     Each index along ``axis_name`` holds one node's parameter pytree;
@@ -390,9 +426,15 @@ def mix_dense_sharded(params: PyTree, W: jax.Array, axis_name: str) -> PyTree:
     retraces -- ``lax.ppermute`` cannot do that (its permutation pairs
     are baked into the trace). The price is communication: an
     all-gather moves ``O(n P)`` bytes where the static ppermute
-    schedule moves ``d_max`` permutes; use this transport while a
-    topology is being adapted online, and drop back to the static
-    ppermute schedule (one retrace) once it settles.
+    schedule (and the pre-staged :func:`mix_ppermute_pool`) move
+    ``d_max`` permutes; use this transport while a topology is being
+    adapted online on out-of-pool atoms, and prefer the staged pool
+    when the refresh stays inside it.
+
+    ``serialize=True`` (default) chains the per-leaf gathers so only
+    one leaf's ``(n, P_leaf)`` all-gather output is ever live -- see
+    :func:`_serialized_leaf_map`; ``serialize=False`` keeps the PR-4
+    unordered behavior (A/B + the memory regression test).
 
     The contraction runs in f32 (same rationale as ``mix_allreduce``).
     """
@@ -402,6 +444,264 @@ def mix_dense_sharded(params: PyTree, W: jax.Array, axis_name: str) -> PyTree:
     def mix_leaf(x):
         g = jax.lax.all_gather(x.astype(jnp.float32), axis_name)
         return jnp.tensordot(row, g, axes=([0], [0])).astype(x.dtype)
+
+    return _serialized_leaf_map(params, mix_leaf, serialize)
+
+
+def mix_arrays_sharded(
+    params: PyTree, arrays: ScheduleArrays, axis_name: str, *, serialize: bool = True
+) -> PyTree:
+    """``ScheduleArrays`` mixing *inside* ``shard_map`` via all-gather.
+
+    The sharded twin of :func:`mix_schedule_arrays`: gathers the node
+    axis once per leaf, then accumulates ``sum_l gammas[l] *
+    gathered[perms[l, i]]`` with the coefficients AND the permutation
+    table as traced data -- a hot swap of either is a pure value
+    change. Communication is still the all-gather's ``O(n P)`` bytes;
+    what the arrays buy over :func:`mix_dense_sharded` is (a) ``l_max``
+    AXPYs instead of an n-term row contraction and (b) an accumulation
+    order identical slot-for-slot to :func:`mix_ppermute_pool`, so the
+    two transports agree BITWISE on the same schedule (asserted on a
+    CPU mesh in tests/test_distributed.py) -- the property that lets a
+    trainer fall back from the staged pool to all-gather mid-run
+    without perturbing the trajectory.
+    """
+    i = jax.lax.axis_index(axis_name)
+    srcs = arrays.perms[:, i]  # (l_max,) rows this node receives, per atom
+
+    def mix_leaf(x):
+        x32 = x.astype(jnp.float32)
+        g = jax.lax.all_gather(x32, axis_name)
+
+        def body(acc, gs):
+            gamma, src = gs
+            contrib = jax.lax.dynamic_index_in_dim(g, src, axis=0, keepdims=False)
+            return acc + gamma.astype(jnp.float32) * contrib, None
+
+        acc, _ = jax.lax.scan(
+            body, jnp.zeros_like(x32), (arrays.gammas, srcs)
+        )
+        return acc.astype(x.dtype)
+
+    return _serialized_leaf_map(params, mix_leaf, serialize)
+
+
+# ---------------------------------------------------------------------------
+# Pre-staged ppermute atom pool (sparse retrace-free sharded transport)
+# ---------------------------------------------------------------------------
+#
+# ``mix_ppermute`` is sparse (d_max permutes of bytes) but static: its
+# permutation pairs are baked into the trace, so an online W swap
+# retraces. ``mix_dense_sharded``/``mix_arrays_sharded`` are hot-
+# swappable but move the all-gather's O(nP) bytes. The pool is the
+# missing point in that square: compile the UNION of K permutation
+# atoms once (the initial solve's Birkhoff atoms plus identity headroom
+# slots), with the per-atom convex coefficients as a (K,) data vector.
+# A refresh whose atoms stay inside the pool is a pure gamma-value
+# change -- zero retraces, and the bytes stay O(K P) with K ~ d_max --
+# while an out-of-pool refresh restages the pool once (a single counted
+# recompile, logged by the trainers and asserted rare in the benches).
+
+
+@dataclasses.dataclass(frozen=True)
+class PermPool:
+    """A fixed, compiled-in set of permutation atoms ("slots").
+
+    ``perms`` holds ``capacity`` static permutations, identity-padded:
+    identity slots cost nothing (a local scale, no communication) and
+    serve as headroom -- but REPLACING a slot's permutation changes the
+    compiled trace, which is exactly the pool-miss recompile the
+    schedule projection exists to avoid. Frozen + tuple-of-tuples, so a
+    jitted step function can close over a pool hashably.
+
+    The runtime coefficients live OUTSIDE the pool, as a ``(capacity,)``
+    gamma vector threaded through the step as data (see
+    :func:`mix_ppermute_pool`); ``project`` maps any
+    :class:`BirkhoffSchedule` onto that vector.
+    """
+
+    perms: tuple[tuple[int, ...], ...]
+
+    def __post_init__(self):
+        if not self.perms:
+            raise ValueError("PermPool needs at least one slot")
+        n = len(self.perms[0])
+        for p in self.perms:
+            if len(p) != n or sorted(p) != list(range(n)):
+                raise ValueError(f"pool slot {p!r} is not a permutation of {n}")
+
+    @property
+    def capacity(self) -> int:
+        return len(self.perms)
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.perms[0])
+
+    @property
+    def identity(self) -> tuple[int, ...]:
+        return tuple(range(self.n_nodes))
+
+    @property
+    def n_comm_slots(self) -> int:
+        """Non-identity slots: each moves P bytes per node per mix step
+        (gamma 0 or not -- a staged ppermute executes unconditionally)."""
+        ident = self.identity
+        return sum(1 for p in self.perms if p != ident)
+
+    @classmethod
+    def from_schedule(
+        cls, schedule: BirkhoffSchedule, capacity: int | None = None
+    ) -> "PermPool":
+        """Stage a schedule's atoms (deduplicated, order kept), identity-
+        padding up to ``capacity`` headroom slots.
+
+        A schedule with more atoms than ``capacity`` is truncated first
+        (largest coefficients kept -- :func:`truncate_schedule`), so a
+        restage always fits.
+        """
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if capacity is not None and schedule.n_atoms > capacity:
+            schedule = truncate_schedule(schedule, capacity)
+        seen: dict[tuple[int, ...], None] = {}
+        for p in schedule.perms:
+            seen.setdefault(tuple(int(x) for x in p))
+        slots = list(seen)
+        n = schedule.n_nodes
+        cap = capacity if capacity is not None else len(slots)
+        ident = tuple(range(n))
+        while len(slots) < cap:
+            slots.append(ident)
+        return cls(perms=tuple(slots))
+
+    def _slot_index(self) -> dict[tuple[int, ...], int]:
+        idx: dict[tuple[int, ...], int] = {}
+        for l, p in enumerate(self.perms):
+            idx.setdefault(p, l)
+        return idx
+
+    def project(self, schedule: BirkhoffSchedule) -> tuple[np.ndarray, float]:
+        """Schedule -> pool-aligned gammas; returns ``(gammas, dropped)``.
+
+        Atoms staged in the pool land in their slot; atoms NOT in the
+        pool are dropped and their total coefficient mass returned as
+        ``dropped`` (pre-renormalization). The kept coefficients are
+        renormalized, so the executed W stays doubly stochastic -- the
+        same pool-aware truncation argument as
+        :func:`truncate_schedule`, with the pool membership (not the
+        coefficient rank) deciding who is kept. The caller compares
+        ``dropped`` against its miss tolerance to decide between an
+        in-pool swap and a restage.
+        """
+        if schedule.n_nodes != self.n_nodes:
+            raise ValueError(
+                f"schedule is for {schedule.n_nodes} nodes, pool for {self.n_nodes}"
+            )
+        idx = self._slot_index()
+        gammas = np.zeros((self.capacity,), np.float64)
+        dropped = 0.0
+        for c, p in zip(schedule.coeffs, schedule.perms):
+            slot = idx.get(tuple(int(x) for x in p))
+            if slot is None:
+                dropped += float(c)
+            else:
+                gammas[slot] += float(c)
+        kept = gammas.sum()
+        if kept > 0.0:
+            gammas /= kept
+        return gammas.astype(np.float32), float(dropped)
+
+    def contains(self, schedule: BirkhoffSchedule) -> bool:
+        """True iff every atom of ``schedule`` is staged in this pool."""
+        _, dropped = self.project(schedule)
+        return dropped == 0.0
+
+    def arrays_for(self, gammas: np.ndarray) -> ScheduleArrays:
+        """Pool-aligned gammas as a :class:`ScheduleArrays` (slot order
+        preserved) -- the exact operand :func:`mix_arrays_sharded` needs
+        to reproduce the pool transport bitwise."""
+        gammas = np.asarray(gammas, np.float32)
+        if gammas.shape != (self.capacity,):
+            raise ValueError(
+                f"gammas must be ({self.capacity},), got {gammas.shape}"
+            )
+        perms = np.asarray(self.perms, np.int32).reshape(self.capacity, self.n_nodes)
+        return ScheduleArrays(gammas=jnp.asarray(gammas), perms=jnp.asarray(perms))
+
+    def to_matrix(self, gammas: np.ndarray) -> np.ndarray:
+        """Densify pool slots + gammas (host-side validation)."""
+        return arrays_to_matrix(self.arrays_for(gammas))
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolSwap:
+    """A topology update in pool coordinates (what an online refresh
+    hands a pool-transport trainer at a segment boundary).
+
+    ``pool is None`` means the update stayed inside the trainer's
+    staged pool: applying it is a pure ``(capacity,)`` gamma value
+    change (zero retraces). A non-None ``pool`` is a RESTAGE -- the
+    refresh emitted out-of-pool atoms beyond the miss tolerance, the
+    new pool must be compiled in (one counted recompile on the pool
+    transport; pure data on the all-gather transport, which executes
+    pool gammas as their ScheduleArrays twin), and ``gammas`` is
+    aligned to the NEW pool's slots. ``dropped_mass`` records the
+    coefficient mass the projection discarded: the out-of-pool mass
+    for an in-pool swap, the capacity-truncation residue for a restage
+    (0 iff every refreshed atom fit the pool).
+    """
+
+    gammas: np.ndarray
+    pool: "PermPool | None" = None
+    dropped_mass: float = 0.0
+
+    @property
+    def restaged(self) -> bool:
+        return self.pool is not None
+
+
+def mix_ppermute_pool(
+    params: PyTree, gammas: jax.Array, pool: PermPool, axis_name: str
+) -> PyTree:
+    """Staged-pool sharded mixing: K compiled ppermutes, gammas as data.
+
+    For use inside ``shard_map`` where each index along ``axis_name``
+    holds one node's parameters. Every non-identity pool slot executes
+    its (statically staged) ``ppermute`` unconditionally -- gamma 0
+    zeroes the contribution but not the transfer, which is what keeps
+    the trace independent of the gamma VALUES: an in-pool topology swap
+    is a buffer update. Identity slots are a local scale (no
+    communication), so headroom costs nothing until staged.
+
+    Per node per step this moves ``pool.n_comm_slots x P`` bytes (f32)
+    versus the all-gather transports' ``(n-1) x P`` -- the O(d_max P)
+    sparse-communication payoff of the learned topology, now surviving
+    a W swap without recompiling.
+
+    The accumulation (f32, slot order, zeros init) mirrors
+    :func:`mix_arrays_sharded` op-for-op so the two transports agree
+    bitwise on the same schedule.
+    """
+    n = pool.n_nodes
+    ident = pool.identity
+    if gammas.shape != (pool.capacity,):
+        raise ValueError(
+            f"gammas must be ({pool.capacity},) to match the pool, "
+            f"got {gammas.shape}"
+        )
+
+    def mix_leaf(x):
+        x32 = x.astype(jnp.float32)
+        acc = jnp.zeros_like(x32)
+        for l, perm in enumerate(pool.perms):
+            if perm == ident:
+                contrib = x32
+            else:
+                pairs = [(int(perm[i]), i) for i in range(n)]
+                contrib = jax.lax.ppermute(x32, axis_name, pairs)
+            acc = acc + gammas[l].astype(jnp.float32) * contrib
+        return acc.astype(x.dtype)
 
     return jax.tree_util.tree_map(mix_leaf, params)
 
@@ -618,6 +918,48 @@ def _load_autotune(path: str) -> dict[str, dict]:
     return table
 
 
+def _best_of_timed(f, arg, iters: int, repeats: int) -> float:
+    """Steady-state us/call: min over ``repeats`` of an ``iters``-call
+    average (jitted f, one warmup). The min is the standard noise-robust
+    estimator of achievable throughput -- on throttled shared machines
+    single timings vary 2-4x and would flip near-crossover buckets."""
+    import time
+
+    out = f(arg)
+    jax.block_until_ready(out)
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = f(arg)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters * 1e6)
+    return best
+
+
+def _persist_autotune(path: str, table: dict) -> None:
+    """Atomically write the autotune table -- but only into a directory
+    that already exists (the checkout's experiments/bench/, or wherever
+    $REPRO_TRANSPORT_AUTOTUNE points after the caller created it): an
+    installed package must not grow a junk `experiments/` tree inside
+    the interpreter prefix just because its default relative path
+    resolved somewhere writable. Read-only installs keep the
+    measurement in memory."""
+    global _autotune_cache
+    import json
+    import os
+
+    try:
+        if os.path.isdir(os.path.dirname(path)):
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(table, f, indent=2, sort_keys=True)
+            os.replace(tmp, path)
+    except OSError:
+        pass
+    _autotune_cache = table
+
+
 def measure_transport(
     n_nodes: int, n_atoms: int, p: int, *, iters: int = 5, repeats: int = 3,
     seed: int = 0
@@ -629,13 +971,8 @@ def measure_transport(
     ``_MEASURE_MAX_ELEMENTS`` (both transports are linear in P; at LM
     scale an uncapped pow2 P would allocate hundreds of GiB). The
     record keeps the requested ``p`` plus the ``p_measured`` actually
-    timed. Each transport is timed ``repeats`` times and the MINIMUM
-    average kept -- on throttled shared machines single timings vary
-    2-4x and would flip near-crossover buckets run to run; the min is
-    the standard noise-robust estimator of achievable throughput.
+    timed; timing protocol in :func:`_best_of_timed`.
     """
-    import time
-
     p_measured = min(int(p), max(4096, _MEASURE_MAX_ELEMENTS // max(1, n_nodes)))
     rng = np.random.default_rng(seed)
     theta = jnp.asarray(rng.normal(size=(n_nodes, p_measured)), jnp.float32)
@@ -650,20 +987,8 @@ def measure_transport(
     f_sched = jax.jit(lambda x: _mix_schedule_flat(x, sched))
     f_dense = jax.jit(lambda x: jnp.tensordot(W, x, axes=([1], [0])))
 
-    def timed(f):
-        out = f(theta)
-        jax.block_until_ready(out)
-        best = np.inf
-        for _ in range(repeats):
-            t0 = time.perf_counter()
-            for _ in range(iters):
-                out = f(theta)
-            jax.block_until_ready(out)
-            best = min(best, (time.perf_counter() - t0) / iters * 1e6)
-        return best
-
-    schedule_us = timed(f_sched)
-    dense_us = timed(f_dense)
+    schedule_us = _best_of_timed(f_sched, theta, iters, repeats)
+    dense_us = _best_of_timed(f_dense, theta, iters, repeats)
     return {
         "n_nodes": n_nodes,
         "n_atoms": n_atoms,
@@ -696,10 +1021,6 @@ def autotune_transport(
     :func:`preferred_transport` (the conservative model -- unmeasured
     hardware keeps the documented crossover).
     """
-    global _autotune_cache
-    import json
-    import os
-
     path = path or transport_autotune_path()
     key = _bucket_key(n_nodes, n_atoms, p)
     table = _load_autotune(path)
@@ -712,20 +1033,159 @@ def autotune_transport(
     entry = measure_transport(_pow2_up(n_nodes), _pow2_up(n_atoms), _pow2_up(p))
     table = dict(table)
     table[key] = entry
-    # Persist only into a directory that already exists (the checkout's
-    # experiments/bench/, or wherever $REPRO_TRANSPORT_AUTOTUNE points
-    # after the caller created it): an installed package must not grow a
-    # junk `experiments/` tree inside the interpreter prefix just
-    # because its default relative path resolved somewhere writable.
-    try:
-        if os.path.isdir(os.path.dirname(path)):
-            tmp = path + ".tmp"
-            with open(tmp, "w") as f:
-                json.dump(table, f, indent=2, sort_keys=True)
-            os.replace(tmp, path)
-    except OSError:  # read-only install: keep the measurement in memory
-        pass
-    _autotune_cache = table
+    _persist_autotune(path, table)
+    return entry["winner"]
+
+
+# ---------------------------------------------------------------------------
+# Sharded (hot-swappable) transport cost model + autotune
+# ---------------------------------------------------------------------------
+
+# Measured per-byte throughput advantage of one fused all-gather over a
+# chain of K separate ppermute collectives (the all-gather amortizes
+# launch latency and runs the backend's fused ring path; each staged
+# ppermute pays its own dispatch). CPU-mesh calibrated; like
+# DENSE_THROUGHPUT_ADVANTAGE it is a hardware constant, not a law --
+# the autotune table overrides it wherever a measurement exists.
+ALLGATHER_THROUGHPUT_ADVANTAGE = 2.0
+
+
+def preferred_sharded_transport(
+    n_nodes: int,
+    n_comm_slots: int,
+    allgather_speedup: float = ALLGATHER_THROUGHPUT_ADVANTAGE,
+) -> str:
+    """Pick ``"pool"`` vs ``"allgather"`` for the hot-swappable mesh mix.
+
+    Closed form on bytes: the staged pool receives ``n_comm_slots x P``
+    bytes per node per step (one permute per staged non-identity slot,
+    gamma 0 or not), the all-gather ``(n_nodes - 1) x P``.
+    ``allgather_speedup`` discounts the all-gather's per-byte cost (one
+    fused collective vs K dispatches): the crossover is ``pool`` iff
+    ``n_comm_slots <= (n_nodes - 1) / allgather_speedup``. Like
+    :func:`preferred_transport` this is the conservative fallback --
+    measured buckets in the autotune table win (see
+    :func:`autotune_sharded_transport`).
+    """
+    if allgather_speedup <= 0:
+        raise ValueError(f"allgather_speedup must be positive, got {allgather_speedup}")
+    return (
+        "pool"
+        if n_comm_slots <= max(1, int((n_nodes - 1) / allgather_speedup))
+        else "allgather"
+    )
+
+
+def _sharded_bucket_key(n_nodes: int, n_comm_slots: int, p: int) -> str:
+    # "sh_" prefix keeps the sharded-transport entries disjoint from the
+    # stacked-transport keys in the same autotune JSON (schema extension,
+    # not a second table -- docs/architecture.md "Mixing cost model").
+    return (
+        f"sh_{_hw_tag()}_n{_pow2_up(n_nodes)}"
+        f"_K{_pow2_up(n_comm_slots)}_P{_pow2_up(p)}"
+    )
+
+
+def measure_sharded_transport(
+    n_nodes: int, n_comm_slots: int, p: int, *, mesh, axis_name: str = "data",
+    iters: int = 5, repeats: int = 3, seed: int = 0,
+) -> dict:
+    """Time staged-pool vs all-gather mixing inside ``shard_map`` once.
+
+    Needs a live mesh whose ``axis_name`` axis has ``n_nodes`` indices
+    (so it can only run where such a mesh exists -- the benches force
+    host devices in a subprocess; a plain 1-device process cannot
+    measure and keeps the closed form). Same protocol as
+    :func:`measure_transport` (:func:`_best_of_timed`), synthetic (n, p)
+    f32 data, width capped at ``_MEASURE_MAX_ELEMENTS`` total elements.
+    """
+    from repro.compat import shard_map
+    from jax.sharding import PartitionSpec
+
+    if mesh.shape[axis_name] != n_nodes:
+        raise ValueError(
+            f"mesh axis {axis_name!r} has {mesh.shape[axis_name]} indices, "
+            f"need n_nodes={n_nodes}"
+        )
+    p_measured = min(int(p), max(4096, _MEASURE_MAX_ELEMENTS // max(1, n_nodes)))
+    rng = np.random.default_rng(seed)
+    theta = jnp.asarray(rng.normal(size=(n_nodes, p_measured)), jnp.float32)
+    slots = [
+        tuple(int(x) for x in rng.permutation(n_nodes))
+        for _ in range(n_comm_slots)
+    ]
+    pool = PermPool(perms=tuple(slots))
+    gammas_np, _ = pool.project(
+        BirkhoffSchedule(
+            coeffs=tuple(1.0 / len(slots) for _ in slots), perms=tuple(slots)
+        )
+    )
+    gammas = jnp.asarray(gammas_np)
+    arrays = pool.arrays_for(gammas_np)
+    spec = PartitionSpec(axis_name)
+
+    def sharded(fn):
+        return jax.jit(
+            shard_map(
+                fn, mesh=mesh, in_specs=(spec,), out_specs=spec,
+                axis_names={axis_name}, check_vma=False,
+            )
+        )
+
+    f_pool = sharded(lambda x: mix_ppermute_pool(x, gammas, pool, axis_name))
+    f_ag = sharded(lambda x: mix_arrays_sharded(x, arrays, axis_name))
+
+    pool_us = _best_of_timed(f_pool, theta, iters, repeats)
+    allgather_us = _best_of_timed(f_ag, theta, iters, repeats)
+    return {
+        "n_nodes": n_nodes,
+        "n_comm_slots": n_comm_slots,
+        "p": p,
+        "p_measured": p_measured,
+        "pool_us": pool_us,
+        "allgather_us": allgather_us,
+        "winner": "pool" if pool_us <= allgather_us else "allgather",
+        "backend": jax.default_backend(),
+        "hw": _hw_tag(),
+    }
+
+
+def autotune_sharded_transport(
+    n_nodes: int,
+    n_comm_slots: int,
+    p: int,
+    *,
+    measure: bool = False,
+    mesh=None,
+    axis_name: str = "data",
+    path: str | None = None,
+    allgather_speedup: float = ALLGATHER_THROUGHPUT_ADVANTAGE,
+) -> str:
+    """``"pool"`` or ``"allgather"`` from the measured autotune table.
+
+    Same two-layer contract as :func:`autotune_transport`, same JSON
+    table (keys prefixed ``sh_``): a measured bucket returns its
+    winner; a miss falls back to :func:`preferred_sharded_transport`
+    unless ``measure=True`` AND a suitable ``mesh`` is supplied, in
+    which case both transports are timed once and the record memoized.
+    Lookup (``measure=False``) never times anything, so unmeasured
+    hardware keeps the conservative closed form.
+    """
+    path = path or transport_autotune_path()
+    key = _sharded_bucket_key(n_nodes, n_comm_slots, p)
+    table = _load_autotune(path)
+    entry = table.get(key)
+    if entry is not None and entry.get("winner") in ("pool", "allgather"):
+        return entry["winner"]
+    if not measure or mesh is None:
+        return preferred_sharded_transport(n_nodes, n_comm_slots, allgather_speedup)
+
+    entry = measure_sharded_transport(
+        n_nodes, _pow2_up(n_comm_slots), _pow2_up(p), mesh=mesh, axis_name=axis_name
+    )
+    table = dict(table)
+    table[key] = entry
+    _persist_autotune(path, table)
     return entry["winner"]
 
 

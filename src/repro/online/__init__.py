@@ -11,10 +11,16 @@ training when Pi drifts:
 2. ``refresh``    -- a controller that re-runs ``learn_topology`` warm
    (previous Birkhoff atoms + persistent LMO dual prices + duality-gap
    early stop), truncates back to a fixed atom capacity, and emits the
-   result as fixed-shape ``ScheduleArrays``.
+   result as fixed-shape ``ScheduleArrays`` -- or, with ``pool=``, as
+   pool-coordinate ``PoolSwap`` gamma updates for the staged-ppermute
+   mesh transport (out-of-pool refreshes restage: one counted
+   recompile). ``overlap=True`` runs each solve in a background
+   worker (the LMO releases the GIL in BLAS) with a double-buffered
+   handoff, so the rollout never waits on the solver.
 3. The trainers (``repro.train.trainer`` drivers, ``lm_trainer``'s
-   ``online_w`` mode) consume those arrays as *data*, so a mid-run W
-   swap never retraces a compiled rollout.
+   ``online_w`` mode + ``TrainSetup.run_segments``) consume those
+   updates as *data*, so a mid-run W swap never retraces a compiled
+   rollout.
 
 Drift workloads to drive it live in ``repro.data.drift``; the headline
 claims (warm-refresh speedup, zero retraces, post-drift convergence

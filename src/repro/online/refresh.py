@@ -28,6 +28,7 @@ so ``repro.train`` stays independent of ``repro.online``.
 
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 import time
 
@@ -36,6 +37,8 @@ import numpy as np
 from repro.core.heterogeneity import tau_bar_label_skew
 from repro.core.mixing import (
     BirkhoffSchedule,
+    PermPool,
+    PoolSwap,
     ScheduleArrays,
     schedule_from_result,
     schedule_to_arrays,
@@ -210,6 +213,31 @@ class OnlineTopologyController:
         detector only cares about B up to scale; sigma adds the
         variance term, which does not depend on Pi_hat -- keep it 0 to
         track the drift-sensitive bias part alone.
+      pool: a staged :class:`~repro.core.mixing.PermPool` puts the
+        controller in POOL COORDINATES: ``on_segment`` returns
+        :class:`~repro.core.mixing.PoolSwap` updates instead of
+        ``ScheduleArrays``. A refresh whose atoms project onto the pool
+        with at most ``pool_miss_tol`` dropped coefficient mass is
+        emitted as an in-pool gamma swap (zero retraces for the pool-
+        transport trainer); beyond the tolerance the controller
+        restages a new pool from the refreshed schedule (counted in
+        ``pool_misses``; the trainer pays one recompile). The
+        pool-aware truncation this implements trades a bounded amount
+        of mixing mass (``dropped_mass``) for staying inside the
+        compiled communication plan.
+      pool_miss_tol: max coefficient mass the in-pool projection may
+        drop before a restage is declared.
+      overlap: run each refresh solve in a background worker thread
+        instead of inline. The numpy/scipy LMO releases the GIL in
+        BLAS, so the solve overlaps the compiled rollout: the
+        triggering ``on_segment`` SUBMITS and returns ``None`` (the
+        rollout launches its next segment immediately); the first
+        boundary after the solve finishes collects the result and
+        hands the swap back -- a double-buffered handoff in which the
+        hook never blocks on the solver (only an explicit
+        :meth:`flush` waits). Detector updates are suspended while a
+        solve is in flight (the post-collect ``rebase`` re-anchors the
+        baseline), and per-refresh timing lands in ``refresh_log``.
     """
 
     def __init__(
@@ -222,6 +250,9 @@ class OnlineTopologyController:
         Pi0: np.ndarray | None = None,
         proxy_B: float = 1.0,
         proxy_sigma2: float = 0.0,
+        pool: PermPool | None = None,
+        pool_miss_tol: float = 0.05,
+        overlap: bool = False,
     ):
         self.refresher = refresher
         n = refresher.W.shape[0]
@@ -235,12 +266,22 @@ class OnlineTopologyController:
             raise ValueError(
                 f"estimator is for {estimator.n_nodes} nodes, topology has {n}"
             )
+        if pool is not None and pool.n_nodes != n:
+            raise ValueError(f"pool is for {pool.n_nodes} nodes, topology has {n}")
         self.estimator = estimator
         self.detector = detector or DriftDetector()
         self.proxy_B = float(proxy_B)
         self.proxy_sigma2 = float(proxy_sigma2)
+        self.pool = pool
+        self.pool_miss_tol = float(pool_miss_tol)
+        self.pool_misses = 0
+        self.overlap = bool(overlap)
         self.events: list[dict] = []
+        self.refresh_log: list[dict] = []
         self._W = refresher.W
+        self._executor: concurrent.futures.ThreadPoolExecutor | None = None
+        self._pending: tuple[concurrent.futures.Future, dict] | None = None
+        self._manual_request = False
 
     def observe(self, labels: np.ndarray) -> None:
         """Stream one step's (n, batch) minibatch labels in."""
@@ -252,19 +293,144 @@ class OnlineTopologyController:
             self._W, self.estimator.Pi_hat, self.proxy_B, self.proxy_sigma2
         )
 
-    def on_segment(self, t: int) -> ScheduleArrays | None:
-        """Segment-boundary hook: returns new arrays iff a refresh fired."""
+    def request_refresh(self) -> None:
+        """Force a refresh at the next ``on_segment`` (scripted drills /
+        external schedulers), bypassing the detector."""
+        self._manual_request = True
+
+    @property
+    def refresh_pending(self) -> bool:
+        return self._pending is not None
+
+    def on_segment(self, t: int):
+        """Segment-boundary hook.
+
+        Returns ``None`` (no update -- including "solve still running"
+        in overlap mode), a :class:`ScheduleArrays` (no pool), or a
+        :class:`PoolSwap` (pool coordinates).
+        """
+        if self._pending is not None:
+            fut, meta = self._pending
+            if not fut.done():
+                meta["pending_segments"] += 1
+                self.events.append({"t": int(t), "pending": True})
+                return None
+            return self._collect(t, blocked_s=0.0)
         value = self.proxy()
-        triggered = self.detector.update(value)
+        triggered = self.detector.update(value) or self._manual_request
+        self._manual_request = False
         event = {"t": int(t), "proxy": float(value), "triggered": bool(triggered)}
-        if triggered:
-            self.refresher.refresh(self.estimator.Pi_hat)
-            self._W = self.refresher.W
-            event["refresh_s"] = self.refresher.last_refresh_s
-            event["refresh_iters"] = self.refresher.last_iters
-            self.detector.rebase(self.proxy())
+        if not triggered:
+            self.events.append(event)
+            return None
+        # the worker must see a frozen Pi: observe() keeps mutating the
+        # estimator while the solve runs (double-buffered handoff)
+        snapshot = np.array(self.estimator.Pi_hat)
+        if self.overlap:
+            fut = self._ensure_executor().submit(self._solve, snapshot)
+            self._pending = (
+                fut,
+                {"t_submit": int(t), "pending_segments": 0,
+                 "wall0": time.perf_counter()},
+            )
+            event["submitted"] = True
+            self.events.append(event)
+            return None
+        self._solve(snapshot)
         self.events.append(event)
-        return self.refresher.schedule_arrays() if triggered else None
+        swap = self._finish_refresh(t)
+        self.refresh_log.append({
+            "t_submit": int(t), "t_collect": int(t),
+            "solve_s": self.refresher.last_refresh_s,
+            "pending_segments": 0, "overlap_wall_s": 0.0, "blocked_s": 0.0,
+            "restaged": isinstance(swap, PoolSwap) and swap.restaged,
+        })
+        return swap
+
+    def flush(self, t: int | None = None):
+        """Block on an in-flight solve and return its swap (or None).
+
+        The one place the controller is allowed to wait: call it after
+        the rollout's final segment so a late solve still lands (the
+        blocked time is recorded honestly in ``refresh_log``).
+        """
+        if self._pending is None:
+            return None
+        fut, _ = self._pending
+        t0 = time.perf_counter()
+        fut.result()
+        blocked = time.perf_counter() - t0
+        return self._collect(-1 if t is None else t, blocked_s=blocked)
+
+    def close(self) -> None:
+        if self._executor is not None:
+            self._executor.shutdown(wait=True)
+            self._executor = None
+
+    # -- internals ---------------------------------------------------------
+
+    def _ensure_executor(self) -> concurrent.futures.ThreadPoolExecutor:
+        if self._executor is None:
+            self._executor = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="topo-refresh"
+            )
+        return self._executor
+
+    def _solve(self, Pi_snapshot: np.ndarray) -> None:
+        # runs on the worker thread in overlap mode: refresher state is
+        # only read back on the main thread after fut.done()
+        self.refresher.refresh(Pi_snapshot)
+
+    def _collect(self, t: int, blocked_s: float):
+        fut, meta = self._pending
+        self._pending = None
+        fut.result()  # propagate worker exceptions
+        swap = self._finish_refresh(t)
+        self.refresh_log.append({
+            "t_submit": meta["t_submit"], "t_collect": int(t),
+            "solve_s": self.refresher.last_refresh_s,
+            "pending_segments": meta["pending_segments"],
+            "overlap_wall_s": time.perf_counter() - meta["wall0"],
+            "blocked_s": float(blocked_s),
+            "restaged": None,  # patched below once the swap is built
+        })
+        self.refresh_log[-1]["restaged"] = (
+            isinstance(swap, PoolSwap) and swap.restaged
+        )
+        self.events.append({
+            "t": int(t), "collected": True,
+            "refresh_s": self.refresher.last_refresh_s,
+            "refresh_iters": self.refresher.last_iters,
+        })
+        return swap
+
+    def _finish_refresh(self, t: int):
+        self._W = self.refresher.W
+        self.detector.rebase(self.proxy())
+        if self.events and self.events[-1].get("triggered"):
+            self.events[-1]["refresh_s"] = self.refresher.last_refresh_s
+            self.events[-1]["refresh_iters"] = self.refresher.last_iters
+        return self._emit()
+
+    def _emit(self):
+        """Current topology as the trainer-facing update object."""
+        if self.pool is None:
+            return self.refresher.schedule_arrays()
+        sched = self.refresher.schedule
+        gammas, dropped = self.pool.project(sched)
+        if dropped <= self.pool_miss_tol and gammas.sum() > 0.0:
+            return PoolSwap(gammas=gammas, pool=None, dropped_mass=dropped)
+        # pool miss: restage the refreshed atoms (capacity-truncated),
+        # keeping the old capacity so the trainer's gamma operand shape
+        # -- and hence everything EXCEPT the one recompile -- is stable.
+        # Projecting the UN-truncated schedule reports any capacity-
+        # truncation residue honestly in dropped_mass (0 iff every
+        # refreshed atom fit).
+        self.pool_misses += 1
+        new_pool = PermPool.from_schedule(sched, capacity=self.pool.capacity)
+        self.pool = new_pool
+        new_gammas, dropped = new_pool.project(sched)
+        return PoolSwap(gammas=new_gammas, pool=new_pool, dropped_mass=dropped)
 
     def schedule_arrays(self) -> ScheduleArrays:
         """Current schedule in the trainers' data-plane format."""

@@ -23,16 +23,29 @@ the jitted-able step function, in/out shardings, and abstract input specs.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.mixing import BirkhoffSchedule, mix_dense_sharded, mix_ppermute
+from repro.core.mixing import (
+    BirkhoffSchedule,
+    PermPool,
+    PoolSwap,
+    ScheduleArrays,
+    autotune_sharded_transport,
+    mix_arrays_sharded,
+    mix_dense_sharded,
+    mix_ppermute,
+    mix_ppermute_pool,
+)
 from repro.models import registry
 from repro.models.common import ModelConfig
+from .metrics import CommMeter, mix_bytes_per_step
 from .sharding import make_param_specs
 
 PyTree = Any
@@ -57,6 +70,16 @@ class TrainSetup:
     mode: str
     n_nodes: int
     online_w: bool = False
+    # hot-swappable sharded mixing (online_w dsgd mode only):
+    #   "allgather" -- mix_dense_sharded / mix_arrays_sharded (O(nP) bytes,
+    #                  any W swaps with zero retraces)
+    #   "pool"      -- mix_ppermute_pool over `pool` (O(K P) bytes; in-pool
+    #                  gamma swaps are value changes, restages recompile)
+    sharded_transport: str | None = None
+    pool: PermPool | None = None
+    # modeled bytes RECEIVED per node per mixing step (see
+    # train.metrics.mix_bytes_per_step); None when nothing communicates
+    comm_bytes_per_step: int | None = None
 
     def abstract_params(self) -> PyTree:
         return jax.eval_shape(self.init_params, jax.random.PRNGKey(0))
@@ -131,11 +154,165 @@ class TrainSetup:
                 "this setup was built without online_w; no mix_w argument expected"
             )
 
+    def run_segments(
+        self,
+        params,
+        opt_state,
+        batches,
+        mix,
+        *,
+        segment_len: int,
+        on_segment: Callable | None = None,
+        rollout: str = "scan",
+    ) -> dict:
+        """Segmented online rollout with hot-swap handoff at boundaries.
+
+        Runs the jitted multi-step over ``segment_len``-step slices of
+        ``batches`` (leaves ``(steps, ...)``), calling ``on_segment(t)``
+        after every segment except the last (same contract as the
+        simulator drivers in ``repro.train.trainer``). The hook may
+        return:
+
+        * ``None``            -- keep mixing with the current operand;
+        * a ``ScheduleArrays`` or an ``(n, n)`` array -- swapped in as
+          the next segments' ``mix_w`` (pure value change on the
+          allgather transport: zero retraces);
+        * a :class:`~repro.core.mixing.PoolSwap` -- pool-coordinate
+          update: an in-pool swap replaces the gamma vector (zero
+          retraces); a restage on the pool transport rebuilds the setup
+          around the new pool and recompiles ONCE (counted in
+          ``recompiles`` -- the logged pool-miss fallback), while on
+          the all-gather transport (which executes pool gammas as their
+          ``ScheduleArrays`` twin) even a restage is a pure value
+          change.
+
+        An overlapped refresh controller fits this hook unchanged: it
+        returns ``None`` while its background solve runs and hands the
+        finished swap back at a later boundary, so the rollout never
+        waits on the solve.
+
+        Returns ``{"params", "opt_state", "losses", "n_traces",
+        "swaps", "recompiles", "segment_s", "comm", "setup", "mix"}``
+        -- ``n_traces`` counts multi-step traces (1 when
+        ``segment_len`` divides ``steps`` and no restage happened; a
+        pool-transport restage adds exactly one), ``segment_s``
+        per-segment wall seconds (the overlap benches' jitter probe),
+        ``comm`` the :class:`~repro.train.metrics.CommMeter` summary of
+        modeled mixing bytes. ``setup`` and ``mix`` are the LIVE setup
+        (rebuilt if a restage happened -- continue chunked training
+        from these, not from ``self``, or post-restage gammas would
+        execute on the stale pool's staged permutations) and the final
+        mixing operand.
+        """
+        if not self.online_w:
+            raise ValueError("run_segments needs an online_w=True setup")
+        if segment_len < 1:
+            raise ValueError(f"segment_len must be >= 1, got {segment_len}")
+        steps = jax.tree_util.tree_leaves(batches)[0].shape[0]
+        setup = self
+        n_traces = 0
+
+        def jit_counted(ms):
+            def counted(p, m, b, w):
+                nonlocal n_traces
+                n_traces += 1
+                return ms(p, m, b, w)
+
+            return jax.jit(counted)
+
+        msj = jit_counted(setup.multi_step_fn(rollout))
+        pool = setup.pool
+        mix = _as_mix_operand(mix, setup, pool)
+        meter = CommMeter(per_step_bytes=setup.comm_bytes_per_step or 0)
+        losses, swaps, segment_s = [], [], []
+        recompiles = 0
+        t0 = 0
+        while t0 < steps:
+            k = min(segment_len, steps - t0)
+            seg = jax.tree_util.tree_map(lambda x: x[t0 : t0 + k], batches)
+            tic = time.perf_counter()
+            params, opt_state, loss = msj(params, opt_state, seg, mix)
+            loss.block_until_ready()  # segment wall time is the overlap probe
+            segment_s.append(time.perf_counter() - tic)
+            meter.tick(k)
+            losses.append(np.asarray(loss))
+            t0 += k
+            if on_segment is None or t0 >= steps:
+                continue  # no hook after the final segment (nothing executes it)
+            update = on_segment(t0 - 1)
+            if update is None:
+                continue
+            swaps.append(t0 - 1)
+            if isinstance(update, PoolSwap) and update.restaged:
+                pool = update.pool
+                if setup.sharded_transport == "pool":
+                    # pool miss: the new atoms are not compiled in --
+                    # rebuild the step around the restaged pool (the ONE
+                    # counted recompile)
+                    setup = setup._rebuild(pool)
+                    msj = jit_counted(setup.multi_step_fn(rollout))
+                    recompiles += 1
+                    meter.set_rate(setup.comm_bytes_per_step or 0, step=t0)
+                # on the all-gather transport the restaged atoms execute
+                # as ScheduleArrays data: no rebuild, no recompile
+            mix = _as_mix_operand(update, setup, pool)
+        return {
+            "params": params,
+            "opt_state": opt_state,
+            "losses": np.concatenate(losses) if losses else np.zeros((0,)),
+            "n_traces": n_traces,
+            "swaps": swaps,
+            "recompiles": recompiles,
+            "segment_s": segment_s,
+            "comm": meter.summary(),
+            "setup": setup,
+            "mix": mix,
+        }
+
+    # rebuilds this setup around a restaged PermPool (set by
+    # make_train_setup; a manually constructed TrainSetup cannot restage)
+    _rebuild: Callable | None = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+
     # cached jax.jit of train_step for the "loop" rollout (recompiling it
     # per multi_step call would defeat the A/B comparison)
     _jitted_step: Callable | None = dataclasses.field(
         default=None, repr=False, compare=False
     )
+
+
+def _as_mix_operand(update, setup: "TrainSetup", pool: PermPool | None):
+    """Normalize a hook return / initial mix into the step's operand.
+
+    ``pool`` is the CURRENTLY staged pool (tracked by ``run_segments``
+    across restages). Pool-coordinate gammas are accepted on either
+    transport: the pool transport consumes them directly; the
+    all-gather transport (e.g. ``sharded_transport="auto"`` resolving
+    against the pool) executes them as ``pool.arrays_for(gammas)`` --
+    the bitwise-equal ScheduleArrays twin -- so the same controller
+    drives both without caring which transport won the autotune.
+    """
+    if isinstance(update, PoolSwap):
+        update = update.gammas
+    if isinstance(update, ScheduleArrays):
+        return update
+    arr = np.asarray(update, np.float32)
+    if setup.sharded_transport == "pool":
+        if arr.shape != (setup.pool.capacity,):
+            raise ValueError(
+                f"pool transport expects ({setup.pool.capacity},) gammas, "
+                f"got {arr.shape}"
+            )
+        return jnp.asarray(arr)
+    if pool is not None and arr.ndim == 1:
+        if arr.shape != (pool.capacity,):
+            raise ValueError(
+                f"pool-coordinate gammas must be ({pool.capacity},), "
+                f"got {arr.shape}"
+            )
+        return pool.arrays_for(arr)
+    return jnp.asarray(arr)
 
 
 def gossip_fn(
@@ -193,19 +370,37 @@ def make_train_setup(
     grad_accum: int = 1,
     gossip_every: int = 1,
     online_w: bool = False,
+    sharded_transport: str = "auto",
+    pool: PermPool | None = None,
 ) -> TrainSetup:
     """Build the distributed train step for (cfg, mesh, mode).
 
     ``schedule=None`` in dsgd/dsgd_pod modes means complete-graph mixing.
     ``online_w=True`` builds the *online-adaptation* step: the mixing
-    matrix is a trailing (n, n) data argument (``train_step(params,
+    operand is a trailing data argument (``train_step(params,
     opt_state, batch, mix_w)``) instead of a baked-in schedule, so a
-    mid-training topology refresh swaps W with zero retraces. In dsgd
-    mode the per-node mixing then runs as ``mix_dense_sharded``
-    (all-gather + row contraction -- O(n P) bytes where the static
-    ppermute schedule moves d_max permutes; the documented price of
-    hot-swappability, see repro.core.mixing). Incompatible with a
-    static ``schedule`` and with fsdp mode (whose all-reduce has no W).
+    mid-training topology refresh swaps it with zero retraces. In dsgd
+    mode the per-node mixing transport is then picked by
+    ``sharded_transport``:
+
+    * ``"allgather"`` -- ``mix_w`` is an (n, n) W (``mix_dense_sharded``)
+      or a ``ScheduleArrays`` (``mix_arrays_sharded``): any topology
+      swaps as data, at O(n P) bytes per node per step.
+    * ``"pool"``      -- requires ``pool``; ``mix_w`` is the
+      ``(pool.capacity,)`` gamma vector and mixing runs as
+      ``mix_ppermute_pool``: O(pool.n_comm_slots x P) bytes -- the
+      learned topology's sparse-communication payoff -- and in-pool
+      swaps are pure value changes. Out-of-pool refreshes restage via
+      ``TrainSetup.run_segments`` (one counted recompile).
+    * ``"auto"``      -- the measured sharded autotune table when a
+      bucket exists, else the ``preferred_sharded_transport`` closed
+      form (``repro.core.mixing``); resolves to ``"allgather"`` when no
+      pool is given. The resolved choice is recorded on
+      ``TrainSetup.sharded_transport``.
+
+    Incompatible with a static ``schedule`` and with fsdp mode (whose
+    all-reduce has no W); ``pool`` requires online_w dsgd mode (the
+    dsgd_pod online path mixes by GSPMD einsum, W as data).
     ``grad_accum > 1`` splits the per-step batch into microbatches and
     accumulates gradients in a scan -- same math, ~grad_accum x smaller
     live-activation footprint (the big lever for DeepSeek-V2 -- §Perf).
@@ -222,6 +417,12 @@ def make_train_setup(
             "online_w and a static schedule are mutually exclusive -- pass the "
             "initial W as the mix_w argument of the step instead"
         )
+    if sharded_transport not in ("auto", "allgather", "pool"):
+        raise ValueError(f"unknown sharded_transport {sharded_transport!r}")
+    if pool is not None and not (online_w and mode == "dsgd"):
+        raise ValueError("a PermPool requires online_w=True and mode='dsgd'")
+    if sharded_transport == "pool" and pool is None:
+        raise ValueError("sharded_transport='pool' requires a PermPool")
     axes = mesh.axis_names
     if mode == "dsgd":
         node_axis = "data"
@@ -259,10 +460,60 @@ def make_train_setup(
     else:
         init_params = init_single
 
+    if pool is not None and pool.n_nodes != n_nodes:
+        raise ValueError(
+            f"pool is staged for {pool.n_nodes} nodes, mesh axis "
+            f"'{node_axis}' provides {n_nodes}"
+        )
+
     params_proto = jax.eval_shape(init_params, jax.random.PRNGKey(0))
     param_specs = make_param_specs(
         params_proto, mesh, node_axis=node_axis, fsdp_axis=fsdp_axis
     )
+
+    # per-NODE parameter count (leaves carry the leading node axis in
+    # node modes) -- the P of the bytes/step accounting and the sharded
+    # autotune bucket. TP over `model` divides the per-DEVICE share, not
+    # the per-node collective volume modeled here.
+    p_total = sum(
+        int(np.prod(leaf.shape[1:] if node_axis is not None else leaf.shape,
+                    dtype=np.int64))
+        for leaf in jax.tree_util.tree_leaves(params_proto)
+    )
+
+    # Resolve the hot-swappable sharded transport (satellite of ISSUE 5:
+    # consult the measured table / closed form instead of hardcoding the
+    # all-gather). Lookup-only: unmeasured hardware falls back to the
+    # conservative preferred_sharded_transport crossover.
+    resolved_transport: str | None = None
+    comm_bytes: int | None = None
+    if mode == "dsgd":
+        if online_w:
+            if sharded_transport == "auto":
+                resolved_transport = (
+                    "allgather"
+                    if pool is None
+                    else autotune_sharded_transport(
+                        n_nodes, pool.n_comm_slots, p_total
+                    )
+                )
+            else:
+                resolved_transport = sharded_transport
+            comm_bytes = mix_bytes_per_step(
+                "pool" if resolved_transport == "pool" else "allgather",
+                n_nodes=n_nodes,
+                p_total=p_total,
+                n_comm_atoms=pool.n_comm_slots if resolved_transport == "pool" else None,
+            )
+        elif schedule is not None:
+            comm_bytes = mix_bytes_per_step(
+                "ppermute", n_nodes=n_nodes, p_total=p_total,
+                n_comm_atoms=schedule.n_communication_atoms,
+            )
+        else:
+            comm_bytes = mix_bytes_per_step(
+                "allreduce", n_nodes=n_nodes, p_total=p_total
+            )
 
     # batch sharding:
     #   dsgd:      leaves (n_nodes, per_node, ...) -> P(data, None, ...)
@@ -326,6 +577,12 @@ def make_train_setup(
             losses, grads = jax.vmap(grad_of)(params, batch)
             half, new_m = _sgd_update(params, grads, momentum_state, lr, momentum)
             if online_w:
+                if isinstance(mix_w, ScheduleArrays) or getattr(mix_w, "ndim", 2) != 2:
+                    raise TypeError(
+                        "dsgd_pod online mixing is a GSPMD einsum over the pod "
+                        "axis: pass mix_w as a dense (n, n) W (pool gammas / "
+                        "ScheduleArrays are dsgd-mode operands)"
+                    )
                 W_pod = mix_w.astype(jnp.float32)
             else:
                 W_pod = (
@@ -362,7 +619,12 @@ def make_train_setup(
 
             def do_mix(h):
                 if online_w:
-                    return mix_dense_sharded(h, w_args[0], node_axis)
+                    w = w_args[0]
+                    if resolved_transport == "pool":
+                        return mix_ppermute_pool(h, w, pool, node_axis)
+                    if isinstance(w, ScheduleArrays):
+                        return mix_arrays_sharded(h, w, node_axis)
+                    return mix_dense_sharded(h, w, node_axis)
                 if schedule is None:
                     return jax.tree_util.tree_map(
                         lambda x: jax.lax.pmean(x.astype(jnp.float32), node_axis).astype(x.dtype),
@@ -401,7 +663,10 @@ def make_train_setup(
         in_specs = (node_specs, mom_specs, bspec)
         args = (params, momentum_state, batch)
         if online_w:
-            in_specs = in_specs + (P(),)  # W replicated to every node shard
+            # mixing operand replicated to every node shard; tree-mapped
+            # so ScheduleArrays (a 2-leaf pytree) and flat gammas/W all fit
+            w_specs = jax.tree_util.tree_map(lambda _: P(), mix_w)
+            in_specs = in_specs + (w_specs,)
             args = args + (mix_w,)
         return shard_map(
             per_node,
@@ -419,6 +684,15 @@ def make_train_setup(
         def train_step(params, momentum_state, batch):
             return _step_impl(params, momentum_state, batch)
 
+    def rebuild(new_pool: PermPool) -> TrainSetup:
+        # pool-miss fallback: same setup, new staged atoms (the one
+        # counted recompile of TrainSetup.run_segments)
+        return make_train_setup(
+            cfg, mesh, mode=mode, schedule=schedule, lr=lr, momentum=momentum,
+            impl=impl, grad_accum=grad_accum, gossip_every=gossip_every,
+            online_w=online_w, sharded_transport="pool", pool=new_pool,
+        )
+
     return TrainSetup(
         train_step=train_step,
         init_params=init_params,
@@ -427,4 +701,8 @@ def make_train_setup(
         mode=mode,
         n_nodes=n_nodes,
         online_w=online_w,
+        sharded_transport=resolved_transport,
+        pool=pool,
+        comm_bytes_per_step=comm_bytes,
+        _rebuild=rebuild,
     )

@@ -17,7 +17,95 @@ import numpy as np
 
 PyTree = Any
 
-__all__ = ["consensus_distance", "node_spread", "MetricLogger"]
+__all__ = [
+    "consensus_distance",
+    "node_spread",
+    "MetricLogger",
+    "mix_bytes_per_step",
+    "CommMeter",
+]
+
+
+def mix_bytes_per_step(
+    transport: str,
+    *,
+    n_nodes: int,
+    p_total: int,
+    n_comm_atoms: int | None = None,
+    itemsize: int = 4,
+) -> int:
+    """Bytes RECEIVED per node per mixing step, by transport.
+
+    The counter the comm accounting (and the bench acceptance ratios)
+    runs on -- a closed-form model of the collective, not a NIC
+    counter: every listed transport moves a deterministic byte volume
+    per step, so the model IS the measurement up to wire framing.
+    ``p_total`` is one node's parameter count; transfers run in f32
+    (``itemsize=4``) in all the hot-swappable transports.
+
+    ===========  =========================  ==============================
+    transport    bytes/node/step            which mix function
+    ===========  =========================  ==============================
+    dense        0 (single host)            mix_dense / mix_schedule_*
+    allgather    (n - 1) * P * itemsize     mix_dense_sharded /
+                                            mix_arrays_sharded
+    ppermute     n_comm_atoms * P * item    mix_ppermute (static) --
+                                            non-identity atoms only
+    pool         n_comm_atoms * P * item    mix_ppermute_pool -- staged
+                                            non-identity SLOTS (gamma 0
+                                            still transfers)
+    allreduce    2 (n-1)/n * P * itemsize   mix_allreduce (ring model)
+    ===========  =========================  ==============================
+    """
+    if n_nodes < 1 or p_total < 0:
+        raise ValueError(f"bad n_nodes={n_nodes} / p_total={p_total}")
+    if transport == "dense":
+        return 0
+    if transport == "allgather":
+        return (n_nodes - 1) * p_total * itemsize
+    if transport in ("ppermute", "pool"):
+        if n_comm_atoms is None:
+            raise ValueError(f"transport={transport!r} needs n_comm_atoms")
+        return n_comm_atoms * p_total * itemsize
+    if transport == "allreduce":
+        return int(2 * (n_nodes - 1) / n_nodes * p_total) * itemsize
+    raise ValueError(f"unknown transport {transport!r}")
+
+
+@dataclasses.dataclass
+class CommMeter:
+    """Accumulates the modeled communication of a training run.
+
+    ``per_step_bytes`` is per NODE per step (the :func:`mix_bytes_per_step`
+    unit); a transport change mid-run (e.g. a pool restage that grows
+    the staged slot count) updates it via :meth:`set_rate`, which also
+    records the change as an event.
+    """
+
+    per_step_bytes: int = 0
+    steps: int = 0
+    total_bytes: int = 0
+    events: list = dataclasses.field(default_factory=list)
+
+    def tick(self, k: int = 1) -> None:
+        self.steps += int(k)
+        self.total_bytes += int(k) * self.per_step_bytes
+
+    def set_rate(self, per_step_bytes: int, step: int | None = None) -> None:
+        if per_step_bytes != self.per_step_bytes:
+            self.events.append(
+                {"step": self.steps if step is None else int(step),
+                 "per_step_bytes": int(per_step_bytes)}
+            )
+        self.per_step_bytes = int(per_step_bytes)
+
+    def summary(self) -> dict:
+        return {
+            "per_step_bytes": self.per_step_bytes,
+            "steps": self.steps,
+            "total_bytes": self.total_bytes,
+            "rate_changes": list(self.events),
+        }
 
 
 def consensus_distance(params_stack: PyTree) -> jax.Array:

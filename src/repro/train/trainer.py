@@ -35,7 +35,22 @@ import numpy as np
 from repro.core.dsgd import dsgd_init, dsgd_step_stacked
 from repro.core.mixing import BirkhoffSchedule, ScheduleArrays
 from repro.data.synthetic import MeanEstimationTask
-from .metrics import MetricLogger, consensus_distance
+from .metrics import CommMeter, MetricLogger, consensus_distance, mix_bytes_per_step
+
+
+def _online_comm_meter(n_nodes: int, params_per_node: int) -> CommMeter:
+    """Modeled comm meter for a data-plane (hot-swappable) schedule.
+
+    The simulator runs on one host, so these are the bytes the SAME
+    run would move on a device mesh: the ``ScheduleArrays`` transport
+    there is the all-gather (``mix_arrays_sharded``) -- ``(n-1) P``
+    received per node per step -- until a ``PermPool`` trainer brings
+    it down to the staged slot count (``lm_trainer.run_segments``
+    meters that case from its own transport).
+    """
+    return CommMeter(per_step_bytes=mix_bytes_per_step(
+        "allgather", n_nodes=n_nodes, p_total=params_per_node,
+    ))
 
 PyTree = Any
 
@@ -224,6 +239,7 @@ def _run_mean_estimation_online(
     carry = (theta, state, sched0)
     mse_l, mx_l, mn_l = [], [], []
     swaps: list[int] = []
+    meter = _online_comm_meter(theta.shape[0], int(np.prod(theta.shape[1:])))
     t0 = 0
     while t0 < steps:
         length = min(seg, steps - t0)
@@ -231,6 +247,7 @@ def _run_mean_estimation_online(
         mse_l.append(np.asarray(e_mean))
         mx_l.append(np.asarray(e_max))
         mn_l.append(np.asarray(e_min))
+        meter.tick(length)
         t0 += length
         if on_segment is not None and t0 < steps:
             # no hook after the final segment: a refresh triggered there
@@ -248,6 +265,7 @@ def _run_mean_estimation_online(
         "theta": np.asarray(theta),
         "n_traces": n_traces,
         "swaps": swaps,
+        "comm": meter.summary(),
     }
 
 
@@ -517,4 +535,12 @@ def run_classification(
                 carry = maybe_swap(t, carry)
     logger.aux["n_traces"] = n_traces
     logger.aux["swaps"] = swaps
+    if online:
+        meter = _online_comm_meter(
+            n,
+            sum(int(np.prod(np.asarray(p.shape))) for p in
+                jax.tree_util.tree_leaves(params0)),
+        )
+        meter.tick(steps)
+        logger.aux["comm"] = meter.summary()
     return logger

@@ -256,6 +256,207 @@ def test_online_w_matches_static_schedule_and_swaps_without_retrace():
     assert "ONLINE_W_OK" in out
 
 
+def test_staged_pool_bitwise_equals_allgather_and_swaps_without_retrace():
+    """The staged-ppermute pool transport must equal the all-gather
+    ScheduleArrays transport BITWISE on the same schedule (slot-for-slot
+    identical accumulation), and >= 3 consecutive in-pool gamma swaps
+    through run_segments must compile nothing; a forced pool miss must
+    cost exactly one counted recompile."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.compat import AxisType, make_compat_mesh, set_mesh, shard_map
+        from repro.configs import get_smoke_config
+        from repro.core import topology as T
+        from repro.core.mixing import (BirkhoffSchedule, PermPool, PoolSwap,
+                                       schedule_from_matrix, mix_ppermute_pool,
+                                       mix_arrays_sharded)
+        from repro.train.lm_trainer import make_train_setup
+
+        mesh1 = make_compat_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+        sched = schedule_from_matrix(T.ring(8))
+        pool = PermPool.from_schedule(sched, capacity=6)
+        g, dropped = pool.project(sched)
+        assert dropped == 0.0
+        arrays = pool.arrays_for(g)
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(8, 37)), jnp.float32)
+        gj = jnp.asarray(g)
+
+        def run(fn):
+            return jax.jit(shard_map(fn, mesh=mesh1, in_specs=(P("data"),),
+                                     out_specs=P("data"), axis_names={"data"},
+                                     check_vma=False))(x)
+
+        got_pool = np.asarray(run(lambda v: mix_ppermute_pool(v, gj, pool, "data")))
+        got_ag = np.asarray(run(lambda v: mix_arrays_sharded(v, arrays, "data")))
+        assert np.array_equal(got_pool, got_ag), np.abs(got_pool - got_ag).max()
+        want = T.ring(8) @ np.asarray(x)
+        assert np.allclose(got_pool, want, atol=1e-5)
+
+        mesh = make_compat_mesh((8, 1), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+        cfg = get_smoke_config("qwen3-0.6b")
+        setup = make_train_setup(cfg, mesh, mode="dsgd", online_w=True,
+                                 sharded_transport="pool", pool=pool, lr=1e-2)
+        assert setup.sharded_transport == "pool"
+        assert setup.comm_bytes_per_step > 0
+        sh = jax.tree.map(lambda s: NamedSharding(mesh, s), setup.param_specs,
+                          is_leaf=lambda x: isinstance(x, P))
+        with set_mesh(mesh):
+            params = jax.jit(setup.init_params, out_shardings=sh)(jax.random.PRNGKey(0))
+            toks = jax.random.randint(jax.random.PRNGKey(1), (10, 8, 2, 32), 0,
+                                      cfg.vocab_size)
+            batches = {"tokens": toks, "labels": toks}
+            g2 = np.roll(g, 1).astype(np.float32); g2 /= g2.sum()
+            swaps = iter([PoolSwap(gammas=g2), PoolSwap(gammas=g),
+                          PoolSwap(gammas=g2)])
+            out = setup.run_segments(params, None, batches, g, segment_len=2,
+                                     on_segment=lambda t: next(swaps, None))
+            assert out["n_traces"] == 1, out["n_traces"]   # 3 in-pool swaps: 0 retraces
+            assert out["recompiles"] == 0
+            assert len(out["swaps"]) == 3
+            assert np.isfinite(out["losses"]).all()
+
+            # the all-gather transport must accept the SAME pool-coordinate
+            # updates (gammas execute as their ScheduleArrays twin) and
+            # produce bitwise-identical losses -- the autotune can then pick
+            # either transport under one controller
+            setup_ag = make_train_setup(cfg, mesh, mode="dsgd", online_w=True,
+                                        sharded_transport="allgather",
+                                        pool=pool, lr=1e-2)
+            swaps_ag = iter([PoolSwap(gammas=g2), PoolSwap(gammas=g),
+                             PoolSwap(gammas=g2)])
+            out_ag = setup_ag.run_segments(params, None, batches, g,
+                                           segment_len=2,
+                                           on_segment=lambda t: next(swaps_ag, None))
+            assert np.array_equal(out["losses"], out_ag["losses"]), "transports diverged"
+
+            # out-of-pool atom => restage => exactly ONE counted recompile
+            new_perm = tuple(int(v) for v in np.roll(np.arange(8), 3))
+            ns = BirkhoffSchedule(coeffs=(0.5, 0.5),
+                                  perms=(tuple(range(8)), new_perm))
+            new_pool = PermPool.from_schedule(ns, capacity=6)
+            ng, _ = new_pool.project(ns)
+            miss = iter([PoolSwap(gammas=ng, pool=new_pool)])
+            out2 = setup.run_segments(out["params"], None, batches, g,
+                                      segment_len=5,
+                                      on_segment=lambda t: next(miss, None))
+            assert out2["recompiles"] == 1, out2
+            assert out2["n_traces"] == 2, out2
+            assert out2["setup"].pool is new_pool  # continue from the LIVE setup
+            assert np.isfinite(out2["losses"]).all()
+
+            # same restage on the all-gather transport: pure data, NO recompile
+            miss_ag = iter([PoolSwap(gammas=ng, pool=new_pool)])
+            out3 = setup_ag.run_segments(out_ag["params"], None, batches, g,
+                                         segment_len=5,
+                                         on_segment=lambda t: next(miss_ag, None))
+            assert out3["recompiles"] == 0 and out3["n_traces"] == 1, out3
+            assert np.array_equal(out2["losses"], out3["losses"]), "restage diverged"
+        print("POOL_TRANSPORT_OK", out["comm"]["per_step_bytes"])
+    """)
+    assert "POOL_TRANSPORT_OK" in out
+
+
+def test_mix_dense_sharded_serialized_peak_memory():
+    """The serialized all-gather contraction must never hold the gathered
+    (n, P_total) stack live: compiled per-device temp memory stays within
+    ~one gathered leaf (the PR-4 peak-memory fix, checked on the compiled
+    HLO's buffer assignment)."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import AxisType, make_compat_mesh, shard_map
+        from repro.core.mixing import mix_dense_sharded
+
+        n, n_leaves = 8, 6
+        mesh = make_compat_mesh((n,), ("data",), axis_types=(AxisType.Auto,))
+        leaves = {f"w{i}": jnp.zeros((n, 64, 257), jnp.float32)
+                  for i in range(n_leaves)}
+        W = jnp.eye(n, dtype=jnp.float32)
+
+        def f(p, w):
+            return shard_map(
+                lambda q: mix_dense_sharded(q, w, "data"),
+                mesh=mesh, in_specs=(P("data"),), out_specs=P("data"),
+                axis_names={"data"}, check_vma=False)(p)
+
+        stats = jax.jit(f).lower(leaves, W).compile().memory_analysis()
+        one_gathered_leaf = n * 64 * 257 * 4      # bytes, f32
+        full_stack = n_leaves * one_gathered_leaf
+        temp = stats.temp_size_in_bytes
+        # one live gather (+ slack for the contraction buffer), NOT the stack
+        assert temp <= 2 * one_gathered_leaf, (temp, one_gathered_leaf)
+        assert temp < full_stack // 2, (temp, full_stack)
+        print("PEAK_MEMORY_OK", temp, one_gathered_leaf, full_stack)
+    """)
+    assert "PEAK_MEMORY_OK" in out
+
+
+def test_node_churn_end_to_end_online_mesh_trainer():
+    """NodeChurn drift (node replacement + offline windows) driven through
+    the ONLINE MESH TRAINER: streamed labels -> drift detector -> warm
+    refresh -> pool-coordinate hot swap at a run_segments boundary, with
+    zero retraces unless the refresh restages (counted)."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.compat import AxisType, make_compat_mesh, set_mesh
+        from repro.configs import get_smoke_config
+        from repro.core import learn_topology
+        from repro.core.mixing import PermPool, schedule_from_result
+        from repro.data.drift import NodeChurn, labels_stream
+        from repro.online import (DriftDetector, OnlineTopologyController,
+                                  RefreshConfig, StreamingPiEstimator,
+                                  TopologyRefresher)
+        from repro.train.lm_trainer import make_train_setup
+
+        n, K, steps, seg = 8, 4, 24, 4
+        Pi0 = np.eye(K)[np.arange(n) % K].astype(float)
+        churn = NodeChurn(Pi0, events=((6, 1, 4), (6, 4), (6, 6)), alpha=0.3,
+                          seed=3)
+        labels = labels_stream(churn, steps, batch=16, seed=0)
+
+        res0 = learn_topology(Pi0, budget=3, lam=0.5)
+        ref = TopologyRefresher(res0, RefreshConfig(budget=3, lam=0.5))
+        pool = PermPool.from_schedule(ref.schedule, capacity=ref.l_max)
+        ctl = OnlineTopologyController(
+            ref, estimator=StreamingPiEstimator(n, K, beta=0.5, init=Pi0),
+            detector=DriftDetector(threshold=1.05, warmup=1),
+            pool=pool, pool_miss_tol=0.25)
+
+        mesh = make_compat_mesh((8, 1), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+        cfg = get_smoke_config("qwen3-0.6b")
+        setup = make_train_setup(cfg, mesh, mode="dsgd", online_w=True,
+                                 sharded_transport="pool", pool=pool, lr=1e-2)
+        sh = jax.tree.map(lambda s: NamedSharding(mesh, s), setup.param_specs,
+                          is_leaf=lambda x: isinstance(x, P))
+        fed = {"t": 0}
+        def hook(t):
+            while fed["t"] <= t:
+                ctl.observe(labels[fed["t"]])
+                fed["t"] += 1
+            return ctl.on_segment(t)
+
+        g0, _ = pool.project(ref.schedule)
+        with set_mesh(mesh):
+            params = jax.jit(setup.init_params, out_shardings=sh)(jax.random.PRNGKey(0))
+            toks = jax.random.randint(jax.random.PRNGKey(1), (steps, 8, 2, 32),
+                                      0, cfg.vocab_size)
+            out = setup.run_segments(params, None,
+                                     {"tokens": toks, "labels": toks}, g0,
+                                     segment_len=seg, on_segment=hook)
+        assert ref.n_refreshes >= 1, "churn never detected"
+        assert out["swaps"], "refresh fired but no swap landed"
+        # every trace is accounted: 1 initial + 1 per counted restage
+        assert out["n_traces"] == 1 + out["recompiles"], out
+        assert np.isfinite(out["losses"]).all()
+        assert out["comm"]["total_bytes"] > 0
+        print("NODE_CHURN_MESH_OK", len(out["swaps"]), out["recompiles"],
+              ctl.pool_misses)
+    """)
+    assert "NODE_CHURN_MESH_OK" in out
+
+
 def test_online_w_rejects_invalid_configs():
     from repro.configs import get_smoke_config  # noqa: F401  (import-path smoke)
     code = """

@@ -285,3 +285,134 @@ def test_mix_stacked_autotune_transport_matches_dense(tmp_path, monkeypatch):
             np.asarray(got[k]), np.asarray(want[k]), atol=1e-5
         )
     M._autotune_cache = None
+
+
+# ---------------------------------------------------------------------------
+# sharded hot-swap transports: PermPool + cost model + autotune schema
+# ---------------------------------------------------------------------------
+
+def test_perm_pool_staging_projection_and_restage():
+    from repro.core.mixing import PermPool
+
+    sched = schedule_from_matrix(T.ring(8))
+    pool = PermPool.from_schedule(sched, capacity=6)
+    assert pool.capacity == 6 and pool.n_nodes == 8
+    # ring = 0.5 I + 0.25 shift + 0.25 shift^-1: 2 comm slots, identity
+    # headroom pads the rest (free until staged)
+    assert pool.n_comm_slots == sched.n_communication_atoms
+    g, dropped = pool.project(sched)
+    assert dropped == 0.0 and pool.contains(sched)
+    np.testing.assert_allclose(pool.to_matrix(g), T.ring(8), atol=1e-12)
+
+    # out-of-pool atom: its mass is dropped, the rest renormalized (the
+    # executed W stays doubly stochastic)
+    new_perm = tuple(int(v) for v in np.roll(np.arange(8), 3))
+    drifted = BirkhoffSchedule(
+        coeffs=(0.6,) + tuple(0.4 * c for c in sched.coeffs),
+        perms=(new_perm,) + sched.perms,
+    )
+    g2, dropped2 = pool.project(drifted)
+    assert abs(dropped2 - 0.6) < 1e-12 and not pool.contains(drifted)
+    assert abs(g2.sum() - 1.0) < 1e-6
+    W2 = pool.to_matrix(g2)
+    np.testing.assert_allclose(W2.sum(axis=0), 1.0, atol=1e-6)
+    np.testing.assert_allclose(W2.sum(axis=1), 1.0, atol=1e-6)
+
+    # restage fits everything again
+    restaged = PermPool.from_schedule(drifted, capacity=6)
+    assert restaged.contains(drifted)
+    # over-capacity schedules are truncated, largest coefficients kept
+    many = BirkhoffSchedule(
+        coeffs=tuple(np.full(8, 1 / 8)),
+        perms=tuple(tuple(int(v) for v in np.roll(np.arange(8), k)) for k in range(8)),
+    )
+    small = PermPool.from_schedule(many, capacity=3)
+    assert small.capacity == 3
+
+    with pytest.raises(ValueError):
+        PermPool(perms=((0, 0, 1),))  # not a permutation
+    with pytest.raises(ValueError):
+        pool.project(schedule_from_matrix(T.ring(4)))  # node-count mismatch
+
+
+def test_perm_pool_arrays_for_matches_slots():
+    from repro.core.mixing import PermPool, arrays_to_matrix
+
+    sched = schedule_from_matrix(T.ring(8))
+    pool = PermPool.from_schedule(sched, capacity=5)
+    g, _ = pool.project(sched)
+    arrays = pool.arrays_for(g)
+    assert arrays.l_max == pool.capacity
+    np.testing.assert_allclose(arrays_to_matrix(arrays), T.ring(8), atol=1e-6)
+    with pytest.raises(ValueError):
+        pool.arrays_for(np.ones(3, np.float32))  # wrong gamma shape
+
+
+def test_preferred_sharded_transport_crossover():
+    from repro.core.mixing import preferred_sharded_transport
+
+    # bytes: pool moves K*P per node, all-gather (n-1)*P discounted by
+    # the fused-collective advantage => pool iff K <= (n-1)/advantage
+    assert preferred_sharded_transport(8, 3) == "pool"
+    assert preferred_sharded_transport(8, 4) == "allgather"
+    assert preferred_sharded_transport(512, 64) == "pool"
+    assert preferred_sharded_transport(4, 3, allgather_speedup=1.0) == "pool"
+    with pytest.raises(ValueError):
+        preferred_sharded_transport(8, 3, allgather_speedup=0.0)
+
+
+def test_autotune_sharded_transport_schema_and_fallback(tmp_path, monkeypatch):
+    import json
+
+    from repro.core import mixing as M
+
+    path = str(tmp_path / "transport_autotune.json")
+    monkeypatch.setenv("REPRO_TRANSPORT_AUTOTUNE", path)
+    M._autotune_cache = None
+
+    # lookup-only miss => closed form, nothing written, nothing timed
+    assert M.autotune_sharded_transport(8, 3, 4096) == "pool"
+    assert M.autotune_sharded_transport(8, 7, 4096) == "allgather"
+    assert not os.path.exists(path)
+    # measure without a mesh cannot time => still the closed form
+    assert M.autotune_sharded_transport(8, 7, 4096, measure=True) == "allgather"
+
+    # a measured entry (the "sh_" schema extension of the same table)
+    # overrides the closed form at its bucket -- and ONLY there
+    key = M._sharded_bucket_key(8, 3, 4096)
+    assert key.startswith("sh_") and key.endswith("_n8_K4_P4096")
+    with open(path, "w") as f:
+        json.dump({key: {"winner": "allgather"}}, f)
+    M._autotune_cache = None
+    assert M.autotune_sharded_transport(8, 3, 4096) == "allgather"
+    assert M.autotune_sharded_transport(8, 3, 1 << 20) == "pool"  # other bucket
+    # stacked-transport lookups never see sharded keys (disjoint prefix)
+    assert M.autotune_transport(8, 3, 4096) == M.preferred_transport(8, 3)
+    M._autotune_cache = None
+
+
+def test_mix_bytes_per_step_model():
+    from repro.train.metrics import CommMeter, mix_bytes_per_step
+
+    P_, n = 1000, 8
+    ag = mix_bytes_per_step("allgather", n_nodes=n, p_total=P_)
+    pool = mix_bytes_per_step("pool", n_nodes=n, p_total=P_, n_comm_atoms=2)
+    assert ag == (n - 1) * P_ * 4 and pool == 2 * P_ * 4
+    assert mix_bytes_per_step("dense", n_nodes=n, p_total=P_) == 0
+    assert mix_bytes_per_step(
+        "ppermute", n_nodes=n, p_total=P_, n_comm_atoms=3
+    ) == 3 * P_ * 4
+    with pytest.raises(ValueError):
+        mix_bytes_per_step("pool", n_nodes=n, p_total=P_)  # needs n_comm_atoms
+    with pytest.raises(ValueError):
+        mix_bytes_per_step("warp", n_nodes=n, p_total=P_)
+
+    meter = CommMeter(per_step_bytes=ag)
+    meter.tick(10)
+    meter.set_rate(pool, step=10)
+    meter.tick(5)
+    s = meter.summary()
+    assert s["total_bytes"] == 10 * ag + 5 * pool
+    assert s["steps"] == 15 and s["rate_changes"] == [
+        {"step": 10, "per_step_bytes": pool}
+    ]

@@ -548,3 +548,198 @@ def test_mean_estimation_online_with_controller_end_to_end():
     assert len(out["swaps"]) == ref.n_refreshes
     assert all(s >= 40 for s in out["swaps"])  # no refresh before the drift
     assert ref.schedule_arrays().l_max == l_max
+
+
+# ---------------------------------------------------------------------------
+# pool-coordinate swaps + overlapped refresh (ISSUE 5)
+# ---------------------------------------------------------------------------
+
+def _small_problem(n=16, K=4, budget=4, seed=0):
+    rng = np.random.default_rng(seed)
+    Pi = rng.dirichlet(0.3 * np.ones(K), size=n)
+    res = learn_topology(Pi, budget=budget, lam=0.1)
+    return Pi, res
+
+
+def test_controller_pool_mode_emits_pool_swaps():
+    from repro.core.mixing import PermPool, PoolSwap
+
+    Pi, res0 = _small_problem()
+    ref = TopologyRefresher(res0, RefreshConfig(budget=4, lam=0.1))
+    pool = PermPool.from_schedule(ref.schedule, capacity=ref.l_max)
+    ctl = OnlineTopologyController(
+        ref, estimator=StreamingPiEstimator(16, 4, init=Pi),
+        pool=pool, pool_miss_tol=0.05,
+    )
+    ctl.request_refresh()  # manual trigger bypasses the detector
+    swap = ctl.on_segment(0)
+    assert isinstance(swap, PoolSwap)
+    # consistency either way the projection went: an in-pool swap's
+    # gammas execute on the CURRENT pool, a restage carries the new one
+    if swap.restaged:
+        assert ctl.pool_misses == 1 and ctl.pool is swap.pool
+        assert swap.pool.contains(ref.schedule)
+    else:
+        assert ctl.pool_misses == 0 and swap.dropped_mass <= 0.05
+        assert swap.gammas.shape == (pool.capacity,)
+    W = (ctl.pool).to_matrix(swap.gammas)
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-5)
+
+
+def test_controller_pool_miss_restages_with_stable_capacity():
+    from repro.core.mixing import PermPool, PoolSwap
+
+    Pi, res0 = _small_problem()
+    ref = TopologyRefresher(res0, RefreshConfig(budget=4, lam=0.1))
+    # a pool staged from a FOREIGN schedule: the refresh's atoms cannot
+    # all be in it => guaranteed miss => restage at the same capacity
+    foreign = BirkhoffSchedule(
+        coeffs=(0.5, 0.5),
+        perms=(tuple(np.roll(np.arange(16), 5)), tuple(np.roll(np.arange(16), 7))),
+    )
+    pool = PermPool.from_schedule(foreign, capacity=ref.l_max)
+    ctl = OnlineTopologyController(
+        ref, estimator=StreamingPiEstimator(16, 4, init=Pi),
+        pool=pool, pool_miss_tol=0.05,
+    )
+    ctl.request_refresh()
+    swap = ctl.on_segment(0)
+    assert isinstance(swap, PoolSwap) and swap.restaged
+    assert ctl.pool_misses == 1
+    assert swap.pool.capacity == pool.capacity  # gamma operand shape stable
+    assert swap.gammas.shape == (pool.capacity,)
+    assert swap.pool.contains(ctl.refresher.schedule)
+
+
+def test_overlap_controller_never_blocks_and_lands_swap_later():
+    import time as _time
+
+    Pi, res0 = _small_problem()
+
+    class SlowRefresher(TopologyRefresher):
+        def refresh(self, Pi_hat):
+            _time.sleep(0.3)
+            return super().refresh(Pi_hat)
+
+    ref = SlowRefresher(res0, RefreshConfig(budget=4, lam=0.1))
+    ctl = OnlineTopologyController(
+        ref, estimator=StreamingPiEstimator(16, 4, init=Pi), overlap=True
+    )
+    try:
+        ctl.request_refresh()
+        t0 = _time.perf_counter()
+        assert ctl.on_segment(0) is None          # submit, don't solve inline
+        assert _time.perf_counter() - t0 < 0.25, "on_segment blocked on the solve"
+        assert ctl.refresh_pending
+        assert ctl.on_segment(1) is None          # still pending: no block
+        deadline = _time.monotonic() + 5.0
+        swap = None
+        while swap is None and _time.monotonic() < deadline:
+            _time.sleep(0.05)
+            swap = ctl.on_segment(2)
+        assert swap is not None, "background solve never landed"
+        assert not ctl.refresh_pending
+        (rec,) = ctl.refresh_log
+        assert rec["blocked_s"] == 0.0            # collected, never waited
+        assert rec["pending_segments"] >= 1
+        assert rec["overlap_wall_s"] >= 0.3
+        # while pending the detector was suspended (events say so)
+        assert any(e.get("pending") for e in ctl.events)
+    finally:
+        ctl.close()
+
+
+def test_overlap_controller_flush_blocks_and_records_honestly():
+    import time as _time
+
+    Pi, res0 = _small_problem()
+
+    class SlowRefresher(TopologyRefresher):
+        def refresh(self, Pi_hat):
+            _time.sleep(0.25)
+            return super().refresh(Pi_hat)
+
+    ref = SlowRefresher(res0, RefreshConfig(budget=4, lam=0.1))
+    ctl = OnlineTopologyController(
+        ref, estimator=StreamingPiEstimator(16, 4, init=Pi), overlap=True
+    )
+    try:
+        assert ctl.flush() is None                # nothing in flight
+        ctl.request_refresh()
+        assert ctl.on_segment(0) is None
+        swap = ctl.flush(7)
+        assert swap is not None
+        (rec,) = ctl.refresh_log
+        assert rec["blocked_s"] > 0.0             # the wait is recorded
+        assert rec["t_collect"] == 7
+    finally:
+        ctl.close()
+
+
+def test_overlap_snapshot_isolates_worker_from_streaming_updates():
+    """observe() keeps mutating Pi_hat while the solve runs; the worker
+    must see the snapshot taken at submit time."""
+    import time as _time
+
+    Pi, res0 = _small_problem()
+    seen = {}
+
+    class RecordingRefresher(TopologyRefresher):
+        def refresh(self, Pi_hat):
+            seen["Pi"] = np.array(Pi_hat)
+            _time.sleep(0.2)
+            return super().refresh(Pi_hat)
+
+    ref = RecordingRefresher(res0, RefreshConfig(budget=4, lam=0.1))
+    est = StreamingPiEstimator(16, 4, beta=0.9, init=Pi)
+    ctl = OnlineTopologyController(ref, estimator=est, overlap=True)
+    try:
+        ctl.request_refresh()
+        snapshot_at_submit = np.array(est.Pi_hat)
+        assert ctl.on_segment(0) is None
+        # drown the estimator in class-0 labels while the solve runs
+        ctl.observe(np.zeros((16, 32), np.int64))
+        ctl.observe(np.zeros((16, 32), np.int64))
+        ctl.flush()
+        np.testing.assert_array_equal(seen["Pi"], snapshot_at_submit)
+        assert np.abs(est.Pi_hat - snapshot_at_submit).max() > 0.1
+    finally:
+        ctl.close()
+
+
+def test_online_simulator_results_carry_comm_accounting():
+    task = mean_estimation_clusters(n_nodes=8, K=4, m=3.0, sigma_tilde2=0.5)
+    Pi = _one_hot_pi(8, 4)
+    res = learn_topology(Pi, budget=3, lam=0.5)
+    sa = schedule_to_arrays(schedule_from_result(res), 6)
+    out = run_mean_estimation(task, None, steps=20, schedule=sa, segment_len=5)
+    comm = out["comm"]
+    # the data-plane (hot-swappable) transport on a mesh is the
+    # all-gather: (n-1) * P * 4 bytes per node per step, P=1 here
+    assert comm["per_step_bytes"] == 7 * 1 * 4
+    assert comm["steps"] == 20
+    assert comm["total_bytes"] == 20 * 7 * 4
+
+
+def test_restage_reports_capacity_truncation_residue():
+    """A pool smaller than the refreshed atom set restages with the
+    truncation residue reported in dropped_mass -- not a silent 0."""
+    from repro.core.mixing import PermPool, PoolSwap
+
+    Pi, res0 = _small_problem()
+    ref = TopologyRefresher(res0, RefreshConfig(budget=4, lam=0.1))
+    assert ref.schedule.n_atoms > 2
+    tiny = PermPool.from_schedule(
+        BirkhoffSchedule(coeffs=(1.0,), perms=(tuple(np.roll(np.arange(16), 5)),)),
+        capacity=2,
+    )
+    ctl = OnlineTopologyController(
+        ref, estimator=StreamingPiEstimator(16, 4, init=Pi),
+        pool=tiny, pool_miss_tol=0.05,
+    )
+    ctl.request_refresh()
+    swap = ctl.on_segment(0)
+    assert isinstance(swap, PoolSwap) and swap.restaged
+    assert swap.pool.capacity == 2
+    assert swap.dropped_mass > 0.0            # the truncated atoms' mass
+    assert abs(swap.gammas.sum() - 1.0) < 1e-6
