@@ -1,0 +1,227 @@
+"""Fault-tolerance benchmarks: convergence under injected faults, and
+crash recovery (ISSUE 6).
+
+1. **Fault sweep** -- the Section 6.1 mean-estimation task under a
+   crash-rate x straggler-delay x edge-drop grid, every cell on the SAME
+   observation stream as the fault-free baseline (equal iteration
+   count, so the gap measures the faults, not the data). Per cell:
+   tail-median squared error, the convergence gap vs fault-free, mean
+   alive fraction, and delivered-vs-dropped comm bytes from the honest
+   meter. Every cell asserts ``n_traces == 1``: the degraded-W swap,
+   the straggler ring-buffer update, and the post-crash
+   renormalization all reach the compiled rollout as data (the
+   jit-cache-miss detector of the acceptance criteria).
+
+2. **Crash recovery** -- the micro scenario CI runs in --smoke: n=8, a
+   scripted node crash + rejoin window (via ``NodeChurn`` ->
+   ``FaultPlan.from_node_churn``), one warm topology refresh landing
+   mid-run UNDER the faults, then the run is killed at a segment
+   boundary and resumed from its checkpoint. Asserts (smoke included):
+   retraces == 0 across the degraded swap + refresh, and
+   checkpoint-resume is BITWISE equal to the uninterrupted faulty run
+   -- which lands the "final loss within 5% of uninterrupted" bar at
+   exactly 0% gap (recorded honestly in the JSON).
+
+Writes experiments/bench/BENCH_faults.json.
+"""
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from .common import emit, result_dir
+from repro.core.mixing import schedule_from_result, schedule_to_arrays
+from repro.core.stl_fw import learn_topology
+from repro.data.drift import NodeChurn
+from repro.data.synthetic import mean_estimation_clusters
+from repro.faults import FaultPlan, run_faulty_mean_estimation
+from repro.online import RefreshConfig, TopologyRefresher
+
+LAM = 0.1
+
+
+def _bench_fault_sweep(results: dict, smoke: bool) -> None:
+    if smoke:
+        n, K, steps, seg, batch = 8, 4, 120, 20, 2
+        crash_rates = (0.0, 0.05)
+        tau_maxes = (0, 2)
+        edge_drops = (0.0, 0.1)
+    else:
+        n, K, steps, seg, batch = 32, 8, 600, 50, 2
+        crash_rates = (0.0, 0.01, 0.05)
+        tau_maxes = (0, 2, 4)
+        edge_drops = (0.0, 0.05, 0.15)
+    lr = 0.05
+    task = mean_estimation_clusters(n_nodes=n, K=K, m=5.0, sigma_tilde2=1.0)
+    res0 = learn_topology(task.Pi, budget=8, lam=LAM)
+    sched0 = schedule_from_result(res0)
+    arrays = schedule_to_arrays(sched0, sched0.n_atoms + 2)
+    rng = np.random.default_rng(1)
+    zs = np.stack([task.sample(batch, rng) for _ in range(steps)]).astype(
+        np.float32
+    )
+    tail = slice(-max(10, steps // 10), None)
+
+    def run(plan: FaultPlan) -> dict:
+        out = run_faulty_mean_estimation(
+            task, plan, arrays, lr=lr, seed=2, zs=zs, segment_len=seg
+        )
+        assert out["n_traces"] == 1, (
+            f"fault scenario retraced the rollout: n_traces={out['n_traces']}"
+        )
+        return out
+
+    base_plan = FaultPlan(n_nodes=n, steps=steps, seed=0)
+    t0 = time.perf_counter()
+    base = run(base_plan)
+    base_err = float(np.median(base["mean_sq_error"][tail]))
+    cells = []
+    for cr in crash_rates:
+        for tau in tau_maxes:
+            for ed in edge_drops:
+                if cr == 0.0 and tau == 0 and ed == 0.0:
+                    continue  # that IS the baseline
+                plan = FaultPlan(
+                    n_nodes=n, steps=steps, seed=3,
+                    crash_rate=cr, mean_outage=6.0,
+                    straggler_rate=0.3 if tau else 0.0, tau_max=tau,
+                    edge_drop_rate=ed,
+                )
+                out = run(plan)
+                err = float(np.median(out["mean_sq_error"][tail]))
+                cells.append({
+                    "crash_rate": cr, "tau_max": tau, "edge_drop_rate": ed,
+                    "tail_median_err": err,
+                    "convergence_gap": err - base_err,
+                    "gap_ratio": err / base_err,
+                    "alive_frac": out["alive_frac"],
+                    "comm": out["comm"],
+                    "n_traces": out["n_traces"],
+                })
+    wall = time.perf_counter() - t0
+    worst = max(cells, key=lambda c: c["gap_ratio"])
+    results["fault_sweep"] = {
+        "n": n, "K": K, "steps": steps, "segment_len": seg, "lr": lr,
+        "lam": LAM, "batch": batch,
+        "crash_rates": list(crash_rates), "tau_maxes": list(tau_maxes),
+        "edge_drop_rates": list(edge_drops),
+        "baseline_tail_median_err": base_err,
+        "baseline_comm": base["comm"],
+        "cells": cells,
+        "wall_s": wall,
+    }
+    emit(
+        f"faults_sweep_n{n}", wall / max(len(cells), 1) * 1e6,
+        f"{len(cells)}cells_base={base_err:.2e}"
+        f"_worst={worst['gap_ratio']:.2f}x@cr{worst['crash_rate']}"
+        f"t{worst['tau_max']}e{worst['edge_drop_rate']}_retraces=0",
+    )
+
+
+def _bench_crash_recovery(results: dict, smoke: bool) -> None:
+    """n=8 micro scenario: one crash + rejoin + one refresh under faults,
+    killed and resumed mid-run."""
+    n, K, steps, seg, batch, lr = 8, 4, 120, 20, 2, 0.05
+    task = mean_estimation_clusters(n_nodes=n, K=K, m=5.0, sigma_tilde2=1.0)
+    res0 = learn_topology(task.Pi, budget=8, lam=LAM)
+    ref = TopologyRefresher(res0, RefreshConfig(budget=4, lam=LAM))
+    arrays = ref.schedule_arrays()
+    rng = np.random.default_rng(4)
+    zs = np.stack([task.sample(batch, rng) for _ in range(steps)]).astype(
+        np.float32
+    )
+
+    # one crash + rejoin window on node 3, plus stragglers and edge drops
+    # riding along; the churn windows double as the plan's alive mask
+    churn = NodeChurn(Pi0=task.Pi, events=((30, 3, 25),), seed=0)
+    plan = FaultPlan.from_node_churn(
+        churn, steps=steps, seed=5,
+        straggler_rate=0.3, tau_max=2, edge_drop_rate=0.05,
+    )
+
+    # one warm refresh lands mid-outage: the refreshed schedule is
+    # degraded by the SAME fault trace from its swap step on
+    def make_hook():
+        done = {"swapped": False}
+
+        def hook(t):
+            if not done["swapped"] and t >= 39:
+                done["swapped"] = True
+                ref.refresh(task.Pi)  # warm re-solve (Pi_hat = exact Pi here)
+                return ref.schedule_arrays()
+            return None
+
+        return hook
+
+    kw = dict(lr=lr, seed=2, zs=zs, segment_len=seg)
+    t0 = time.perf_counter()
+    full = run_faulty_mean_estimation(
+        task, plan, arrays, on_segment=make_hook(), **kw
+    )
+    assert full["n_traces"] == 1, full["n_traces"]
+    assert full["swaps"] == [39], full["swaps"]
+
+    with tempfile.TemporaryDirectory(prefix="faults_recovery_") as ckpt_dir:
+        head = run_faulty_mean_estimation(
+            task, plan, arrays, on_segment=make_hook(),
+            checkpoint_dir=ckpt_dir, stop_after_segments=3, **kw
+        )
+        assert head["stopped_at"] == 60, head["stopped_at"]
+        assert head["swaps"] == [39]  # the refresh landed BEFORE the crash
+        tail_run = run_faulty_mean_estimation(
+            task, plan, arrays, checkpoint_dir=ckpt_dir, resume=True, **kw
+        )
+    assert tail_run["resumed_from"] == 60
+    wall = time.perf_counter() - t0
+
+    glued = np.concatenate([head["mean_sq_error"], tail_run["mean_sq_error"]])
+    bitwise = bool(np.array_equal(glued, full["mean_sq_error"])) and bool(
+        np.array_equal(tail_run["theta"], full["theta"])
+    )
+    assert bitwise, "checkpoint-resume diverged from the uninterrupted run"
+    final_full = float(full["mean_sq_error"][-1])
+    final_resumed = float(glued[-1])
+    rel_gap = abs(final_resumed - final_full) / max(abs(final_full), 1e-12)
+    # acceptance: within 5% of the uninterrupted run -- bitwise equality
+    # lands it at exactly 0
+    assert rel_gap <= 0.05, rel_gap
+
+    results["crash_recovery"] = {
+        "n": n, "K": K, "steps": steps, "segment_len": seg, "lr": lr,
+        "crash_window": [30, 55], "crashed_node": 3,
+        "refresh_at": full["swaps"],
+        "killed_at": head["stopped_at"],
+        "resumed_from": tail_run["resumed_from"],
+        "n_traces": {"full": full["n_traces"], "head": head["n_traces"],
+                     "tail": tail_run["n_traces"]},
+        "final_err_uninterrupted": final_full,
+        "final_err_resumed": final_resumed,
+        "relative_gap": rel_gap,
+        "bitwise_resume": bitwise,
+        "alive_frac": full["alive_frac"],
+        "comm_full": full["comm"],
+        "wall_s": wall,
+    }
+    emit(
+        f"faults_recovery_n{n}", wall * 1e6,
+        f"bitwise={bitwise}_gap={rel_gap:.1e}_retraces=0"
+        f"_refresh@{full['swaps'][0]}_killed@{head['stopped_at']}",
+    )
+
+
+def main(smoke: bool = False) -> None:
+    results: dict = {"smoke": smoke}
+    _bench_fault_sweep(results, smoke)
+    _bench_crash_recovery(results, smoke)
+    os.makedirs(result_dir(), exist_ok=True)
+    path = os.path.join(result_dir(), "BENCH_faults.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    emit("bench_faults_json", 0.0, path)
+
+
+if __name__ == "__main__":
+    main()

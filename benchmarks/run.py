@@ -17,6 +17,7 @@ import traceback
 from . import common
 from . import (
     bench_example1,
+    bench_faults,
     bench_fig1,
     bench_fig2,
     bench_kernels,
@@ -39,6 +40,7 @@ BENCHES = {
     "mixing": bench_mixing.main,
     "online": bench_online.main,
     "stl_fw": bench_stl_fw.main,
+    "faults": bench_faults.main,
 }
 
 

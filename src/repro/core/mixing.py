@@ -74,6 +74,12 @@ __all__ = [
     "schedule_to_arrays",
     "arrays_to_matrix",
     "truncate_schedule",
+    "degrade_schedule",
+    "StaleBuffer",
+    "stale_buffer_init",
+    "stale_push",
+    "stale_view",
+    "mix_schedule_arrays_stale",
     "mix_schedule_arrays",
     "mix_dense_sharded",
     "PermPool",
@@ -384,6 +390,184 @@ def mix_schedule_arrays(
         lambda x: _mix_arrays_flat(x.reshape(x.shape[0], -1), arrays).reshape(x.shape),
         params_stack,
     )
+
+
+# ---------------------------------------------------------------------------
+# Degraded mixing: fault repair on the data-plane schedule
+# ---------------------------------------------------------------------------
+#
+# A crash or a dropped gossip edge invalidates some of the transfers a
+# Birkhoff atom prescribes. Zeroing the broken entries of W would break
+# double stochasticity (the lost mass has to go somewhere, and a naive
+# per-entry self-loop redirect fixes the row sum while corrupting the
+# column sum). The repair below works at the PERMUTATION level instead:
+# every cycle of an atom that touches a broken transfer is collapsed to
+# fixed points (each node in the cycle keeps its own parameters). A
+# permutation with some cycles replaced by fixed points is still an
+# exact permutation, so each repaired atom is exactly doubly stochastic
+# and the convex combination W' = sum_l gammas[l] P'_l is too -- to
+# machine precision, with the coefficients UNCHANGED (the same
+# convex-combination argument as ``PermPool.project``, without even
+# needing the renormalization). A dead node ends up a fixed point of
+# every atom, so its row and column of W' are exactly ``e_i``: it
+# neither receives nor contributes until it rejoins.
+#
+# Because the repair only rewrites the ``perms`` table values (same
+# shapes), a degraded schedule is an ordinary ``ScheduleArrays`` value:
+# hot-swapping it into a compiled rollout is a pure value change --
+# zero retraces, the PR 4/5 idiom (asserted in tests/test_faults.py).
+
+
+def _repair_perm(perm: np.ndarray, broken: np.ndarray) -> np.ndarray:
+    """Collapse every cycle of ``perm`` containing a broken position.
+
+    ``broken[i]`` marks the transfer into position ``i`` (i.e. the edge
+    ``perm[i] -> i``) as undeliverable. Cycle-granular repair keeps the
+    result an exact permutation: partial cycles cannot be patched
+    entry-wise without double-assigning some source.
+    """
+    n = perm.shape[0]
+    out = perm.copy()
+    visited = np.zeros(n, bool)
+    for start in range(n):
+        if visited[start]:
+            continue
+        cycle = []
+        i = start
+        bad = False
+        while not visited[i]:
+            visited[i] = True
+            cycle.append(i)
+            bad = bad or bool(broken[i])
+            i = perm[i]
+        if bad:
+            idx = np.asarray(cycle)
+            out[idx] = idx
+    return out
+
+
+def degrade_schedule(
+    arrays: ScheduleArrays,
+    alive_mask: np.ndarray,
+    dropped_edges=(),
+) -> ScheduleArrays:
+    """Repair a data-plane schedule on the surviving nodes/edges.
+
+    Args:
+      arrays: the fault-free schedule (``W = sum_l gammas[l] P_l``).
+      alive_mask: (n,) bool; ``False`` marks a crashed node.
+      dropped_edges: iterable of ``(src, dst)`` pairs (or an (m, 2)
+        array) -- node ``dst`` fails to receive node ``src``'s
+        parameters this step. Self-loops never appear here (they move
+        no bytes and cannot drop).
+
+    Returns a ``ScheduleArrays`` with the SAME gammas and shape whose
+    atoms are repaired permutations (see :func:`_repair_perm`): exactly
+    doubly stochastic, dead nodes isolated to ``e_i``, lost atom mass
+    redirected to self-loops. Swapping it into a compiled rollout is a
+    pure value change (zero retraces). Host-side numpy -- faults are
+    exogenous control-plane events, like the topology refreshes.
+    """
+    perms = np.asarray(arrays.perms)
+    l_max, n = perms.shape
+    alive = np.asarray(alive_mask, dtype=bool).reshape(n)
+    drop = np.zeros((n, n), dtype=bool)
+    edges = np.asarray(list(dropped_edges) if not isinstance(dropped_edges, np.ndarray) else dropped_edges)
+    if edges.size:
+        edges = edges.reshape(-1, 2).astype(np.int64)
+        if edges.min() < 0 or edges.max() >= n:
+            raise ValueError(f"dropped edge index out of range for n={n}")
+        drop[edges[:, 0], edges[:, 1]] = True
+    rows = np.arange(n)
+    out = perms.copy()
+    for l in range(l_max):
+        p = perms[l]
+        nonself = p != rows
+        broken = nonself & (~alive | ~alive[p] | drop[p, rows])
+        if broken.any():
+            out[l] = _repair_perm(p, broken)
+    return ScheduleArrays(
+        gammas=jnp.asarray(np.asarray(arrays.gammas)),
+        perms=jnp.asarray(out, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stale-theta mixing: bounded-delay stragglers via a ring buffer
+# ---------------------------------------------------------------------------
+#
+# The bounded-delay straggler model: node j's parameters reach the
+# mixing step with staleness tau_j^t <= tau_max, i.e.
+# ``theta_i <- sum_j W_ij theta_j^{t + 1/2 - tau_j^t}`` (source-indexed
+# delay: a straggler is late everywhere at once). The ring buffer keeps
+# the last ``depth = tau_max + 1`` half-step states in the scan carry
+# -- fixed shape (depth, n, P) -- and the per-step delay vector rides
+# as scan data, so a delay change (a straggler appearing or catching
+# up) is a pure value change into the compiled rollout. With all
+# delays 0 the buffer read returns the value just pushed, and
+# ``mix_schedule_arrays_stale`` reduces BITWISE to
+# :func:`_mix_arrays_flat` on the current state (asserted in
+# tests/test_faults.py) -- the fault-free trajectory is the zero-delay
+# special case, not a separate code path.
+
+
+class StaleBuffer(NamedTuple):
+    """Ring buffer of the last ``depth`` (n, P) half-step states.
+
+    ``head`` indexes the most recent push; slot ``(head - d) % depth``
+    holds the state from ``d`` pushes ago. A NamedTuple of two arrays,
+    so it rides a ``lax.scan`` carry like ``ScheduleArrays`` does.
+    """
+
+    buf: jax.Array  # (depth, n, P)
+    head: jax.Array  # () int32
+
+    @property
+    def depth(self) -> int:
+        return self.buf.shape[0]
+
+
+def stale_buffer_init(flat: jax.Array, depth: int) -> StaleBuffer:
+    """Fill all ``depth`` slots with ``flat`` (so a delay larger than the
+    number of pushes so far reads the initial state, never garbage)."""
+    if depth < 1:
+        raise ValueError(f"depth must be >= 1 (tau_max + 1), got {depth}")
+    if flat.ndim != 2:
+        raise ValueError(f"flat must be (n, P), got shape {flat.shape}")
+    buf = jnp.tile(flat[None], (depth, 1, 1))
+    return StaleBuffer(buf=buf, head=jnp.zeros((), jnp.int32))
+
+
+def stale_push(buffer: StaleBuffer, flat: jax.Array) -> StaleBuffer:
+    """Advance the ring: write ``flat`` into the next slot."""
+    depth = buffer.buf.shape[0]
+    head = jax.lax.rem(buffer.head + 1, jnp.asarray(depth, buffer.head.dtype))
+    buf = jax.lax.dynamic_update_index_in_dim(buffer.buf, flat, head, axis=0)
+    return StaleBuffer(buf=buf, head=head)
+
+
+def stale_view(buffer: StaleBuffer, delays: jax.Array) -> jax.Array:
+    """Per-source delayed read: row ``j`` of the result is node ``j``'s
+    state from ``delays[j]`` pushes ago (``delays`` (n,) int, values in
+    [0, depth); larger values alias modulo the ring depth -- size the
+    buffer with ``depth = tau_max + 1``)."""
+    depth = buffer.buf.shape[0]
+    n = buffer.buf.shape[1]
+    slot = jnp.mod(buffer.head - delays, depth)
+    return buffer.buf[slot, jnp.arange(n)]
+
+
+def mix_schedule_arrays_stale(
+    buffer: StaleBuffer, arrays: ScheduleArrays, delays: jax.Array
+) -> jax.Array:
+    """Bounded-delay data-plane mixing on the flat (n, P) convention.
+
+    ``out = sum_l gammas[l] theta_stale[perms[l]]`` where
+    ``theta_stale`` is the delayed view of the ring buffer. Accumulation
+    order matches :func:`_mix_arrays_flat` op-for-op, so zero delays
+    reproduce the fault-free mixing bitwise.
+    """
+    return _mix_arrays_flat(stale_view(buffer, delays), arrays)
 
 
 def _serialized_leaf_map(params: PyTree, mix_leaf, serialize: bool) -> PyTree:

@@ -221,6 +221,19 @@ class NodeChurn:
         off = [ev.node for ev, _ in self._events if ev.t <= t < ev.offline_until]
         return np.asarray(sorted(set(off)), dtype=np.int64)
 
+    def offline_windows(self) -> tuple:
+        """All dark windows as ``(node, t_start, t_end)`` tuples,
+        labels masked for ``t_start <= t < t_end`` (empty windows from
+        ``offline_steps == 0`` events are omitted). This is the bridge
+        into ``repro.faults.FaultPlan.from_node_churn``: a churn
+        scenario's outages double as crash windows for the mixing
+        layer."""
+        return tuple(
+            (ev.node, ev.t, ev.offline_until)
+            for ev, _ in self._events
+            if ev.offline_until > ev.t
+        )
+
     def sample_labels(self, t: int, batch: int, rng: np.random.Generator) -> np.ndarray:
         labels = _sample_rows(self.Pi(t), batch, rng)
         off = self.offline_nodes(t)

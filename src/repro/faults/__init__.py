@@ -1,0 +1,33 @@
+"""Fault injection + graceful degradation for decentralized training.
+
+The deployment story ("millions of users") breaks three assumptions the
+fault-free stack makes: every node is up every step, every gossip edge
+delivers, and the overlapped refresh solve always returns. This package
+makes each failure a first-class, seeded, reproducible scenario:
+
+* :class:`FaultPlan` / :class:`FaultInjector` -- deterministic fault
+  traces (crash/rejoin windows, per-edge message drops, bounded-delay
+  stragglers, overlap-worker failures) from a single seed, identical
+  across processes and across checkpoint resumes.
+* :class:`FlakyRefresher` -- wraps a ``TopologyRefresher`` so its
+  solves raise or hang per the plan (the controller-hardening drill).
+* :func:`run_faulty_mean_estimation` -- the mean-estimation simulator
+  under faults: degraded doubly-stochastic mixing
+  (:func:`repro.core.mixing.degrade_schedule`), stale-theta mixing via
+  the staleness ring buffer, and crash-recovery via
+  ``repro.train.checkpoints`` -- all zero-retrace.
+
+Layering: ``faults`` imports core + data + train (for checkpoints);
+nothing imports ``faults`` back -- the production modules only grow
+fault-*tolerant* paths, never fault-*aware* ones.
+"""
+
+from .plan import FaultInjector, FaultPlan, FlakyRefresher
+from .runner import run_faulty_mean_estimation
+
+__all__ = [
+    "FaultPlan",
+    "FaultInjector",
+    "FlakyRefresher",
+    "run_faulty_mean_estimation",
+]

@@ -1,0 +1,316 @@
+"""Seeded fault plans: reproducible crash / drop / straggler / solver traces.
+
+Reproducibility contract: every draw comes from
+``np.random.default_rng([seed, stream, ...])`` seed sequences, so
+
+* two processes constructing ``FaultPlan(seed=s, ...)`` with the same
+  config produce byte-identical traces (asserted by a subprocess test),
+  and
+* a checkpoint resume reconstructs the exact trace WITHOUT replaying
+  the run: the Markov alive/delay processes are precomputed arrays, and
+  per-step edge drops are random-access (stream keyed by ``t``), so
+  step 500's drops can be drawn without drawing steps 0..499.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+
+import numpy as np
+
+from repro.core.mixing import ScheduleArrays, degrade_schedule
+
+__all__ = ["FaultPlan", "FaultInjector", "FlakyRefresher"]
+
+# rng stream tags (part of the on-disk/reproducibility contract: changing
+# one silently changes every seeded trace)
+_STREAM_ALIVE = 1
+_STREAM_DELAYS = 2
+_STREAM_EDGES = 3
+_STREAM_SOLVES = 4
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """A reproducible fault trace for an ``steps``-step, ``n_nodes`` run.
+
+    Args:
+      n_nodes / steps: trace dimensions.
+      seed: the single seed every stream derives from.
+      crash_rate: per-node per-step probability that an alive node
+        crashes (start of an offline window).
+      mean_outage: expected outage length in steps; a crashed node
+        rejoins each step with probability ``1 / mean_outage``
+        (geometric outages -- the memoryless twin of
+        ``data.drift.NodeChurn``'s fixed windows).
+      straggler_rate: per-node per-step probability that a node's
+        parameters arrive stale this step.
+      tau_max: bounded-delay cap; a straggling node's delay is uniform
+        in ``[1, tau_max]`` (0 = no staleness model).
+      edge_drop_rate: per-directed-edge per-step message-drop
+        probability.
+      solve_failure_rate / solve_hang_rate: per-refresh probabilities
+        that the k-th topology solve raises / hangs (consumed by
+        :class:`FlakyRefresher`).
+
+    Derived (precomputed, deterministic):
+      alive: (steps, n) bool -- the crash/rejoin Markov trace.
+      delays: (steps, n) int32 in [0, tau_max] -- the straggler trace
+        (crashed nodes carry delay 0; their transfers are cut by the
+        alive mask, not by staleness).
+    """
+
+    n_nodes: int
+    steps: int
+    seed: int = 0
+    crash_rate: float = 0.0
+    mean_outage: float = 10.0
+    straggler_rate: float = 0.0
+    tau_max: int = 0
+    edge_drop_rate: float = 0.0
+    solve_failure_rate: float = 0.0
+    solve_hang_rate: float = 0.0
+    alive: np.ndarray = dataclasses.field(init=False, repr=False)
+    delays: np.ndarray = dataclasses.field(init=False, repr=False)
+
+    def __post_init__(self) -> None:
+        if self.n_nodes < 1 or self.steps < 0:
+            raise ValueError(f"bad n_nodes={self.n_nodes} / steps={self.steps}")
+        for name in ("crash_rate", "straggler_rate", "edge_drop_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+        if self.mean_outage < 1.0:
+            raise ValueError(f"mean_outage must be >= 1, got {self.mean_outage}")
+        if self.tau_max < 0:
+            raise ValueError(f"tau_max must be >= 0, got {self.tau_max}")
+        if self.solve_failure_rate + self.solve_hang_rate > 1.0:
+            raise ValueError("solve_failure_rate + solve_hang_rate must be <= 1")
+        self.alive = self._gen_alive()
+        self.delays = self._gen_delays()
+
+    # -- trace generation ---------------------------------------------------
+
+    def _gen_alive(self) -> np.ndarray:
+        n, T = self.n_nodes, self.steps
+        alive = np.ones((T, n), dtype=bool)
+        if self.crash_rate == 0.0 or T == 0:
+            return alive
+        rng = np.random.default_rng([self.seed, _STREAM_ALIVE])
+        rejoin_p = 1.0 / self.mean_outage
+        state = np.ones(n, dtype=bool)
+        for t in range(T):
+            u = rng.random(n)
+            crash = state & (u < self.crash_rate)
+            rejoin = ~state & (u < rejoin_p)
+            state = (state & ~crash) | rejoin
+            if not state.any():
+                # never let the whole fleet die: W would degrade to I and
+                # the run silently stops mixing forever; resurrect one
+                # node deterministically (lowest index)
+                state[0] = True
+            alive[t] = state
+        return alive
+
+    def _gen_delays(self) -> np.ndarray:
+        n, T = self.n_nodes, self.steps
+        delays = np.zeros((T, n), dtype=np.int32)
+        if self.straggler_rate == 0.0 or self.tau_max == 0 or T == 0:
+            return delays
+        rng = np.random.default_rng([self.seed, _STREAM_DELAYS])
+        lagging = rng.random((T, n)) < self.straggler_rate
+        draw = rng.integers(1, self.tau_max + 1, size=(T, n), dtype=np.int32)
+        delays[lagging] = draw[lagging]
+        delays[~self.alive] = 0
+        return delays
+
+    def dropped_edges(self, t: int) -> np.ndarray:
+        """(m, 2) int64 array of (src, dst) drops at step ``t``.
+
+        Random-access: stream keyed by ``[seed, tag, t]``, so a resumed
+        run re-draws exactly this step's drops without replaying the
+        prefix.
+        """
+        if not 0 <= t < self.steps:
+            raise ValueError(f"t={t} outside [0, {self.steps})")
+        if self.edge_drop_rate == 0.0:
+            return np.zeros((0, 2), dtype=np.int64)
+        rng = np.random.default_rng([self.seed, _STREAM_EDGES, t])
+        mask = rng.random((self.n_nodes, self.n_nodes)) < self.edge_drop_rate
+        np.fill_diagonal(mask, False)
+        return np.argwhere(mask).astype(np.int64)
+
+    def solve_fault(self, k: int) -> str:
+        """Fate of the k-th topology refresh solve: 'ok'|'raise'|'hang'."""
+        if k < 0:
+            raise ValueError(f"k must be >= 0, got {k}")
+        if self.solve_failure_rate == 0.0 and self.solve_hang_rate == 0.0:
+            return "ok"
+        u = np.random.default_rng([self.seed, _STREAM_SOLVES, k]).random()
+        if u < self.solve_failure_rate:
+            return "raise"
+        if u < self.solve_failure_rate + self.solve_hang_rate:
+            return "hang"
+        return "ok"
+
+    # -- derived views ------------------------------------------------------
+
+    def alive_frac(self, t0: int = 0, k: int | None = None) -> float:
+        """Mean alive fraction over steps [t0, t0 + k)."""
+        k = self.steps - t0 if k is None else k
+        window = self.alive[t0 : t0 + k]
+        return float(window.mean()) if window.size else 1.0
+
+    def delivered_frac(self, t: int) -> float:
+        """Fraction of the fault-free per-step transfer volume delivered.
+
+        The all-gather model moves n(n-1) directed transfers per step; a
+        transfer survives iff both endpoints are alive and the edge was
+        not dropped. This is the honest ``delivered_frac`` for
+        :meth:`repro.train.metrics.CommMeter.tick` under faults.
+        """
+        n = self.n_nodes
+        if n < 2:
+            return 1.0
+        a = self.alive[t]
+        ok = np.outer(a, a)
+        np.fill_diagonal(ok, False)
+        edges = self.dropped_edges(t)
+        if edges.size:
+            ok[edges[:, 0], edges[:, 1]] = False
+        return float(ok.sum()) / (n * (n - 1))
+
+    def fingerprint(self) -> str:
+        """sha256 over the full derived trace (the cross-process
+        determinism witness: two processes with the same config must
+        agree on every byte)."""
+        h = hashlib.sha256()
+        h.update(repr((self.n_nodes, self.steps, self.seed, self.crash_rate,
+                       self.mean_outage, self.straggler_rate, self.tau_max,
+                       self.edge_drop_rate, self.solve_failure_rate,
+                       self.solve_hang_rate)).encode())
+        h.update(self.alive.tobytes())
+        h.update(self.delays.tobytes())
+        for t in range(self.steps):
+            h.update(self.dropped_edges(t).tobytes())
+        for k in range(self.steps):
+            h.update(self.solve_fault(k).encode())
+        return h.hexdigest()
+
+    @classmethod
+    def from_node_churn(cls, churn, steps: int, **kwargs) -> "FaultPlan":
+        """Generalize a :class:`repro.data.drift.NodeChurn` scenario: the
+        plan's alive trace mirrors the churn's offline windows exactly
+        (on top of any additional stochastic faults in ``kwargs``)."""
+        plan = cls(n_nodes=churn.n_nodes, steps=steps, **kwargs)
+        for node, t_start, t_end in churn.offline_windows():
+            plan.alive[max(t_start, 0) : min(t_end, steps), node] = False
+        for t in range(steps):
+            if not plan.alive[t].any():
+                plan.alive[t, 0] = True
+        plan.delays[~plan.alive] = 0
+        return plan
+
+
+class FaultInjector:
+    """Binds a :class:`FaultPlan` to a live data-plane schedule.
+
+    Produces the per-step degraded ``ScheduleArrays`` and delay vectors
+    a compiled rollout consumes as scan data. ``rebind`` swaps the
+    fault-free base schedule after an online topology refresh -- the
+    degradation then applies to the NEW topology from the next step on.
+    """
+
+    def __init__(self, plan: FaultPlan, base: ScheduleArrays):
+        if base.n_nodes != plan.n_nodes:
+            raise ValueError(
+                f"schedule is for {base.n_nodes} nodes, plan for {plan.n_nodes}"
+            )
+        self.plan = plan
+        self.base = base
+
+    def rebind(self, base: ScheduleArrays) -> None:
+        if base.n_nodes != self.plan.n_nodes or base.l_max != self.base.l_max:
+            raise ValueError(
+                "rebind must preserve the schedule shape "
+                f"({self.base.l_max}, {self.base.n_nodes}); got "
+                f"({base.l_max}, {base.n_nodes})"
+            )
+        self.base = base
+
+    def arrays_at(self, t: int) -> ScheduleArrays:
+        """Degraded schedule for step ``t`` (host-side value change)."""
+        return degrade_schedule(
+            self.base, self.plan.alive[t], self.plan.dropped_edges(t)
+        )
+
+    def delays_at(self, t: int) -> np.ndarray:
+        return self.plan.delays[t]
+
+    def stream(self, t0: int, k: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Host-side per-step fault data for steps [t0, t0 + k), stacked
+        for a ``lax.scan``: ``(gammas (k, l_max), perms (k, l_max, n),
+        delays (k, n))``. Fixed shapes whatever the faults -- the whole
+        zero-retrace argument."""
+        gammas = np.empty((k, self.base.l_max), np.float32)
+        perms = np.empty((k, self.base.l_max, self.base.n_nodes), np.int32)
+        for j in range(k):
+            arrays_t = self.arrays_at(t0 + j)
+            gammas[j] = np.asarray(arrays_t.gammas)
+            perms[j] = np.asarray(arrays_t.perms)
+        delays = np.asarray(self.plan.delays[t0 : t0 + k], np.int32)
+        return gammas, perms, delays
+
+
+class FlakyRefresher:
+    """Wrap a ``TopologyRefresher`` so its solves fail per the plan.
+
+    The k-th ``refresh`` call consults ``plan.solve_fault(k)``:
+    ``"raise"`` raises RuntimeError, ``"hang"`` blocks on ``hang_event``
+    (or sleeps ``hang_s``) before proceeding, ``"ok"`` delegates.
+    Everything else (``schedule``, ``W``, ``schedule_arrays``,
+    ``last_refresh_s``, ...) proxies to the wrapped refresher, so the
+    controller cannot tell the difference -- which is the point: the
+    hardening must work against the real interface.
+
+    Pass a ``threading.Event`` as ``hang_event`` in tests and SET it in
+    the test's finally block: executor worker threads are non-daemon,
+    so an un-released hang would block interpreter exit.
+    """
+
+    def __init__(
+        self,
+        inner,
+        plan: FaultPlan,
+        hang_event: "threading.Event | None" = None,
+        hang_s: float = 60.0,
+    ):
+        self._inner = inner
+        self._plan = plan
+        self._hang_event = hang_event
+        self._hang_s = float(hang_s)
+        self.n_solves = 0
+        self.n_injected_failures = 0
+        self.n_injected_hangs = 0
+
+    def refresh(self, Pi_hat):
+        k = self.n_solves
+        self.n_solves += 1
+        fate = self._plan.solve_fault(k)
+        if fate == "raise":
+            self.n_injected_failures += 1
+            raise RuntimeError(f"injected solve failure (refresh #{k})")
+        if fate == "hang":
+            self.n_injected_hangs += 1
+            if self._hang_event is not None:
+                self._hang_event.wait()
+            else:
+                import time
+
+                time.sleep(self._hang_s)
+        return self._inner.refresh(Pi_hat)
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)

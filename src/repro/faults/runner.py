@@ -1,0 +1,232 @@
+"""Mean-estimation D-SGD under injected faults, with crash recovery.
+
+The faulty twin of ``repro.train.trainer.run_mean_estimation``'s online
+driver, same step math op-for-op:
+
+    grads = 2 (theta - z_bar)                    # quadratic task
+    half  = theta - lr * grads                   # local half-step
+    push half into the staleness ring buffer
+    theta = sum_l gammas_t[l] * stale[perms_t[l]]  # degraded + delayed mix
+
+The per-step fault data -- degraded ``(gammas, perms)`` tables and the
+delay vector -- ride the ``lax.scan`` as xs with fixed shapes, so every
+fault event (a crash's degraded-W swap, a straggler's buffer delay, the
+post-rejoin renormalization back to the full schedule) is a pure value
+change into ONE compiled rollout (``n_traces == 1``, asserted in tests
+and the CI smoke bench). A zero-fault plan reproduces the fault-free
+driver's trajectory bitwise (delays 0 read back the value just pushed;
+``degrade_schedule`` with everyone alive is the identity).
+
+Crash recovery: at segment boundaries the carry (theta, ring buffer,
+and the CURRENT base schedule -- so a pre-crash topology refresh
+survives) checkpoints via ``repro.train.checkpoints``; ``resume=True``
+restores the latest checkpoint and continues bitwise, because every
+fault draw is random-access from the plan's seed (no replay needed).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mixing import (
+    ScheduleArrays,
+    mix_schedule_arrays_stale,
+    stale_buffer_init,
+    stale_push,
+)
+from repro.train.checkpoints import latest_step, restore_checkpoint, save_checkpoint
+from repro.train.metrics import CommMeter, mix_bytes_per_step
+
+from .plan import FaultInjector, FaultPlan
+
+__all__ = ["run_faulty_mean_estimation"]
+
+
+def run_faulty_mean_estimation(
+    task,
+    plan: FaultPlan,
+    schedule: ScheduleArrays,
+    *,
+    lr: float = 0.1,
+    batch: int = 1,
+    seed: int = 0,
+    segment_len: int | None = None,
+    on_segment: Callable | None = None,
+    zs: np.ndarray | None = None,
+    checkpoint_dir: str | None = None,
+    checkpoint_every: int = 1,
+    resume: bool = False,
+    stop_after_segments: int | None = None,
+) -> dict:
+    """D-SGD mean estimation under a seeded fault plan.
+
+    Args:
+      task: a ``MeanEstimationTask`` (supplies ``theta_star`` and the
+        observation sampler; ``zs`` overrides the presampled stream).
+      plan: the fault trace; ``plan.steps`` is the run length.
+      schedule: fault-free base topology as fixed-shape
+        ``ScheduleArrays`` (refreshes swap it via ``on_segment``).
+      segment_len: boundary spacing for the hook/checkpoints (defaults
+        to one full-run segment).
+      on_segment: ``hook(t) -> ScheduleArrays | None`` called after
+        every segment except the last; a non-None return rebases the
+        injector on the new topology (same shape). Same contract as the
+        fault-free drivers, so an ``OnlineTopologyController`` plugs in
+        unchanged.
+      checkpoint_dir / checkpoint_every: save the carry every
+        ``checkpoint_every``-th segment boundary (plus at an early
+        stop). ``resume=True`` restores the newest checkpoint and
+        continues bitwise; returned traces then cover only the resumed
+        tail (``resumed_from`` records the restart step).
+      stop_after_segments: execute at most this many segments in this
+        process then return (the scripted "crash" of recovery drills);
+        ``stopped_at`` records where.
+
+    Returns a dict with the fault-free driver's keys
+    (``mean/max/min_sq_error``, ``theta``, ``n_traces``, ``swaps``,
+    ``comm``) plus ``resumed_from``, ``stopped_at``, and
+    ``alive_frac`` (the plan's mean alive fraction over the run).
+    """
+    steps = plan.steps
+    n = task.n_nodes
+    if plan.n_nodes != n:
+        raise ValueError(f"plan is for {plan.n_nodes} nodes, task for {n}")
+    if checkpoint_every < 1:
+        raise ValueError(f"checkpoint_every must be >= 1, got {checkpoint_every}")
+    seg = int(segment_len) if segment_len is not None else max(steps, 1)
+    if seg < 1:
+        raise ValueError(f"segment_len must be >= 1, got {segment_len}")
+
+    rng = np.random.default_rng(seed)
+    theta = jnp.zeros((n, 1))
+    theta_star = jnp.asarray(task.theta_star, jnp.float32)
+    if zs is None:
+        # identical call sequence to run_mean_estimation: a zero-fault
+        # plan at the same seed traverses the same observations
+        zs_host = [task.sample(batch, rng) for _ in range(steps)]
+        zs = np.stack(zs_host) if zs_host else np.zeros((0, n, batch))
+    zs = jnp.asarray(zs, jnp.float32)
+    if zs.ndim != 3 or zs.shape[0] != steps or zs.shape[1] != n:
+        raise ValueError(f"zs must be ({steps}, {n}, batch), got {zs.shape}")
+
+    depth = plan.tau_max + 1
+    buffer = stale_buffer_init(theta, depth)
+    injector = FaultInjector(plan, schedule)
+    lr = float(lr)
+
+    n_traces = 0
+
+    def roll_impl(carry, xs):
+        nonlocal n_traces
+        n_traces += 1
+
+        def step(c, x):
+            th, buf = c
+            z, g_t, p_t, d_t = x
+            grads = 2.0 * (th - z.mean(axis=1, keepdims=True))
+            half = th - lr * grads
+            buf = stale_push(buf, half)
+            th = mix_schedule_arrays_stale(
+                buf, ScheduleArrays(gammas=g_t, perms=p_t), d_t
+            )
+            err = jnp.square(th[:, 0] - theta_star)
+            return (th, buf), (jnp.mean(err), jnp.max(err), jnp.min(err))
+
+        return jax.lax.scan(step, carry, xs)
+
+    roll = jax.jit(roll_impl)
+
+    t0 = 0
+    resumed_from = None
+    if checkpoint_dir is not None and resume:
+        last = latest_step(checkpoint_dir)
+        if last is not None:
+            like = {
+                "theta": theta,
+                "buf": buffer.buf,
+                "head": buffer.head,
+                "gammas": injector.base.gammas,
+                "perms": injector.base.perms,
+            }
+            tree, _meta = restore_checkpoint(checkpoint_dir, last, like)
+            theta = jnp.asarray(tree["theta"])
+            buffer = type(buffer)(
+                buf=jnp.asarray(tree["buf"]), head=jnp.asarray(tree["head"])
+            )
+            injector.rebind(ScheduleArrays(
+                gammas=jnp.asarray(tree["gammas"]),
+                perms=jnp.asarray(tree["perms"]),
+            ))
+            t0 = int(last)
+            resumed_from = t0
+
+    def save(t: int) -> None:
+        save_checkpoint(
+            checkpoint_dir,
+            t,
+            {
+                "theta": theta,
+                "buf": buffer.buf,
+                "head": buffer.head,
+                "gammas": injector.base.gammas,
+                "perms": injector.base.perms,
+            },
+            metadata={"t": int(t), "seed": int(seed)},
+        )
+
+    meter = CommMeter(per_step_bytes=mix_bytes_per_step(
+        "allgather", n_nodes=n, p_total=1,
+    ))
+    mse_l, mx_l, mn_l = [], [], []
+    swaps: list[int] = []
+    stopped_at = None
+    seg_idx = 0
+    carry = (theta, buffer)
+    while t0 < steps:
+        k = min(seg, steps - t0)
+        gammas_k, perms_k, delays_k = injector.stream(t0, k)
+        carry, (e_mean, e_max, e_min) = roll(
+            carry,
+            (zs[t0 : t0 + k], jnp.asarray(gammas_k), jnp.asarray(perms_k),
+             jnp.asarray(delays_k)),
+        )
+        mse_l.append(np.asarray(e_mean))
+        mx_l.append(np.asarray(e_max))
+        mn_l.append(np.asarray(e_min))
+        frac = float(np.mean([plan.delivered_frac(t) for t in range(t0, t0 + k)]))
+        meter.tick(k, delivered_frac=frac)
+        t0 += k
+        seg_idx += 1
+        theta, buffer = carry
+        if on_segment is not None and t0 < steps:
+            update = on_segment(t0 - 1)
+            if update is not None:
+                injector.rebind(update)
+                swaps.append(t0 - 1)
+        if checkpoint_dir is not None and (
+            seg_idx % checkpoint_every == 0 or t0 >= steps
+        ):
+            save(t0)
+        if stop_after_segments is not None and seg_idx >= stop_after_segments and t0 < steps:
+            if checkpoint_dir is not None and seg_idx % checkpoint_every != 0:
+                save(t0)  # the crash drill must leave a resumable state
+            stopped_at = t0
+            break
+
+    empty = np.zeros((0,))
+    return {
+        "mean_sq_error": np.concatenate(mse_l) if mse_l else empty,
+        "max_sq_error": np.concatenate(mx_l) if mx_l else empty,
+        "min_sq_error": np.concatenate(mn_l) if mn_l else empty,
+        "theta": np.asarray(theta),
+        "n_traces": n_traces,
+        "swaps": swaps,
+        "comm": meter.summary(),
+        "resumed_from": resumed_from,
+        "stopped_at": stopped_at,
+        "alive_frac": plan.alive_frac(),
+    }

@@ -48,7 +48,35 @@ from repro.core.stl_fw import LMOSolver, STLFWResult, learn_topology
 
 from .streaming import DriftDetector, StreamingPiEstimator
 
-__all__ = ["RefreshConfig", "TopologyRefresher", "OnlineTopologyController"]
+__all__ = [
+    "RefreshConfig",
+    "RefreshError",
+    "RefreshTimeoutError",
+    "TopologyRefresher",
+    "OnlineTopologyController",
+]
+
+
+class RefreshError(RuntimeError):
+    """A refresh solve failed (after any configured retries).
+
+    ``meta`` carries the refresh metadata at failure time: ``t_submit``,
+    ``pending_segments``, ``overlap_wall_s``, ``attempts``, and the
+    original exception's ``repr`` under ``error`` -- so a trainer that
+    catches this knows exactly which refresh died and how long it ran.
+    """
+
+    def __init__(self, message: str, meta: dict | None = None):
+        super().__init__(message)
+        self.meta = dict(meta or {})
+
+
+class RefreshTimeoutError(RefreshError):
+    """``flush(timeout=)`` expired with the solve still running.
+
+    The solve is NOT cancelled -- it stays pending, and a later
+    ``on_segment``/``flush`` can still collect it. ``meta`` records how
+    long the solve has been in flight."""
 
 
 @dataclasses.dataclass
@@ -238,6 +266,28 @@ class OnlineTopologyController:
         :meth:`flush` waits). Detector updates are suspended while a
         solve is in flight (the post-collect ``rebase`` re-anchors the
         baseline), and per-refresh timing lands in ``refresh_log``.
+      solve_retries: re-run a raising solve up to this many extra times
+        (exponential backoff starting at ``retry_backoff_s``) before
+        declaring the refresh failed. Retries happen inside the worker
+        in overlap mode, so the rollout never sees them.
+      retry_backoff_s: initial backoff; doubles per retry.
+      solve_timeout_s: in overlap mode, a solve still running this many
+        seconds after submit is ABANDONED at the next ``on_segment``:
+        the controller falls back to the last-good schedule, counts a
+        ``failed_refreshes``, and re-arms the detector. The wedged
+        worker thread is detached (``shutdown(wait=False)``) and a
+        fresh executor is created lazily -- the thread itself cannot be
+        killed, so a truly hung native solve still holds its memory
+        until process exit (and, being non-daemon, interpreter exit
+        joins it; scripted hang drills must release their hang event).
+
+    A failed or abandoned refresh NEVER raises out of ``on_segment``:
+    the rollout keeps mixing with the last-good schedule, the failure
+    is recorded (``failed_refreshes``, a ``refresh_log`` entry with an
+    ``error`` field, an ``events`` entry), and the detector is
+    re-armed so a later segment can trigger again. Only :meth:`flush`
+    -- the explicit wait -- re-raises, as :class:`RefreshError` /
+    :class:`RefreshTimeoutError` with the metadata attached.
     """
 
     def __init__(
@@ -253,6 +303,9 @@ class OnlineTopologyController:
         pool: PermPool | None = None,
         pool_miss_tol: float = 0.05,
         overlap: bool = False,
+        solve_retries: int = 0,
+        retry_backoff_s: float = 0.05,
+        solve_timeout_s: float | None = None,
     ):
         self.refresher = refresher
         n = refresher.W.shape[0]
@@ -276,12 +329,21 @@ class OnlineTopologyController:
         self.pool_miss_tol = float(pool_miss_tol)
         self.pool_misses = 0
         self.overlap = bool(overlap)
+        if solve_retries < 0:
+            raise ValueError(f"solve_retries must be >= 0, got {solve_retries}")
+        self.solve_retries = int(solve_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.solve_timeout_s = (
+            None if solve_timeout_s is None else float(solve_timeout_s)
+        )
+        self.failed_refreshes = 0
         self.events: list[dict] = []
         self.refresh_log: list[dict] = []
         self._W = refresher.W
         self._executor: concurrent.futures.ThreadPoolExecutor | None = None
         self._pending: tuple[concurrent.futures.Future, dict] | None = None
         self._manual_request = False
+        self._last_attempts = 0
 
     def observe(self, labels: np.ndarray) -> None:
         """Stream one step's (n, batch) minibatch labels in."""
@@ -312,6 +374,13 @@ class OnlineTopologyController:
         if self._pending is not None:
             fut, meta = self._pending
             if not fut.done():
+                wall = time.perf_counter() - meta["wall0"]
+                if (
+                    self.solve_timeout_s is not None
+                    and wall > self.solve_timeout_s
+                ):
+                    self._abandon(t, wall)
+                    return None
                 meta["pending_segments"] += 1
                 self.events.append({"t": int(t), "pending": True})
                 return None
@@ -336,29 +405,72 @@ class OnlineTopologyController:
             event["submitted"] = True
             self.events.append(event)
             return None
-        self._solve(snapshot)
+        wall0 = time.perf_counter()
+        try:
+            self._solve(snapshot)
+        except Exception as exc:  # fall back to the last-good schedule
+            self.events.append(event)
+            self._record_failure(
+                t,
+                {"t_submit": int(t), "pending_segments": 0, "wall0": wall0},
+                exc,
+            )
+            return None
         self.events.append(event)
         swap = self._finish_refresh(t)
         self.refresh_log.append({
             "t_submit": int(t), "t_collect": int(t),
             "solve_s": self.refresher.last_refresh_s,
             "pending_segments": 0, "overlap_wall_s": 0.0, "blocked_s": 0.0,
+            "attempts": self._last_attempts,
             "restaged": isinstance(swap, PoolSwap) and swap.restaged,
         })
         return swap
 
-    def flush(self, t: int | None = None):
+    def flush(self, t: int | None = None, timeout: float | None = None):
         """Block on an in-flight solve and return its swap (or None).
 
         The one place the controller is allowed to wait: call it after
         the rollout's final segment so a late solve still lands (the
         blocked time is recorded honestly in ``refresh_log``).
+
+        Unlike ``on_segment`` -- which never raises -- ``flush`` is the
+        honest surface: a worker exception (after in-worker retries)
+        re-raises here as :class:`RefreshError` with the refresh
+        metadata on ``.meta`` (the failure is also logged and the
+        pending slot cleared, so training COULD continue on the
+        last-good schedule after catching it). With ``timeout=``, a
+        solve still running when it expires raises
+        :class:`RefreshTimeoutError`; the solve is left pending, so a
+        later boundary or a second ``flush`` can still collect it.
         """
         if self._pending is None:
             return None
-        fut, _ = self._pending
+        fut, meta = self._pending
         t0 = time.perf_counter()
-        fut.result()
+        try:
+            fut.result(timeout=timeout)
+        except concurrent.futures.TimeoutError:
+            wall = time.perf_counter() - meta["wall0"]
+            raise RefreshTimeoutError(
+                f"refresh submitted at t={meta['t_submit']} still running "
+                f"after {wall:.3f}s (flush timeout={timeout})",
+                meta={
+                    "t_submit": meta["t_submit"],
+                    "pending_segments": meta["pending_segments"],
+                    "overlap_wall_s": wall,
+                    "timeout_s": timeout,
+                },
+            ) from None
+        except Exception as exc:
+            self._pending = None
+            failure = self._record_failure(
+                -1 if t is None else t, meta, exc, blocked_s=time.perf_counter() - t0
+            )
+            raise RefreshError(
+                f"refresh submitted at t={meta['t_submit']} failed: {exc!r}",
+                meta=failure,
+            ) from exc
         blocked = time.perf_counter() - t0
         return self._collect(-1 if t is None else t, blocked_s=blocked)
 
@@ -379,12 +491,77 @@ class OnlineTopologyController:
     def _solve(self, Pi_snapshot: np.ndarray) -> None:
         # runs on the worker thread in overlap mode: refresher state is
         # only read back on the main thread after fut.done()
-        self.refresher.refresh(Pi_snapshot)
+        attempt = 0
+        while True:
+            try:
+                self.refresher.refresh(Pi_snapshot)
+                self._last_attempts = attempt + 1
+                return
+            except Exception:
+                attempt += 1
+                if attempt > self.solve_retries:
+                    self._last_attempts = attempt
+                    raise
+                # exponential backoff; in overlap mode this sleeps the
+                # worker thread, never the rollout
+                time.sleep(self.retry_backoff_s * (2.0 ** (attempt - 1)))
+
+    def _record_failure(
+        self, t: int, meta: dict, exc: BaseException, blocked_s: float = 0.0
+    ) -> dict:
+        """Log a dead refresh and re-arm the detector; returns the entry."""
+        self.failed_refreshes += 1
+        entry = {
+            "t_submit": meta["t_submit"], "t_collect": int(t),
+            "solve_s": None,
+            "pending_segments": meta["pending_segments"],
+            "overlap_wall_s": time.perf_counter() - meta["wall0"],
+            "blocked_s": float(blocked_s),
+            "attempts": self._last_attempts,
+            "restaged": False,
+            "error": repr(exc),
+        }
+        self.refresh_log.append(entry)
+        self.events.append({
+            "t": int(t), "refresh_failed": True, "error": repr(exc),
+        })
+        # keep mixing with the last-good schedule; re-anchor the
+        # detector at the current proxy so drift can trigger again
+        self.detector.rebase(self.proxy())
+        return entry
+
+    def _abandon(self, t: int, wall_s: float) -> None:
+        """Give up on a timed-out solve: fall back to last-good W.
+
+        The worker thread cannot be killed; it is detached via
+        ``shutdown(wait=False)`` and a fresh executor is created on the
+        next submit. If the old solve eventually finishes it mutates
+        the refresher -- harmless for correctness (the refresher only
+        ever holds SOME valid doubly stochastic topology, and the next
+        emitted swap re-reads it) but the reason ``solve_timeout_s``
+        should comfortably exceed a healthy solve time.
+        """
+        fut, meta = self._pending
+        self._pending = None
+        if self._executor is not None:
+            self._executor.shutdown(wait=False)
+            self._executor = None
+        self._record_failure(
+            t, meta,
+            TimeoutError(
+                f"refresh solve exceeded solve_timeout_s="
+                f"{self.solve_timeout_s} ({wall_s:.3f}s elapsed)"
+            ),
+        )
 
     def _collect(self, t: int, blocked_s: float):
         fut, meta = self._pending
         self._pending = None
-        fut.result()  # propagate worker exceptions
+        try:
+            fut.result()
+        except Exception as exc:  # fall back to the last-good schedule
+            self._record_failure(t, meta, exc, blocked_s=blocked_s)
+            return None
         swap = self._finish_refresh(t)
         self.refresh_log.append({
             "t_submit": meta["t_submit"], "t_collect": int(t),
@@ -392,6 +569,7 @@ class OnlineTopologyController:
             "pending_segments": meta["pending_segments"],
             "overlap_wall_s": time.perf_counter() - meta["wall0"],
             "blocked_s": float(blocked_s),
+            "attempts": self._last_attempts,
             "restaged": None,  # patched below once the swap is built
         })
         self.refresh_log[-1]["restaged"] = (

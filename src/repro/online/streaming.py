@@ -47,11 +47,20 @@ class StreamingPiEstimator:
       beta: EW step size in (0, 1]; effective window ~2/beta batches.
       init: optional (n, K) initial estimate (e.g. the Pi the initial
         topology was learned from). Defaults to the uniform matrix.
+      rejoin_beta: optional boosted step size in (0, 1] applied to a
+        node's FIRST update after one or more fully-absent steps. A
+        node dark for a whole outage window holds a stale row (held,
+        not decayed -- see below); on rejoin the stale row is exactly
+        the thing to forget fast, so ``rejoin_beta`` (typically >>
+        ``beta``, e.g. 0.5) snaps it toward the fresh batch instead of
+        blending at the slow stationary rate. ``None`` (default) keeps
+        the single-rate behavior bitwise.
 
     Labels < 0 are treated as "absent" (node churn: a node that is
     offline this step contributes no observations and its row keeps its
     previous value, decaying toward nothing new rather than toward
-    garbage).
+    garbage). ``absent_streak[i]`` counts consecutive fully-absent
+    updates for node ``i`` (reset on the first present batch).
     """
 
     def __init__(
@@ -60,9 +69,12 @@ class StreamingPiEstimator:
         num_classes: int,
         beta: float = 0.1,
         init: np.ndarray | None = None,
+        rejoin_beta: float | None = None,
     ):
         if not 0.0 < beta <= 1.0:
             raise ValueError(f"beta must be in (0, 1], got {beta}")
+        if rejoin_beta is not None and not 0.0 < rejoin_beta <= 1.0:
+            raise ValueError(f"rejoin_beta must be in (0, 1], got {rejoin_beta}")
         if n_nodes < 1 or num_classes < 1:
             raise ValueError("need n_nodes >= 1 and num_classes >= 1")
         self.n_nodes = int(n_nodes)
@@ -79,12 +91,19 @@ class StreamingPiEstimator:
             if not np.allclose(pi.sum(axis=1), 1.0, atol=1e-6):
                 raise ValueError("rows of init must sum to 1")
         self._pi = pi
+        self.rejoin_beta = None if rejoin_beta is None else float(rejoin_beta)
+        self._absent_streak = np.zeros(self.n_nodes, dtype=np.int64)
         self.n_updates = 0
 
     @property
     def Pi_hat(self) -> np.ndarray:
         """Current estimate (copy; rows sum to 1)."""
         return self._pi.copy()
+
+    @property
+    def absent_streak(self) -> np.ndarray:
+        """Consecutive fully-absent updates per node (copy)."""
+        return self._absent_streak.copy()
 
     def update(self, labels: np.ndarray) -> np.ndarray:
         """Fold one step's labels in; returns the updated Pi_hat (copy).
@@ -116,7 +135,19 @@ class StreamingPiEstimator:
         active = totals > 0
         if np.any(active):
             p_batch = counts[active] / totals[active, None]
-            self._pi[active] = (1.0 - self.beta) * self._pi[active] + self.beta * p_batch
+            if self.rejoin_beta is not None and np.any(
+                self._absent_streak[active] > 0
+            ):
+                # a rejoining node's row is stale by absent_streak
+                # steps: snap it toward the fresh batch at rejoin_beta
+                beta = np.where(
+                    self._absent_streak[active] > 0, self.rejoin_beta, self.beta
+                )[:, None]
+            else:
+                beta = self.beta  # scalar fast path, bitwise-stable
+            self._pi[active] = (1.0 - beta) * self._pi[active] + beta * p_batch
+        self._absent_streak[active] = 0
+        self._absent_streak[~active] += 1
         self.n_updates += 1
         return self.Pi_hat
 

@@ -45,6 +45,7 @@ from repro.core.mixing import (
 )
 from repro.models import registry
 from repro.models.common import ModelConfig
+from .checkpoints import latest_step, restore_checkpoint, save_checkpoint
 from .metrics import CommMeter, mix_bytes_per_step
 from .sharding import make_param_specs
 
@@ -164,6 +165,10 @@ class TrainSetup:
         segment_len: int,
         on_segment: Callable | None = None,
         rollout: str = "scan",
+        checkpoint_dir: str | None = None,
+        checkpoint_every: int = 1,
+        resume: bool = False,
+        stop_after_segments: int | None = None,
     ) -> dict:
         """Segmented online rollout with hot-swap handoff at boundaries.
 
@@ -191,8 +196,26 @@ class TrainSetup:
         finished swap back at a later boundary, so the rollout never
         waits on the solve.
 
+        Crash recovery: with ``checkpoint_dir`` set, the carry
+        (``params``, ``opt_state``, and the CURRENT mixing operand --
+        so a pre-crash hot swap survives) is saved via
+        ``repro.train.checkpoints`` every ``checkpoint_every``-th
+        segment boundary, AFTER the hook (plus at the end and at an
+        early stop). ``resume=True`` restores the newest checkpoint
+        and continues; because the same jitted multi-step replays the
+        same batch slices from the same restored values, the resumed
+        trajectory is bitwise the uninterrupted one (asserted in
+        tests). ``stop_after_segments`` ends the run early after that
+        many executed segments -- the scripted "crash" of recovery
+        drills -- recording ``stopped_at``. The checkpointed operand
+        covers the value-swap paths (W / ScheduleArrays / in-pool
+        gammas); a mid-run pool RESTAGE rebuilds the setup, which a
+        checkpoint cannot capture -- resume from the returned ``setup``
+        in that case.
+
         Returns ``{"params", "opt_state", "losses", "n_traces",
-        "swaps", "recompiles", "segment_s", "comm", "setup", "mix"}``
+        "swaps", "recompiles", "segment_s", "comm", "setup", "mix",
+        "resumed_from", "stopped_at"}``
         -- ``n_traces`` counts multi-step traces (1 when
         ``segment_len`` divides ``steps`` and no restage happened; a
         pool-transport restage adds exactly one), ``segment_s``
@@ -208,6 +231,10 @@ class TrainSetup:
             raise ValueError("run_segments needs an online_w=True setup")
         if segment_len < 1:
             raise ValueError(f"segment_len must be >= 1, got {segment_len}")
+        if checkpoint_every < 1:
+            raise ValueError(
+                f"checkpoint_every must be >= 1, got {checkpoint_every}"
+            )
         steps = jax.tree_util.tree_leaves(batches)[0].shape[0]
         setup = self
         n_traces = 0
@@ -227,6 +254,26 @@ class TrainSetup:
         losses, swaps, segment_s = [], [], []
         recompiles = 0
         t0 = 0
+        resumed_from = None
+        stopped_at = None
+        if checkpoint_dir is not None and resume:
+            last = latest_step(checkpoint_dir)
+            if last is not None:
+                like = {"params": params, "opt": opt_state, "mix": mix}
+                tree, _meta = restore_checkpoint(checkpoint_dir, last, like)
+                params, opt_state, mix = tree["params"], tree["opt"], tree["mix"]
+                t0 = int(last)
+                resumed_from = t0
+
+        def save(t: int) -> None:
+            save_checkpoint(
+                checkpoint_dir,
+                t,
+                {"params": params, "opt": opt_state, "mix": mix},
+                metadata={"t": int(t)},
+            )
+
+        seg_idx = 0
         while t0 < steps:
             k = min(segment_len, steps - t0)
             seg = jax.tree_util.tree_map(lambda x: x[t0 : t0 + k], batches)
@@ -237,25 +284,41 @@ class TrainSetup:
             meter.tick(k)
             losses.append(np.asarray(loss))
             t0 += k
-            if on_segment is None or t0 >= steps:
-                continue  # no hook after the final segment (nothing executes it)
-            update = on_segment(t0 - 1)
-            if update is None:
-                continue
-            swaps.append(t0 - 1)
-            if isinstance(update, PoolSwap) and update.restaged:
-                pool = update.pool
-                if setup.sharded_transport == "pool":
-                    # pool miss: the new atoms are not compiled in --
-                    # rebuild the step around the restaged pool (the ONE
-                    # counted recompile)
-                    setup = setup._rebuild(pool)
-                    msj = jit_counted(setup.multi_step_fn(rollout))
-                    recompiles += 1
-                    meter.set_rate(setup.comm_bytes_per_step or 0, step=t0)
-                # on the all-gather transport the restaged atoms execute
-                # as ScheduleArrays data: no rebuild, no recompile
-            mix = _as_mix_operand(update, setup, pool)
+            seg_idx += 1
+            # no hook after the final segment (nothing executes it)
+            if on_segment is not None and t0 < steps:
+                update = on_segment(t0 - 1)
+                if update is not None:
+                    swaps.append(t0 - 1)
+                    if isinstance(update, PoolSwap) and update.restaged:
+                        pool = update.pool
+                        if setup.sharded_transport == "pool":
+                            # pool miss: the new atoms are not compiled in
+                            # -- rebuild the step around the restaged pool
+                            # (the ONE counted recompile)
+                            setup = setup._rebuild(pool)
+                            msj = jit_counted(setup.multi_step_fn(rollout))
+                            recompiles += 1
+                            meter.set_rate(
+                                setup.comm_bytes_per_step or 0, step=t0
+                            )
+                        # on the all-gather transport the restaged atoms
+                        # execute as ScheduleArrays data: no rebuild, no
+                        # recompile
+                    mix = _as_mix_operand(update, setup, pool)
+            if checkpoint_dir is not None and (
+                seg_idx % checkpoint_every == 0 or t0 >= steps
+            ):
+                save(t0)
+            if (
+                stop_after_segments is not None
+                and seg_idx >= stop_after_segments
+                and t0 < steps
+            ):
+                if checkpoint_dir is not None and seg_idx % checkpoint_every != 0:
+                    save(t0)  # the crash drill must leave a resumable state
+                stopped_at = t0
+                break
         return {
             "params": params,
             "opt_state": opt_state,
@@ -267,6 +330,8 @@ class TrainSetup:
             "comm": meter.summary(),
             "setup": setup,
             "mix": mix,
+            "resumed_from": resumed_from,
+            "stopped_at": stopped_at,
         }
 
     # rebuilds this setup around a restaged PermPool (set by

@@ -33,6 +33,7 @@ def mix_bytes_per_step(
     p_total: int,
     n_comm_atoms: int | None = None,
     itemsize: int = 4,
+    alive_frac: float = 1.0,
 ) -> int:
     """Bytes RECEIVED per node per mixing step, by transport.
 
@@ -56,19 +57,32 @@ def mix_bytes_per_step(
                                             still transfers)
     allreduce    2 (n-1)/n * P * itemsize   mix_allreduce (ring model)
     ===========  =========================  ==============================
+
+    ``alive_frac`` scales the fleet for degraded runs: with a fraction
+    of nodes crashed, a dead peer sends nothing (its repaired atom
+    entries are self-loops, which move zero bytes), so the effective
+    gather degree shrinks proportionally. ``alive_frac=1.0`` (default)
+    is the fault-free model above; the faults runner instead keeps the
+    full-rate model here and meters per-step delivery honestly through
+    :meth:`CommMeter.tick`'s ``delivered_frac``.
     """
     if n_nodes < 1 or p_total < 0:
         raise ValueError(f"bad n_nodes={n_nodes} / p_total={p_total}")
+    if not 0.0 <= alive_frac <= 1.0:
+        raise ValueError(f"alive_frac must be in [0, 1], got {alive_frac}")
     if transport == "dense":
         return 0
     if transport == "allgather":
-        return (n_nodes - 1) * p_total * itemsize
+        # (alive - 1) peers actually send; floor at zero for a lone node
+        senders = max(alive_frac * n_nodes - 1.0, 0.0)
+        return int(senders * p_total) * itemsize
     if transport in ("ppermute", "pool"):
         if n_comm_atoms is None:
             raise ValueError(f"transport={transport!r} needs n_comm_atoms")
-        return n_comm_atoms * p_total * itemsize
+        return int(alive_frac * n_comm_atoms * p_total) * itemsize
     if transport == "allreduce":
-        return int(2 * (n_nodes - 1) / n_nodes * p_total) * itemsize
+        n_alive = max(alive_frac * n_nodes, 1.0)
+        return int(2 * (n_alive - 1) / n_alive * p_total) * itemsize
     raise ValueError(f"unknown transport {transport!r}")
 
 
@@ -80,16 +94,38 @@ class CommMeter:
     unit); a transport change mid-run (e.g. a pool restage that grows
     the staged slot count) updates it via :meth:`set_rate`, which also
     records the change as an event.
+
+    Degraded paths stay honest: ``tick(k, delivered_frac=f)`` splits
+    the modeled volume into delivered bytes (``total_bytes``) and bytes
+    lost to dead nodes / dropped edges (``dropped_bytes``) -- the BENCH
+    curves charge only what actually arrived. Self-loop fallbacks move
+    zero bytes so they need no counting; retransmissions DO arrive and
+    are added on top via :meth:`retransmit` (``retransmit_bytes``,
+    also folded into ``total_bytes``).
     """
 
     per_step_bytes: int = 0
     steps: int = 0
     total_bytes: int = 0
+    dropped_bytes: int = 0
+    retransmit_bytes: int = 0
     events: list = dataclasses.field(default_factory=list)
 
-    def tick(self, k: int = 1) -> None:
+    def tick(self, k: int = 1, delivered_frac: float = 1.0) -> None:
+        if not 0.0 <= delivered_frac <= 1.0:
+            raise ValueError(
+                f"delivered_frac must be in [0, 1], got {delivered_frac}"
+            )
         self.steps += int(k)
-        self.total_bytes += int(k) * self.per_step_bytes
+        volume = int(k) * self.per_step_bytes
+        delivered = int(volume * delivered_frac)
+        self.total_bytes += delivered
+        self.dropped_bytes += volume - delivered
+
+    def retransmit(self, nbytes: int) -> None:
+        """Count a successful re-send (delivered, on top of the model)."""
+        self.retransmit_bytes += int(nbytes)
+        self.total_bytes += int(nbytes)
 
     def set_rate(self, per_step_bytes: int, step: int | None = None) -> None:
         if per_step_bytes != self.per_step_bytes:
@@ -104,6 +140,8 @@ class CommMeter:
             "per_step_bytes": self.per_step_bytes,
             "steps": self.steps,
             "total_bytes": self.total_bytes,
+            "dropped_bytes": self.dropped_bytes,
+            "retransmit_bytes": self.retransmit_bytes,
             "rate_changes": list(self.events),
         }
 

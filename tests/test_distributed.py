@@ -489,3 +489,58 @@ def test_online_w_rejects_invalid_configs():
     """
     out = run_with_devices(code)
     assert "ONLINE_W_VALIDATION_OK" in out
+
+
+def test_run_segments_checkpoint_resume_bitwise():
+    """Crash recovery for the mesh trainer: stop after 2 segments (the
+    scripted crash), resume from the checkpoint, and land bitwise on the
+    uninterrupted run -- including a pre-crash hot swap, which rides the
+    checkpoint as the saved mixing operand."""
+    out = run_with_devices("""
+        import tempfile
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.compat import AxisType, make_compat_mesh, set_mesh
+        from repro.configs import get_smoke_config
+        from repro.core import topology as T
+        from repro.core.mixing import schedule_from_matrix, schedule_to_arrays
+        from repro.train.lm_trainer import make_train_setup
+
+        mesh = make_compat_mesh((8, 1), ("data", "model"),
+                                axis_types=(AxisType.Auto,)*2)
+        cfg = get_smoke_config("qwen3-0.6b")
+        setup = make_train_setup(cfg, mesh, mode="dsgd", online_w=True, lr=1e-2)
+        sh = jax.tree.map(lambda s: NamedSharding(mesh, s), setup.param_specs,
+                          is_leaf=lambda x: isinstance(x, P))
+        mix0 = schedule_to_arrays(schedule_from_matrix(T.ring(8)), 4)
+        mix1 = schedule_to_arrays(
+            schedule_from_matrix(0.5 * T.ring(8) + 0.5 * np.eye(8)), 4)
+        hook = lambda t: mix1 if t == 3 else None   # swap BEFORE the crash
+        with set_mesh(mesh):
+            params = jax.jit(setup.init_params, out_shardings=sh)(jax.random.PRNGKey(0))
+            toks = jax.random.randint(jax.random.PRNGKey(1), (8, 8, 2, 32), 0,
+                                      cfg.vocab_size)
+            batches = {"tokens": toks, "labels": toks}
+            full = setup.run_segments(params, None, batches, mix0,
+                                      segment_len=2, on_segment=hook)
+            assert full["stopped_at"] is None and full["resumed_from"] is None
+            with tempfile.TemporaryDirectory() as d:
+                head = setup.run_segments(params, None, batches, mix0,
+                                          segment_len=2, on_segment=hook,
+                                          checkpoint_dir=d,
+                                          stop_after_segments=2)
+                assert head["stopped_at"] == 4, head["stopped_at"]
+                assert head["swaps"] == [3]
+                tail = setup.run_segments(params, None, batches, mix0,
+                                          segment_len=2, checkpoint_dir=d,
+                                          resume=True)
+                assert tail["resumed_from"] == 4, tail["resumed_from"]
+                assert tail["n_traces"] == 1      # resume retraces nothing new
+        glued = np.concatenate([head["losses"], tail["losses"]])
+        assert np.array_equal(glued, full["losses"]), "resume diverged"
+        for a, b in zip(jax.tree.leaves(tail["params"]),
+                        jax.tree.leaves(full["params"])):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        print("CKPT_RESUME_OK")
+    """)
+    assert "CKPT_RESUME_OK" in out

@@ -168,3 +168,91 @@ def test_shard_partition_more_shards_than_samples():
     assert Pi.shape == (4, 2)
     covered = np.concatenate([ix for ix in idx if len(ix)])
     assert sorted(covered.tolist()) == [0, 1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# full-segment absence + immediate rejoin (ISSUE 6 hardening)
+# ---------------------------------------------------------------------------
+
+def test_node_churn_offline_windows():
+    Pi0 = _dirichlet_pi(6, 3)
+    churn = NodeChurn(Pi0=Pi0, events=((5, 2, 4), (8, 4, 3), (12, 1)), seed=0)
+    wins = churn.offline_windows()
+    assert (2, 5, 9) in wins and (4, 8, 11) in wins
+    assert all(w[0] != 1 for w in wins)  # offline_steps=0 events omitted
+    for node, t0, t1 in wins:
+        for t in range(t0, t1):
+            assert node in churn.offline_nodes(t)
+        assert node not in churn.offline_nodes(t1)
+
+
+def test_estimator_full_segment_absence_holds_row():
+    """A node dark for a whole segment must keep its Pi row exactly --
+    no decay toward stale data, no NaN -- and snap back on rejoin."""
+    from repro.online.streaming import StreamingPiEstimator
+
+    Pi0 = _dirichlet_pi(6, 3, seed=1)
+    churn = NodeChurn(Pi0=Pi0, events=((0, 2, 50),), seed=0)
+    est = StreamingPiEstimator(6, 3, beta=0.2, init=Pi0)
+    row_before = est.Pi_hat[2].copy()
+    rng = np.random.default_rng(0)
+    for t in range(50):  # node 2 absent the ENTIRE stretch
+        est.update(churn.sample_labels(t, 8, rng))
+    assert np.array_equal(est.Pi_hat[2], row_before)   # held, not decayed
+    assert np.isfinite(est.Pi_hat).all()
+    assert est.absent_streak[2] == 50
+    assert (est.absent_streak[[0, 1, 3, 4, 5]] == 0).all()
+    # other rows kept estimating (rows sum to 1 throughout)
+    np.testing.assert_allclose(est.Pi_hat.sum(axis=1), 1.0, atol=1e-9)
+
+
+def test_estimator_immediate_rejoin_snaps_with_rejoin_beta():
+    from repro.online.streaming import StreamingPiEstimator
+
+    n, K = 4, 3
+    init = np.full((n, K), 1.0 / K)
+    slow = StreamingPiEstimator(n, K, beta=0.05, init=init)
+    fast = StreamingPiEstimator(n, K, beta=0.05, init=init, rejoin_beta=0.8)
+    absent = np.array([[0], [1], [2], [-1]])
+    for est in (slow, fast):
+        for _ in range(10):
+            est.update(absent)
+    # node 3 rejoins emitting pure class 2
+    rejoin = np.array([[0], [1], [2], [2]])
+    slow.update(rejoin)
+    fast.update(rejoin)
+    assert fast.Pi_hat[3, 2] > 0.8                  # snapped toward fresh data
+    assert slow.Pi_hat[3, 2] < 0.4                  # legacy rate barely moved
+    assert fast.absent_streak[3] == 0
+    # steady-state behavior identical once the streak is cleared
+    slow2 = StreamingPiEstimator(n, K, beta=0.05, init=init)
+    fast2 = StreamingPiEstimator(n, K, beta=0.05, init=init, rejoin_beta=0.8)
+    present = np.array([[0], [1], [2], [0]])
+    for _ in range(5):
+        slow2.update(present)
+        fast2.update(present)
+    assert np.array_equal(slow2.Pi_hat, fast2.Pi_hat)  # bitwise back-compat
+
+
+def test_estimator_rejoin_beta_validation():
+    from repro.online.streaming import StreamingPiEstimator
+
+    with pytest.raises(ValueError):
+        StreamingPiEstimator(4, 3, rejoin_beta=0.0)
+    with pytest.raises(ValueError):
+        StreamingPiEstimator(4, 3, rejoin_beta=1.5)
+
+
+def test_fault_plan_from_churn_stream_consistency():
+    """labels_stream's offline masking and the plan's alive windows agree
+    step for step -- the estimator and the mixing layer see the SAME
+    outage."""
+    from repro.faults import FaultPlan
+
+    Pi0 = _dirichlet_pi(6, 3, seed=2)
+    churn = NodeChurn(Pi0=Pi0, events=((3, 1, 5), (10, 4, 4)), seed=0)
+    plan = FaultPlan.from_node_churn(churn, steps=20)
+    stream = labels_stream(churn, steps=20, batch=4, seed=1)
+    for t in range(20):
+        dark = set(np.flatnonzero((stream[t] < 0).all(axis=1)))
+        assert dark == set(np.flatnonzero(~plan.alive[t]))

@@ -1,0 +1,373 @@
+"""Fault injection, degraded doubly-stochastic mixing, stale mixing, and
+crash recovery (ISSUE 6).
+
+The invariants under test:
+
+* ``degrade_schedule`` repairs every atom to an EXACT permutation (cycle
+  collapse), so the degraded W is doubly stochastic to 1e-12 under any
+  alive mask / dropped-edge set, with the gamma vector bitwise untouched.
+* stale mixing with all-zero delays is bitwise the fresh mixing path.
+* ``FaultPlan`` traces are a pure function of the seed: identical across
+  processes (subprocess fingerprint check) and random-access (resume
+  reconstructs the same trace without replay).
+* the faults runner reproduces the fault-free driver bitwise on a
+  zero-fault plan, stays single-trace under live faults + a mid-run
+  topology swap, and checkpoint-resumes bitwise.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.mixing import (
+    ScheduleArrays,
+    degrade_schedule,
+    mix_schedule_arrays,
+    mix_schedule_arrays_stale,
+    schedule_from_matrix,
+    schedule_to_arrays,
+    stale_buffer_init,
+    stale_push,
+    stale_view,
+)
+from repro.core import topology as T
+from repro.data.drift import NodeChurn
+from repro.data.synthetic import mean_estimation_clusters
+from repro.faults import FaultInjector, FaultPlan, run_faulty_mean_estimation
+from repro.train.metrics import CommMeter, mix_bytes_per_step
+from repro.train.trainer import run_mean_estimation
+
+REPO_SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+
+
+def _arrays(n: int, l_max: int = 8) -> ScheduleArrays:
+    sched = schedule_from_matrix(
+        0.6 * T.ring(n) + 0.4 * np.eye(n)
+    )
+    return schedule_to_arrays(sched, l_max)
+
+
+def _dense(arrays: ScheduleArrays) -> np.ndarray:
+    """Rebuild W with f64 gammas normalized to sum exactly 1, so double
+    stochasticity is tested at the repair's precision, not the f32
+    quantization the input gammas already carry."""
+    g = np.asarray(arrays.gammas, np.float64)
+    g = g / g.sum()
+    P = np.asarray(arrays.perms)
+    n = P.shape[1]
+    W = np.zeros((n, n))
+    for l in range(len(g)):
+        W[np.arange(n), P[l]] += g[l]
+    return W
+
+
+# ---------------------------------------------------------------- degrade
+
+
+@settings(max_examples=5)
+@given(st.integers(0, 10_000), st.integers(4, 16))
+def test_degrade_schedule_doubly_stochastic_sweep(seed, n):
+    """Randomized alive masks + edge drops: repaired atoms stay exact
+    permutations, W' doubly stochastic to 1e-12, gammas untouched."""
+    rng = np.random.default_rng(seed)
+    arrays = _arrays(n)
+    alive = rng.random(n) > 0.3
+    drop_mask = rng.random((n, n)) < 0.15
+    np.fill_diagonal(drop_mask, False)
+    dropped = tuple((int(i), int(j)) for i, j in np.argwhere(drop_mask))
+
+    deg = degrade_schedule(arrays, alive, dropped)
+    assert np.array_equal(np.asarray(deg.gammas), np.asarray(arrays.gammas))
+    perms = np.asarray(deg.perms)
+    ident = np.arange(n)
+    for p in perms:
+        assert np.array_equal(np.sort(p), ident)  # exact permutation
+    W = _dense(deg)
+    assert np.abs(W.sum(axis=1) - 1.0).max() < 1e-12
+    assert np.abs(W.sum(axis=0) - 1.0).max() < 1e-12
+    # dead nodes are isolated: row/col collapse to the self-loop
+    for i in np.flatnonzero(~alive):
+        e = np.zeros(n)
+        e[i] = 1.0
+        assert np.allclose(W[i], e, atol=1e-12)
+        assert np.allclose(W[:, i], e, atol=1e-12)
+    # no repaired atom routes a dropped transfer: perm[dst] = src means
+    # src -> dst, forbidden when (src, dst) dropped or either end dead
+    for p in perms:
+        for dst in range(n):
+            src = p[dst]
+            if src != dst:
+                assert alive[src] and alive[dst]
+                assert not drop_mask[src, dst]
+
+
+def test_degrade_schedule_healthy_is_identity():
+    arrays = _arrays(8)
+    deg = degrade_schedule(arrays, np.ones(8, bool), ())
+    assert np.array_equal(np.asarray(deg.perms), np.asarray(arrays.perms))
+    assert np.array_equal(np.asarray(deg.gammas), np.asarray(arrays.gammas))
+
+
+def test_degrade_schedule_validates_edges():
+    arrays = _arrays(4)
+    with pytest.raises(ValueError):
+        degrade_schedule(arrays, np.ones(4, bool), ((0, 7),))
+    with pytest.raises(ValueError):
+        degrade_schedule(arrays, np.ones(3, bool), ())
+
+
+# ------------------------------------------------------------ stale mixing
+
+
+def test_stale_mixing_zero_delay_is_fresh_bitwise():
+    n, P_ = 8, 5
+    rng = np.random.default_rng(0)
+    arrays = _arrays(n)
+    buf = stale_buffer_init(jnp.zeros((n, P_)), depth=3)
+    delays0 = jnp.zeros((n,), jnp.int32)
+    for _ in range(6):
+        x = jnp.asarray(rng.normal(size=(n, P_)), jnp.float32)
+        buf = stale_push(buf, x)
+        fresh = mix_schedule_arrays(x, arrays, single_buffer=False)
+        stale = mix_schedule_arrays_stale(buf, arrays, delays0)
+        assert np.array_equal(np.asarray(fresh), np.asarray(stale))
+
+
+def test_stale_view_reads_known_delays():
+    n, P_ = 4, 2
+    buf = stale_buffer_init(jnp.full((n, P_), -1.0), depth=3)
+    for v in range(5):  # push values 0..4; ring keeps the last 3
+        buf = stale_push(buf, jnp.full((n, P_), float(v)))
+    delays = jnp.asarray([0, 1, 2, 0], jnp.int32)
+    got = np.asarray(stale_view(buf, delays))
+    assert np.array_equal(got[:, 0], [4.0, 3.0, 2.0, 4.0])
+
+
+def test_stale_buffer_depth_one_is_always_fresh():
+    buf = stale_buffer_init(jnp.zeros((3, 1)), depth=1)
+    buf = stale_push(buf, jnp.ones((3, 1)))
+    got = stale_view(buf, jnp.zeros((3,), jnp.int32))
+    assert np.array_equal(np.asarray(got), np.ones((3, 1)))
+
+
+# -------------------------------------------------------------- fault plan
+
+
+def test_fault_plan_deterministic_across_processes():
+    plan = FaultPlan(
+        n_nodes=8, steps=50, seed=42, crash_rate=0.05, mean_outage=6.0,
+        straggler_rate=0.25, tau_max=3, edge_drop_rate=0.1,
+        solve_failure_rate=0.2, solve_hang_rate=0.1,
+    )
+    code = (
+        "from repro.faults import FaultPlan\n"
+        "p = FaultPlan(n_nodes=8, steps=50, seed=42, crash_rate=0.05,\n"
+        "              mean_outage=6.0, straggler_rate=0.25, tau_max=3,\n"
+        "              edge_drop_rate=0.1, solve_failure_rate=0.2,\n"
+        "              solve_hang_rate=0.1)\n"
+        "print(p.fingerprint())\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = REPO_SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=120, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert proc.stdout.strip() == plan.fingerprint()
+
+
+def test_fault_plan_streams_are_random_access():
+    plan = FaultPlan(n_nodes=6, steps=20, seed=7, edge_drop_rate=0.3)
+    # reading t=13 before t=2 must not change either draw
+    e13 = plan.dropped_edges(13)
+    e2 = plan.dropped_edges(2)
+    assert np.array_equal(plan.dropped_edges(13), e13)
+    assert np.array_equal(plan.dropped_edges(2), e2)
+    assert plan.solve_fault(3) == plan.solve_fault(3)
+
+
+def test_fault_plan_never_kills_whole_fleet():
+    plan = FaultPlan(
+        n_nodes=4, steps=200, seed=0, crash_rate=0.9, mean_outage=100.0
+    )
+    assert plan.alive.any(axis=1).all()
+
+
+def test_fault_plan_dead_nodes_have_zero_delay():
+    plan = FaultPlan(
+        n_nodes=8, steps=100, seed=1, crash_rate=0.2, mean_outage=5.0,
+        straggler_rate=1.0, tau_max=4,
+    )
+    assert (plan.delays[~plan.alive] == 0).all()
+    assert plan.delays.max() <= 4
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError):
+        FaultPlan(n_nodes=4, steps=10, crash_rate=1.5)
+    with pytest.raises(ValueError):
+        FaultPlan(n_nodes=4, steps=10, tau_max=-1)
+    with pytest.raises(ValueError):
+        FaultPlan(n_nodes=4, steps=10, solve_failure_rate=0.7, solve_hang_rate=0.7)
+
+
+def test_from_node_churn_matches_offline_windows():
+    Pi0 = np.full((6, 3), 1.0 / 3)
+    churn = NodeChurn(Pi0=Pi0, events=((5, 2, 4), (8, 4, 3)), seed=0)
+    plan = FaultPlan.from_node_churn(churn, steps=20, seed=9)
+    assert plan.n_nodes == 6 and plan.steps == 20
+    for node, t0, t1 in churn.offline_windows():
+        assert not plan.alive[t0:min(t1, 20), node].any()
+    # outside the windows everyone is up
+    assert plan.alive[0].all() and plan.alive[15:].all()
+
+
+# ------------------------------------------------------------------ runner
+
+
+@pytest.fixture(scope="module")
+def small_problem():
+    n = 8
+    task = mean_estimation_clusters(n_nodes=n, K=4)
+    return task, _arrays(n)
+
+
+def test_runner_zero_fault_bitwise_vs_fault_free_driver(small_problem):
+    task, arrays = small_problem
+    plan0 = FaultPlan(n_nodes=8, steps=30, seed=0)
+    base = run_mean_estimation(
+        task, None, steps=30, schedule=arrays, lr=0.1, seed=5, segment_len=10
+    )
+    faulty = run_faulty_mean_estimation(
+        task, plan0, arrays, lr=0.1, seed=5, segment_len=10
+    )
+    for key in ("mean_sq_error", "max_sq_error", "min_sq_error"):
+        assert np.array_equal(base[key], faulty[key]), key
+    assert faulty["n_traces"] == 1
+
+
+def test_runner_single_trace_under_faults_and_swap(small_problem):
+    """Degraded-W swaps, straggler delays, a crash/rejoin, AND a mid-run
+    topology refresh are all pure value changes: one compiled rollout."""
+    task, arrays = small_problem
+    plan = FaultPlan(
+        n_nodes=8, steps=40, seed=3, crash_rate=0.05, mean_outage=5.0,
+        straggler_rate=0.4, tau_max=2, edge_drop_rate=0.08,
+    )
+    swapped = schedule_to_arrays(
+        schedule_from_matrix(0.5 * T.ring(8) + 0.5 * np.eye(8)),
+        int(np.asarray(arrays.gammas).shape[0]),
+    )
+    hooks = iter([None, swapped])
+    out = run_faulty_mean_estimation(
+        task, plan, arrays, lr=0.1, seed=5, segment_len=10,
+        on_segment=lambda t: next(hooks, None),
+    )
+    assert out["n_traces"] == 1, out["n_traces"]
+    assert out["swaps"] == [19]
+    assert np.isfinite(out["mean_sq_error"]).all()
+    assert out["comm"]["dropped_bytes"] > 0  # degraded delivery was metered
+
+
+def test_runner_checkpoint_resume_bitwise(tmp_path, small_problem):
+    task, arrays = small_problem
+    plan = FaultPlan(
+        n_nodes=8, steps=30, seed=11, crash_rate=0.1, mean_outage=4.0,
+        straggler_rate=0.3, tau_max=2, edge_drop_rate=0.1,
+    )
+    kw = dict(lr=0.1, seed=5, segment_len=10)
+    full = run_faulty_mean_estimation(task, plan, arrays, **kw)
+    d = str(tmp_path / "ckpt")
+    head = run_faulty_mean_estimation(
+        task, plan, arrays, checkpoint_dir=d, stop_after_segments=1, **kw
+    )
+    assert head["stopped_at"] == 10
+    tail = run_faulty_mean_estimation(
+        task, plan, arrays, checkpoint_dir=d, resume=True, **kw
+    )
+    assert tail["resumed_from"] == 10
+    assert tail["n_traces"] == 1  # resume re-enters the same cached trace shape
+    glued = np.concatenate([head["mean_sq_error"], tail["mean_sq_error"]])
+    assert np.array_equal(glued, full["mean_sq_error"])
+    assert np.array_equal(tail["theta"], full["theta"])
+
+
+def test_runner_checkpoint_preserves_pre_crash_swap(tmp_path, small_problem):
+    """A topology refresh BEFORE the crash must survive resume: the base
+    schedule is part of the checkpoint."""
+    task, arrays = small_problem
+    plan = FaultPlan(n_nodes=8, steps=30, seed=2, edge_drop_rate=0.05)
+    swapped = schedule_to_arrays(
+        schedule_from_matrix(0.5 * T.ring(8) + 0.5 * np.eye(8)),
+        int(np.asarray(arrays.gammas).shape[0]),
+    )
+    kw = dict(lr=0.1, seed=5, segment_len=10)
+    hook = lambda t: swapped if t == 9 else None
+    full = run_faulty_mean_estimation(task, plan, arrays, on_segment=hook, **kw)
+    d = str(tmp_path / "ckpt")
+    head = run_faulty_mean_estimation(
+        task, plan, arrays, on_segment=hook,
+        checkpoint_dir=d, stop_after_segments=2, **kw
+    )
+    assert head["swaps"] == [9]
+    tail = run_faulty_mean_estimation(
+        task, plan, arrays, checkpoint_dir=d, resume=True, **kw
+    )
+    glued = np.concatenate([head["mean_sq_error"], tail["mean_sq_error"]])
+    assert np.array_equal(glued, full["mean_sq_error"])
+
+
+def test_injector_rebind_rejects_shape_change(small_problem):
+    task, arrays = small_problem
+    plan = FaultPlan(n_nodes=8, steps=10, seed=0)
+    inj = FaultInjector(plan, arrays)
+    bad = ScheduleArrays(
+        gammas=jnp.ones((3,), jnp.float32) / 3.0,
+        perms=jnp.tile(jnp.arange(8, dtype=jnp.int32), (3, 1)),
+    )
+    with pytest.raises(ValueError):
+        inj.rebind(bad)
+
+
+# ----------------------------------------------------------- comm metering
+
+
+def test_mix_bytes_per_step_alive_frac():
+    full = mix_bytes_per_step("allgather", n_nodes=8, p_total=100)
+    assert full == 7 * 100 * 4
+    half = mix_bytes_per_step("allgather", n_nodes=8, p_total=100, alive_frac=0.5)
+    assert half == 3 * 100 * 4  # (0.5*8 - 1) senders
+    assert mix_bytes_per_step(
+        "allgather", n_nodes=8, p_total=100, alive_frac=0.0
+    ) == 0
+    pool_full = mix_bytes_per_step("pool", n_nodes=8, p_total=10, n_comm_atoms=4)
+    pool_half = mix_bytes_per_step(
+        "pool", n_nodes=8, p_total=10, n_comm_atoms=4, alive_frac=0.5
+    )
+    assert pool_half == pool_full // 2
+    with pytest.raises(ValueError):
+        mix_bytes_per_step("allgather", n_nodes=8, p_total=100, alive_frac=1.5)
+
+
+def test_comm_meter_degraded_accounting():
+    m = CommMeter(per_step_bytes=100)
+    m.tick(10)                       # fault-free: all delivered
+    m.tick(10, delivered_frac=0.8)   # degraded: 20% lost
+    assert m.steps == 20
+    assert m.total_bytes == 1000 + 800
+    assert m.dropped_bytes == 200
+    m.retransmit(50)                 # a re-send arrives on top
+    s = m.summary()
+    assert s["total_bytes"] == 1850
+    assert s["retransmit_bytes"] == 50
+    assert s["dropped_bytes"] == 200
+    with pytest.raises(ValueError):
+        m.tick(1, delivered_frac=1.2)

@@ -743,3 +743,218 @@ def test_restage_reports_capacity_truncation_residue():
     assert swap.pool.capacity == 2
     assert swap.dropped_mass > 0.0            # the truncated atoms' mass
     assert abs(swap.gammas.sum() - 1.0) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# controller hardening under injected solve faults (ISSUE 6)
+# ---------------------------------------------------------------------------
+
+def test_inline_solve_failure_falls_back_to_last_good():
+    Pi, res0 = _small_problem()
+
+    class BrokenRefresher(TopologyRefresher):
+        def refresh(self, Pi_hat):
+            raise RuntimeError("injected solve failure")
+
+    ref = BrokenRefresher(res0, RefreshConfig(budget=4, lam=0.1))
+    W_before = ref.W.copy()
+    ctl = OnlineTopologyController(
+        ref, estimator=StreamingPiEstimator(16, 4, init=Pi)
+    )
+    ctl.request_refresh()
+    assert ctl.on_segment(0) is None          # no raise, no swap
+    assert ctl.failed_refreshes == 1
+    np.testing.assert_array_equal(ref.W, W_before)  # last-good kept
+    (rec,) = ctl.refresh_log
+    assert rec["error"].startswith("RuntimeError")
+    assert rec["solve_s"] is None
+    assert any(e.get("refresh_failed") for e in ctl.events)
+    # the detector was re-armed: a later manual trigger still works
+    ctl.request_refresh()
+    assert ctl.on_segment(1) is None
+    assert ctl.failed_refreshes == 2
+
+
+def test_solve_retries_with_backoff_recover():
+    Pi, res0 = _small_problem()
+    calls = {"n": 0}
+
+    class FlakyTwice(TopologyRefresher):
+        def refresh(self, Pi_hat):
+            calls["n"] += 1
+            if calls["n"] <= 2:
+                raise RuntimeError(f"transient #{calls['n']}")
+            return super().refresh(Pi_hat)
+
+    ref = FlakyTwice(res0, RefreshConfig(budget=4, lam=0.1))
+    ctl = OnlineTopologyController(
+        ref, estimator=StreamingPiEstimator(16, 4, init=Pi),
+        solve_retries=3, retry_backoff_s=0.001,
+    )
+    ctl.request_refresh()
+    swap = ctl.on_segment(0)
+    assert swap is not None                   # third attempt succeeded
+    assert calls["n"] == 3
+    assert ctl.failed_refreshes == 0
+    (rec,) = ctl.refresh_log
+    assert rec["attempts"] == 3
+
+
+def test_solve_retries_exhausted_count_one_failure():
+    Pi, res0 = _small_problem()
+
+    class AlwaysBroken(TopologyRefresher):
+        def refresh(self, Pi_hat):
+            raise RuntimeError("hard failure")
+
+    ref = AlwaysBroken(res0, RefreshConfig(budget=4, lam=0.1))
+    ctl = OnlineTopologyController(
+        ref, estimator=StreamingPiEstimator(16, 4, init=Pi),
+        solve_retries=2, retry_backoff_s=0.001,
+    )
+    ctl.request_refresh()
+    assert ctl.on_segment(0) is None
+    assert ctl.failed_refreshes == 1
+    assert ctl.refresh_log[-1]["attempts"] == 3   # 1 + 2 retries
+
+
+def test_overlap_worker_failure_collects_as_fallback():
+    import time as _time
+
+    Pi, res0 = _small_problem()
+
+    class BrokenRefresher(TopologyRefresher):
+        def refresh(self, Pi_hat):
+            raise RuntimeError("worker died")
+
+    ref = BrokenRefresher(res0, RefreshConfig(budget=4, lam=0.1))
+    ctl = OnlineTopologyController(
+        ref, estimator=StreamingPiEstimator(16, 4, init=Pi), overlap=True
+    )
+    try:
+        ctl.request_refresh()
+        assert ctl.on_segment(0) is None      # submitted
+        deadline = _time.monotonic() + 5.0
+        while not ctl._pending[0].done() and _time.monotonic() < deadline:
+            _time.sleep(0.01)
+        assert ctl.on_segment(1) is None      # collect -> fallback, no raise
+        assert not ctl.refresh_pending
+        assert ctl.failed_refreshes == 1
+        assert "worker died" in ctl.refresh_log[-1]["error"]
+    finally:
+        ctl.close()
+
+
+def test_flush_reraises_worker_exception_with_metadata():
+    from repro.online.refresh import RefreshError
+
+    Pi, res0 = _small_problem()
+
+    class BrokenRefresher(TopologyRefresher):
+        def refresh(self, Pi_hat):
+            raise ValueError("bad Pi")
+
+    ref = BrokenRefresher(res0, RefreshConfig(budget=4, lam=0.1))
+    ctl = OnlineTopologyController(
+        ref, estimator=StreamingPiEstimator(16, 4, init=Pi), overlap=True
+    )
+    try:
+        ctl.request_refresh()
+        assert ctl.on_segment(3) is None
+        with pytest.raises(RefreshError) as exc_info:
+            ctl.flush(9)
+        err = exc_info.value
+        assert err.meta["t_submit"] == 3
+        assert "bad Pi" in err.meta["error"]
+        assert isinstance(err.__cause__, ValueError)
+        # pending cleared: training can continue on the last-good W
+        assert not ctl.refresh_pending
+        assert ctl.failed_refreshes == 1
+        assert ctl.flush() is None
+    finally:
+        ctl.close()
+
+
+def test_flush_timeout_raises_and_preserves_pending():
+    import threading
+    import time as _time
+
+    from repro.online.refresh import RefreshTimeoutError
+
+    Pi, res0 = _small_problem()
+    release = threading.Event()
+
+    class HangingRefresher(TopologyRefresher):
+        def refresh(self, Pi_hat):
+            release.wait(timeout=30.0)
+            return super().refresh(Pi_hat)
+
+    ref = HangingRefresher(res0, RefreshConfig(budget=4, lam=0.1))
+    ctl = OnlineTopologyController(
+        ref, estimator=StreamingPiEstimator(16, 4, init=Pi), overlap=True
+    )
+    try:
+        ctl.request_refresh()
+        assert ctl.on_segment(0) is None
+        with pytest.raises(RefreshTimeoutError) as exc_info:
+            ctl.flush(1, timeout=0.1)
+        assert exc_info.value.meta["t_submit"] == 0
+        assert exc_info.value.meta["timeout_s"] == 0.1
+        assert ctl.refresh_pending            # the solve is still in flight
+        assert ctl.failed_refreshes == 0      # a timeout is not a failure
+        release.set()                         # let it finish; now collectable
+        swap = ctl.flush(2)
+        assert swap is not None
+    finally:
+        release.set()
+        ctl.close()
+
+
+def test_solve_timeout_abandons_at_boundary_and_rearms():
+    import threading
+    import time as _time
+
+    Pi, res0 = _small_problem()
+    release = threading.Event()
+
+    class HangingRefresher(TopologyRefresher):
+        def refresh(self, Pi_hat):
+            release.wait(timeout=30.0)
+            return super().refresh(Pi_hat)
+
+    ref = HangingRefresher(res0, RefreshConfig(budget=4, lam=0.1))
+    ctl = OnlineTopologyController(
+        ref, estimator=StreamingPiEstimator(16, 4, init=Pi),
+        overlap=True, solve_timeout_s=0.05,
+    )
+    try:
+        ctl.request_refresh()
+        t0 = _time.perf_counter()
+        assert ctl.on_segment(0) is None      # submit
+        _time.sleep(0.1)                      # let the timeout elapse
+        assert ctl.on_segment(1) is None      # abandon, never block
+        assert _time.perf_counter() - t0 < 5.0
+        assert not ctl.refresh_pending
+        assert ctl.failed_refreshes == 1
+        assert "solve_timeout_s" in ctl.refresh_log[-1]["error"]
+    finally:
+        release.set()
+        ctl.close()
+
+
+def test_flaky_refresher_injects_per_plan():
+    from repro.faults import FaultPlan, FlakyRefresher
+
+    Pi, res0 = _small_problem()
+    plan = FaultPlan(n_nodes=16, steps=10, seed=5, solve_failure_rate=1.0)
+    ref = FlakyRefresher(TopologyRefresher(res0, RefreshConfig(budget=4, lam=0.1)), plan)
+    ctl = OnlineTopologyController(
+        ref, estimator=StreamingPiEstimator(16, 4, init=Pi)
+    )
+    ctl.request_refresh()
+    assert ctl.on_segment(0) is None
+    assert ctl.failed_refreshes == 1
+    assert ref.n_injected_failures == 1
+    assert "injected solve failure" in ctl.refresh_log[-1]["error"]
+    # delegation: the wrapper exposes the inner refresher's surface
+    assert ref.schedule_arrays().l_max == ref.l_max
