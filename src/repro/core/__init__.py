@@ -6,6 +6,7 @@
 # backend is actually selected.
 from . import (
     assignment,
+    compression,
     dcliques,
     dsgd,
     heterogeneity,
@@ -14,6 +15,7 @@ from . import (
     theory,
     topology,
 )
+from .compression import Compressor, ef_gossip_step, ef_init, make_compressor
 from .dsgd import DSGDState, dsgd_init, dsgd_step_sharded, dsgd_step_stacked
 from .mixing import (
     BirkhoffSchedule,
@@ -30,6 +32,11 @@ from .stl_fw import STLFWResult, fw_upper_bound, learn_topology, stl_fw_objectiv
 
 __all__ = [
     "assignment",
+    "compression",
+    "Compressor",
+    "make_compressor",
+    "ef_gossip_step",
+    "ef_init",
     "dcliques",
     "dsgd",
     "heterogeneity",

@@ -4,30 +4,86 @@ The paper notes its results compose with algorithmic D-SGD improvements;
 the classic communication-side one is CHOCO-style compressed gossip
 (Koloskova et al., 2019): each node transmits a compressed view of its
 parameters and keeps an error-feedback memory so the quantization error is
-re-injected instead of lost.
+re-injected instead of lost. Koloskova et al.'s unified theory covers the
+composition with *changing* topologies, which is exactly what the online
+refresh machinery produces -- so the compressed wire here is built into
+the retrace-free transports, not bolted onto the static ones.
 
-Operators (pure jnp, usable inside the simulator and the sharded trainer):
+Two layers:
 
-* ``bf16_compress``       -- cast-to-bf16 wire format (2x vs f32)
-* ``topk_compress(k)``    -- magnitude top-k sparsification (k fraction)
-* ``ef_gossip_step``      -- one D-SGD step with error-feedback compressed
-                             mixing: theta_i <- theta_half_i +
-                             sum_j W_ij C(theta_half_j + e_j) - C(theta_half_i + e_i)
-                             (consensus on compressed values; EF memory e).
+**Wire formats** -- :class:`Compressor` is a frozen (hashable) description
+of how one node's payload is encoded on the wire, so a jitted step can
+close over it statically while the EF memory rides the scan carry as
+data (the ``StaleBuffer`` idiom of the staleness engine):
+
+* ``identity`` -- f32 passthrough; compressed mixing routes to the plain
+  transport at trace time, so it is BITWISE the uncompressed run.
+* ``bf16``     -- cast round-trip; 2 bytes/element on the wire (0.5x).
+* ``topk``     -- exactly-k-by-magnitude sparsification with an explicit
+  value+index wire layout: ``k`` f32 values + ``k`` int32 indices, so
+  the honest byte cost is ``k * (itemsize + 4)``, not "k elements".
+
+**EF mixing operators** -- CHOCO-style consensus on compressed views,
+
+    theta_i <- theta_half_i + sum_j W_ij C(theta_half_j + e_j)
+                            - C(theta_half_i + e_i)
+    e_i     <- (theta_half_i + e_i) - C(theta_half_i + e_i)
+
+in every transport shape the online engine runs: dense stacked
+(:func:`ef_gossip_step`), data-plane ``ScheduleArrays``
+(:func:`ef_mix_schedule_arrays`, the simulator path), and the sharded
+mesh transports (:func:`mix_ppermute_pool_ef`,
+:func:`mix_arrays_sharded_ef`, :func:`mix_dense_sharded_ef`). All take
+the wire format as a static ``Compressor`` and the EF memory as data, so
+a hot-swapped topology refresh stays a pure value change: zero retraces,
+asserted by the tests and benches.
+
+Conservation note: summing the update over i kills the ``W c - c`` term
+(1^T W = 1^T for doubly stochastic W), so the node-mean of theta is
+preserved exactly by compressed mixing -- compression distorts *where*
+mass flows, never *how much* exists; what a wire drops stays in ``e``
+and telescopes back in later (property-tested in
+tests/test_compression.py).
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
+from .mixing import (
+    PermPool,
+    ScheduleArrays,
+    _mix_arrays_flat,
+    mix_arrays_sharded,
+    mix_dense_sharded,
+    mix_ppermute_pool,
+    mix_schedule_arrays,
+)
+
 PyTree = Any
 
-__all__ = ["bf16_compress", "topk_compress", "ef_gossip_step"]
+__all__ = [
+    "Compressor",
+    "make_compressor",
+    "bf16_compress",
+    "topk_compress",
+    "topk_keep_count",
+    "topk_mask",
+    "ef_gossip_step",
+    "ef_init",
+    "ef_mix_schedule_arrays",
+    "mix_arrays_sharded_ef",
+    "mix_dense_sharded_ef",
+    "mix_ppermute_pool_ef",
+]
 
-Compressor = Callable[[jax.Array], jax.Array]
+# legacy alias: a bare callable compressor (no byte model, applied to the
+# operand verbatim -- see ef_gossip_step for the compatibility contract)
+CompressorFn = Callable[[jax.Array], jax.Array]
 
 
 def bf16_compress(x: jax.Array) -> jax.Array:
@@ -35,33 +91,443 @@ def bf16_compress(x: jax.Array) -> jax.Array:
     return x.astype(jnp.bfloat16).astype(x.dtype)
 
 
-def topk_compress(frac: float) -> Compressor:
-    """Keep the top ``frac`` fraction of entries by magnitude (per leaf)."""
+def topk_keep_count(size: int, frac: float) -> int:
+    """Entries kept by top-k at ``frac``: ``max(1, int(size * frac))``,
+    clamped to ``size`` -- the k of the value+index wire layout."""
+    if size < 1:
+        raise ValueError(f"payload size must be >= 1, got {size}")
+    return max(1, min(size, int(size * frac)))
+
+
+def topk_mask(x: jax.Array, frac: float) -> jax.Array:
+    """Boolean keep-mask of the exact top-k entries of ``|x|`` (per call).
+
+    Deterministic tie-break by position: a stable argsort on descending
+    magnitude keeps the LOWEST-index entries of a tied magnitude class,
+    so the mask always has exactly ``topk_keep_count(x.size, frac)``
+    true entries -- a threshold comparison cannot promise that (every
+    tied entry passes ``>=``, and a 0.0 threshold passes *everything*,
+    the many-zeros-leaf failure mode). Non-finite inputs are ordered,
+    not propagated into the selection logic: ``+/-inf`` magnitudes sort
+    first (they dominate any finite entry), ``NaN`` sorts last (it is
+    never preferred over real mass; a NaN threshold would instead have
+    zeroed the whole payload).
+    """
+    flat = x.reshape(-1)
+    k = topk_keep_count(flat.shape[0], frac)
+    mag = jnp.abs(flat.astype(jnp.float32))
+    mag = jnp.where(jnp.isnan(mag), -jnp.inf, mag)
+    order = jnp.argsort(-mag, stable=True)
+    mask = jnp.zeros(flat.shape, bool).at[order[:k]].set(True)
+    return mask.reshape(x.shape)
+
+
+def topk_compress(frac: float) -> CompressorFn:
+    """Keep exactly ``topk_keep_count(size, frac)`` entries by magnitude.
+
+    Applied per call operand (one node's payload leaf); see
+    :func:`topk_mask` for the tie/NaN/inf contract.
+    """
 
     def compress(x: jax.Array) -> jax.Array:
-        flat = x.reshape(-1)
-        k = max(1, int(flat.shape[0] * frac))
-        thresh = jnp.sort(jnp.abs(flat))[-k]
-        return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
+        return jnp.where(topk_mask(x, frac), x, jnp.zeros_like(x))
 
     return compress
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """A static wire format: value round-trip + honest byte accounting.
+
+    Frozen and hashable, so jitted steps close over it like a
+    ``PermPool``: the *choice* of wire is compiled in, while the EF
+    memory it creates travels as data. ``__call__`` maps ONE node's
+    payload through the wire (the sharded transports apply it to the
+    local shard; stacked operators vmap it over the node axis), and
+    ``wire_layout`` is the byte model ``mix_bytes_per_step`` /
+    ``CommMeter`` meter from.
+
+    ``gamma`` is CHOCO's consensus step size: the EF transports combine
+    ``theta + gamma * (sum_j W_ij c_j - c_i)``. At ``gamma=1`` (the
+    default) this is plain error-feedback gossip -- exact for mild wires
+    like bf16 -- but an aggressive sparsifier feeds its compression
+    error back through ``(W - I)`` without contraction and diverges;
+    damping with ``gamma < 1`` restores convergence (Koloskova et al.,
+    CHOCO-Gossip). ``gamma`` scales only the gossip increment, never the
+    wire: 1'W = 1' kills the increment's node-mean exactly, so the mean
+    is preserved for ANY gamma, and the bytes model is unchanged.
+    """
+
+    kind: str  # "identity" | "bf16" | "topk"
+    frac: float = 1.0  # top-k keep fraction (ignored by other kinds)
+    gamma: float = 1.0  # CHOCO consensus step size (see below)
+
+    def __post_init__(self) -> None:
+        if self.kind not in ("identity", "bf16", "topk"):
+            raise ValueError(f"unknown compressor kind {self.kind!r}")
+        if not 0.0 < self.frac <= 1.0:
+            raise ValueError(f"frac must be in (0, 1], got {self.frac}")
+        if not 0.0 < self.gamma <= 1.0:
+            raise ValueError(f"gamma must be in (0, 1], got {self.gamma}")
+
+    @property
+    def is_identity(self) -> bool:
+        return self.kind == "identity"
+
+    @property
+    def routes_to_plain(self) -> bool:
+        """True when the EF transports route to the uncompressed path.
+
+        Only the UNDAMPED identity wire is the plain transport bitwise;
+        an identity wire with ``gamma < 1`` is damped exact gossip and
+        must run through the generic combine.
+        """
+        return self.is_identity and self.gamma == 1.0
+
+    @property
+    def label(self) -> str:
+        """Spec string (round-trips through :func:`make_compressor`)."""
+        base = self.kind if self.kind != "topk" else f"topk:{self.frac:g}"
+        return base if self.gamma == 1.0 else f"{base}:g{self.gamma:g}"
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        if self.kind == "identity":
+            return x
+        if self.kind == "bf16":
+            return bf16_compress(x)
+        return jnp.where(topk_mask(x, self.frac), x, jnp.zeros_like(x))
+
+    def wire_layout(self, p_total: int, itemsize: int = 4) -> tuple[int, int]:
+        """``(elements_on_wire, bytes_per_element)`` for a ``p_total``-
+        element payload.
+
+        * identity: ``(P, itemsize)`` -- the uncompressed model.
+        * bf16:     ``(P, 2)`` -- exactly half the f32 wire.
+        * topk:     ``(k, itemsize + 4)`` -- each surviving entry ships
+          its value AND its int32 position; a sparsifier that only
+          charged values would under-report by the index plane.
+
+        The model is per PAYLOAD of ``p_total`` elements. A multi-leaf
+        pytree compresses leaf-by-leaf, so top-k's per-leaf ``max(1, .)``
+        floor can keep slightly more than ``k`` of the summed total on
+        trees with many tiny leaves -- the model stays the documented
+        lower bound and the tests pin the single-leaf case exactly.
+        """
+        if self.kind == "bf16":
+            return p_total, 2
+        if self.kind == "topk":
+            return topk_keep_count(p_total, self.frac), itemsize + 4
+        return p_total, itemsize
+
+    def wire_bytes(self, p_total: int, itemsize: int = 4) -> int:
+        elems, per_elem = self.wire_layout(p_total, itemsize)
+        return elems * per_elem
+
+    def wire_ratio(self, p_total: int, itemsize: int = 4) -> float:
+        """Closed-form compressed/uncompressed byte ratio (the bench bound)."""
+        return self.wire_bytes(p_total, itemsize) / (p_total * itemsize)
+
+
+def make_compressor(spec: "Compressor | str | None") -> "Compressor | None":
+    """Normalize a compression spec: None, a Compressor, or a string.
+
+    Strings: ``"none"``/``"identity"``, ``"bf16"``, ``"topk"`` (default
+    keep fraction 0.25) or ``"topk:<frac>"``; any of them may append a
+    ``:g<gamma>`` suffix for the CHOCO consensus step size (e.g.
+    ``"topk:0.1:g0.25"``).
+    """
+    if spec is None:
+        return None
+    if isinstance(spec, Compressor):
+        return spec
+    if not isinstance(spec, str):
+        raise TypeError(
+            f"compression must be None, a Compressor, or a spec string; got "
+            f"{type(spec).__name__} (bare callables have no byte model -- "
+            f"wrap the format as a Compressor kind instead)"
+        )
+    parts = spec.split(":")
+    kind, gamma, frac = parts[0], 1.0, None
+    for tok in parts[1:]:
+        if tok.startswith("g") and tok != "g":
+            gamma = float(tok[1:])
+        elif frac is None and kind == "topk":
+            frac = float(tok)
+        else:
+            raise ValueError(f"unknown compression spec {spec!r}")
+    if kind in ("none", "identity"):
+        return Compressor("identity", gamma=gamma)
+    if kind == "bf16":
+        return Compressor("bf16", gamma=gamma)
+    if kind == "topk":
+        return Compressor("topk", 0.25 if frac is None else frac, gamma=gamma)
+    raise ValueError(f"unknown compression spec {spec!r}")
+
+
+def _require_wire(spec) -> Compressor:
+    compressor = make_compressor(spec)
+    if compressor is None:
+        raise ValueError(
+            "an EF transport needs a wire format; pass "
+            "compression='identity' for the uncompressed route"
+        )
+    return compressor
+
+
+def ef_init(params: PyTree) -> PyTree:
+    """Zero EF memory shaped like ``params`` (f32 -- the wire dtype)."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), params
+    )
+
+
+def _apply_stacked(compressor, x: jax.Array) -> jax.Array:
+    """Apply a wire format to a STACKED (n, ...) operand.
+
+    A :class:`Compressor` models one node's payload, so it is vmapped
+    over the node axis (each node top-k's / quantizes its own row). A
+    bare callable keeps the legacy contract: applied to the whole
+    operand verbatim.
+    """
+    if isinstance(compressor, Compressor):
+        return jax.vmap(compressor)(x)
+    return compressor(x)
 
 
 def ef_gossip_step(
     theta_half: jax.Array,
     ef_memory: jax.Array,
     W: jax.Array,
-    compressor: Compressor,
+    compressor: "Compressor | CompressorFn",
 ) -> tuple[jax.Array, jax.Array]:
     """One error-feedback compressed mixing step on stacked (n, ...) params.
 
-    Returns (theta_mixed, new_ef_memory). With the identity compressor this
-    reduces exactly to the paper's Algorithm 1 mixing.
+    Returns (theta_mixed, new_ef_memory). The dense reference operator:
+    the schedule/pool transports must agree with it on the same W
+    (property-tested). With the identity :class:`Compressor` this IS the
+    uncompressed mixing -- the identity wire routes to the plain
+    ``W @ theta`` contraction at trace time, so the equality is bitwise,
+    not approximate (the rot detector the CI smoke re-checks).
     """
+    if isinstance(compressor, Compressor) and compressor.routes_to_plain:
+        mixed = jnp.tensordot(
+            W.astype(theta_half.dtype), theta_half, axes=([1], [0])
+        )
+        return mixed, ef_memory
+    g = compressor.gamma if isinstance(compressor, Compressor) else 1.0
     to_send = theta_half + ef_memory
-    compressed = compressor(to_send)
+    compressed = _apply_stacked(compressor, to_send)
     new_memory = to_send - compressed
     # consensus on the compressed views: theta_i + sum_j W_ij c_j - c_i
     mixed_c = jnp.tensordot(W.astype(compressed.dtype), compressed, axes=([1], [0]))
-    theta_mixed = theta_half + mixed_c - compressed
+    if g == 1.0:
+        theta_mixed = theta_half + mixed_c - compressed
+    else:
+        theta_mixed = theta_half + g * (mixed_c - compressed)
     return theta_mixed, new_memory
+
+
+def ef_mix_schedule_arrays(
+    params_stack: PyTree,
+    ef: PyTree,
+    arrays: ScheduleArrays,
+    compressor: Compressor,
+) -> tuple[PyTree, PyTree]:
+    """EF-compressed ``ScheduleArrays`` mixing on stacked parameters.
+
+    The data-plane twin of :func:`ef_gossip_step`: gammas and perms are
+    traced data (hot-swappable, zero retraces) and the compressed views
+    mix through the same L-gather scan as :func:`mix_schedule_arrays`.
+    The EF memory is an ordinary pytree the caller carries through its
+    rollout scan -- fixed shape, so swaps stay value changes.
+
+    With the identity wire this routes to the plain arrays transport
+    (bitwise) and returns ``ef`` untouched.
+    """
+    compressor = _require_wire(compressor)
+    if compressor.routes_to_plain:
+        return mix_schedule_arrays(params_stack, arrays), ef
+    g = compressor.gamma
+    x_leaves, treedef = jax.tree_util.tree_flatten(params_stack)
+    e_leaves = jax.tree_util.tree_leaves(ef)
+    if len(e_leaves) != len(x_leaves):
+        raise ValueError("ef memory must mirror the parameter pytree")
+    outs, new_es = [], []
+    for x, e in zip(x_leaves, e_leaves):
+        to_send = x + e.astype(x.dtype)
+        c = _apply_stacked(compressor, to_send)
+        new_es.append((to_send - c).astype(e.dtype))
+        mc = _mix_arrays_flat(c, arrays)
+        outs.append(x + mc - c if g == 1.0 else x + g * (mc - c))
+    return (
+        jax.tree_util.tree_unflatten(treedef, outs),
+        jax.tree_util.tree_unflatten(treedef, new_es),
+    )
+
+
+def _ef_leaf_map(params: PyTree, ef: PyTree, fn, serialize: bool):
+    """Two-tree leaf map with the gather-serialization chaining of
+    ``mixing._serialized_leaf_map`` (one leaf's all-gather live at a
+    time), for leaf fns returning (mixed, new_ef) pairs."""
+    x_leaves, treedef = jax.tree_util.tree_flatten(params)
+    e_leaves = jax.tree_util.tree_leaves(ef)
+    if len(e_leaves) != len(x_leaves):
+        raise ValueError("ef memory must mirror the parameter pytree")
+    outs, new_es = [], []
+    token = None
+    for x, e in zip(x_leaves, e_leaves):
+        if serialize and token is not None:
+            x, _ = jax.lax.optimization_barrier((x, token))
+        out, new_e = fn(x, e)
+        token = out
+        outs.append(out)
+        new_es.append(new_e)
+    return (
+        jax.tree_util.tree_unflatten(treedef, outs),
+        jax.tree_util.tree_unflatten(treedef, new_es),
+    )
+
+
+def mix_arrays_sharded_ef(
+    params: PyTree,
+    ef: PyTree,
+    arrays: ScheduleArrays,
+    axis_name: str,
+    compressor: Compressor,
+    *,
+    serialize: bool = True,
+) -> tuple[PyTree, PyTree]:
+    """EF-compressed ``mix_arrays_sharded`` (inside shard_map).
+
+    Each node compresses its OWN payload once (``c_i = C(theta_i +
+    e_i)``), the all-gather moves the compressed views (the metered
+    wire), and the slot-order f32 accumulation mirrors
+    :func:`mix_ppermute_pool_ef` op-for-op -- so the two compressed
+    transports agree bitwise on the same schedule, exactly like their
+    uncompressed twins. Identity wire routes to the plain transport.
+    """
+    compressor = _require_wire(compressor)
+    if compressor.routes_to_plain:
+        return (
+            mix_arrays_sharded(params, arrays, axis_name, serialize=serialize),
+            ef,
+        )
+    step = compressor.gamma
+    i = jax.lax.axis_index(axis_name)
+    srcs = arrays.perms[:, i]
+
+    def leaf(x, e):
+        x32 = x.astype(jnp.float32)
+        to_send = x32 + e.astype(jnp.float32)
+        c = compressor(to_send)
+        new_e = to_send - c
+        g = jax.lax.all_gather(c, axis_name)
+
+        def body(acc, gs):
+            gamma, src = gs
+            contrib = jax.lax.dynamic_index_in_dim(g, src, axis=0, keepdims=False)
+            return acc + gamma.astype(jnp.float32) * contrib, None
+
+        acc, _ = jax.lax.scan(body, jnp.zeros_like(x32), (arrays.gammas, srcs))
+        out = x32 + acc - c if step == 1.0 else x32 + step * (acc - c)
+        return out.astype(x.dtype), new_e.astype(e.dtype)
+
+    return _ef_leaf_map(params, ef, leaf, serialize)
+
+
+def mix_dense_sharded_ef(
+    params: PyTree,
+    ef: PyTree,
+    W: jax.Array,
+    axis_name: str,
+    compressor: Compressor,
+    *,
+    serialize: bool = True,
+) -> tuple[PyTree, PyTree]:
+    """EF-compressed ``mix_dense_sharded``: CHOCO gossip on any dense W.
+
+    ``theta_i + sum_j W_ij c_j - c_i`` with the row contraction over the
+    gathered COMPRESSED views. Identity wire routes to the plain
+    transport (bitwise).
+    """
+    compressor = _require_wire(compressor)
+    if compressor.routes_to_plain:
+        return (
+            mix_dense_sharded(params, W, axis_name, serialize=serialize),
+            ef,
+        )
+    step = compressor.gamma
+    i = jax.lax.axis_index(axis_name)
+    row = W[i].astype(jnp.float32)
+
+    def leaf(x, e):
+        x32 = x.astype(jnp.float32)
+        to_send = x32 + e.astype(jnp.float32)
+        c = compressor(to_send)
+        new_e = to_send - c
+        g = jax.lax.all_gather(c, axis_name)
+        acc = jnp.tensordot(row, g, axes=([0], [0]))
+        out = x32 + acc - c if step == 1.0 else x32 + step * (acc - c)
+        return out.astype(x.dtype), new_e.astype(e.dtype)
+
+    return _ef_leaf_map(params, ef, leaf, serialize)
+
+
+def mix_ppermute_pool_ef(
+    params: PyTree,
+    ef: PyTree,
+    gammas: jax.Array,
+    pool: PermPool,
+    axis_name: str,
+    compressor: Compressor,
+) -> tuple[PyTree, PyTree]:
+    """EF-compressed staged-pool mixing: the ppermutes ship compressed
+    payloads.
+
+    The sparse-wire composition the ROADMAP item asks for: the pool
+    already cut WHO talks (``n_comm_slots`` staged atoms instead of an
+    all-gather), the wire format now cuts WHAT each atom ships --
+    ``n_comm_slots x wire_bytes(P)`` received per node per step, e.g.
+    0.5x on bf16 on top of the pool's sparsity win. Every non-identity
+    slot still executes unconditionally (gamma 0 zeroes the
+    contribution, not the transfer), and the compressor is static while
+    gammas and the EF memory are data -- an in-pool topology swap under
+    compression is still a pure value change (retraces == 0, asserted
+    in the benches).
+
+    Accumulation (f32, slot order, zeros init) and the ``x + acc - c``
+    combine mirror :func:`mix_arrays_sharded_ef` op-for-op, so pool and
+    all-gather agree bitwise on the same schedule under the same wire.
+    Identity wire routes to :func:`mix_ppermute_pool` (bitwise).
+    """
+    compressor = _require_wire(compressor)
+    if compressor.routes_to_plain:
+        return mix_ppermute_pool(params, gammas, pool, axis_name), ef
+    step = compressor.gamma
+    n = pool.n_nodes
+    ident = pool.identity
+    if gammas.shape != (pool.capacity,):
+        raise ValueError(
+            f"gammas must be ({pool.capacity},) to match the pool, "
+            f"got {gammas.shape}"
+        )
+
+    def leaf(x, e):
+        x32 = x.astype(jnp.float32)
+        to_send = x32 + e.astype(jnp.float32)
+        c = compressor(to_send)
+        new_e = to_send - c
+        acc = jnp.zeros_like(x32)
+        for l, perm in enumerate(pool.perms):
+            if perm == ident:
+                contrib = c
+            else:
+                pairs = [(int(perm[i]), i) for i in range(n)]
+                contrib = jax.lax.ppermute(c, axis_name, pairs)
+            acc = acc + gammas[l].astype(jnp.float32) * contrib
+        out = x32 + acc - c if step == 1.0 else x32 + step * (acc - c)
+        return out.astype(x.dtype), new_e.astype(e.dtype)
+
+    # no gather to serialize: ppermute payloads are leaf-sized (the
+    # plain pool transport tree_maps for the same reason)
+    return _ef_leaf_map(params, ef, leaf, serialize=False)

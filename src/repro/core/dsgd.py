@@ -72,7 +72,9 @@ def dsgd_step_stacked(
     schedule: BirkhoffSchedule | ScheduleArrays | None = None,
     transport: str = "auto",
     single_buffer: bool = False,
-) -> tuple[PyTree, DSGDState]:
+    ef: PyTree | None = None,
+    compression=None,
+) -> tuple[PyTree, DSGDState] | tuple[PyTree, DSGDState, PyTree]:
     """One D-SGD iteration on stacked per-node parameters (simulator form).
 
     Args:
@@ -93,8 +95,30 @@ def dsgd_step_stacked(
       single_buffer: on the schedule transport, flatten the pytree into one
         (n, P) buffer so mixing is one dispatch per step (for eager use;
         keep False inside jit, where per-leaf gathers fuse copy-free).
+      ef / compression: EF-compressed gossip. When ``ef`` (a pytree of
+        per-node error-feedback memories, see ``compression.ef_init``)
+        is given, the half-step mixes through
+        ``compression.ef_mix_schedule_arrays`` under the ``compression``
+        wire format and the call returns a TRIPLE ``(params, state,
+        new_ef)`` -- the caller threads the memory through its rollout
+        carry (fixed shape: hot swaps stay value changes). Requires the
+        data-plane ``ScheduleArrays`` schedule: the compressed wire is
+        built for the retrace-free transports.
     """
     half, new_mom = _local_update(params_stack, grads_stack, state, lr, momentum)
+    if ef is not None:
+        from .compression import ef_mix_schedule_arrays
+
+        if not isinstance(schedule, ScheduleArrays):
+            raise ValueError(
+                "EF-compressed stacked mixing needs the schedule as "
+                "ScheduleArrays (the hot-swappable data plane); a static "
+                "BirkhoffSchedule or dense-W path carries no EF memory"
+            )
+        mixed, new_ef = ef_mix_schedule_arrays(half, ef, schedule, compression)
+        return mixed, DSGDState(step=state.step + 1, momentum=new_mom), new_ef
+    if compression is not None:
+        raise ValueError("compression without ef: pass ef=ef_init(params)")
     mixed = mix_stacked(
         half,
         W=W,

@@ -32,6 +32,14 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.core.compression import (
+    Compressor,
+    ef_init,
+    make_compressor,
+    mix_arrays_sharded_ef,
+    mix_dense_sharded_ef,
+    mix_ppermute_pool_ef,
+)
 from repro.core.mixing import (
     BirkhoffSchedule,
     PermPool,
@@ -81,9 +89,25 @@ class TrainSetup:
     # modeled bytes RECEIVED per node per mixing step (see
     # train.metrics.mix_bytes_per_step); None when nothing communicates
     comm_bytes_per_step: int | None = None
+    # resolved wire format (repro.core.compression.Compressor) when the
+    # online transports run EF-compressed gossip; None = uncompressed
+    compression: "Compressor | None" = None
 
     def abstract_params(self) -> PyTree:
         return jax.eval_shape(self.init_params, jax.random.PRNGKey(0))
+
+    def init_opt_state(self, params: PyTree):
+        """Initial opt/comm state for ``train_step``, matching this
+        setup's carried-state convention: ``None`` when nothing is
+        carried, a bare momentum tree for plain momentum, a dict with
+        ``"step"`` (gossip_every), ``"m"`` (momentum), and/or ``"ef"``
+        (the per-node error-feedback memory of compressed mixing --
+        required whenever ``compression`` is set)."""
+        if self._init_opt_state is None:
+            raise ValueError(
+                "init_opt_state needs a setup built by make_train_setup"
+            )
+        return self._init_opt_state(params)
 
     def multi_step_fn(self, rollout: str = "scan") -> Callable:
         """Multi-step train fn: ``(params, opt_state, batches) -> (params,
@@ -340,6 +364,12 @@ class TrainSetup:
         default=None, repr=False, compare=False
     )
 
+    # builds the initial opt/comm state (set by make_train_setup, which
+    # knows the momentum/gossip_every/compression carry convention)
+    _init_opt_state: Callable | None = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+
     # cached jax.jit of train_step for the "loop" rollout (recompiling it
     # per multi_step call would defeat the A/B comparison)
     _jitted_step: Callable | None = dataclasses.field(
@@ -437,6 +467,7 @@ def make_train_setup(
     online_w: bool = False,
     sharded_transport: str = "auto",
     pool: PermPool | None = None,
+    compression: "Compressor | str | None" = None,
 ) -> TrainSetup:
     """Build the distributed train step for (cfg, mesh, mode).
 
@@ -474,7 +505,44 @@ def make_train_setup(
     topology analysis): amortizes gossip bytes by 1/k. The step function
     then takes a step counter through the momentum_state slot convention
     (see train_step signature below: ``step`` is carried in opt state).
+
+    ``compression`` (a ``repro.core.compression.Compressor`` or a spec
+    string -- ``"identity"``, ``"bf16"``, ``"topk:<frac>"``) turns the
+    online mixing into CHOCO-style EF-compressed gossip: every
+    transport's payload passes through the wire format, the per-node
+    error-feedback memory travels in the opt-state dict under ``"ef"``
+    (build it with ``TrainSetup.init_opt_state`` -- it rides the scan
+    carry, so hot swaps stay zero-retrace), and
+    ``TrainSetup.comm_bytes_per_step`` meters the compressed wire
+    (bf16: exactly half; top-k: k value+index pairs). Only the
+    retrace-free dsgd online transports compose: fsdp (all-reduce, no
+    per-edge payload -- e.g. ``compression="topk:0.1"`` with
+    ``mode="fsdp"`` is meaningless), dsgd_pod (GSPMD einsum, no EF
+    carry), and offline (static-schedule) setups are rejected
+    explicitly. The identity wire routes to the uncompressed transports
+    at trace time, so it is bitwise the ``compression=None`` run -- the
+    A/B control arm.
     """
+    compressor = make_compressor(compression)
+    if compressor is not None:
+        if mode == "fsdp":
+            raise ValueError(
+                f"compression={compressor.label!r} is incompatible with "
+                "mode='fsdp': the C-PSGD baseline mixes by in-network "
+                "all-reduce, so there is no per-edge gossip payload for a "
+                "wire format to compress"
+            )
+        if mode == "dsgd_pod":
+            raise ValueError(
+                f"compression={compressor.label!r} is incompatible with "
+                "mode='dsgd_pod': cross-pod mixing is a GSPMD einsum with "
+                "no EF memory carry; use mode='dsgd'"
+            )
+        if not online_w:
+            raise ValueError(
+                "compression rides the online (retrace-free) transports: "
+                "build with online_w=True"
+            )
     if online_w and mode == "fsdp":
         raise ValueError("online_w needs a node axis (dsgd/dsgd_pod); fsdp has no W")
     if online_w and schedule is not None:
@@ -569,6 +637,7 @@ def make_train_setup(
                 n_nodes=n_nodes,
                 p_total=p_total,
                 n_comm_atoms=pool.n_comm_slots if resolved_transport == "pool" else None,
+                compression=compressor,
             )
         elif schedule is not None:
             comm_bytes = mix_bytes_per_step(
@@ -676,6 +745,14 @@ def make_train_setup(
             step = m.get("step") if isinstance(m, dict) else None
             m_tree = m.get("m") if isinstance(m, dict) else m
             m1 = squeeze(m_tree) if momentum > 0.0 else None
+            ef_tree = m.get("ef") if isinstance(m, dict) else None
+            if compressor is not None and ef_tree is None:
+                raise ValueError(
+                    "compressed mixing carries its error-feedback memory in "
+                    "the opt state: pass momentum_state including an 'ef' "
+                    "entry (build it with TrainSetup.init_opt_state)"
+                )
+            e1 = squeeze(ef_tree) if ef_tree is not None else None
             # In dsgd_pod mode the within-pod `data` axis stays automatic:
             # GSPMD data-parallelizes the loss/grad over it (the batch input
             # sharding carries P(pod, data, ...)).
@@ -697,12 +774,38 @@ def make_train_setup(
                     )
                 return mix_ppermute(h, schedule, node_axis)
 
-            if gossip_every > 1:
-                if step is None:
-                    raise ValueError(
-                        "gossip_every > 1 needs a step counter: pass "
-                        "momentum_state={'step': jnp.zeros((), jnp.int32), 'm': ...}"
+            def do_mix_ef(he):
+                # EF-compressed online transports: same dispatch as
+                # do_mix, with the wire format static and the EF memory
+                # threaded as data (the hot-swap story is unchanged)
+                h, e = he
+                w = w_args[0]
+                if resolved_transport == "pool":
+                    return mix_ppermute_pool_ef(
+                        h, e, w, pool, node_axis, compressor
                     )
+                if isinstance(w, ScheduleArrays):
+                    return mix_arrays_sharded_ef(h, e, w, node_axis, compressor)
+                return mix_dense_sharded_ef(h, e, W=w, axis_name=node_axis,
+                                            compressor=compressor)
+
+            if gossip_every > 1 and step is None:
+                raise ValueError(
+                    "gossip_every > 1 needs a step counter: pass "
+                    "momentum_state={'step': jnp.zeros((), jnp.int32), 'm': ...}"
+                )
+            new_e1 = None
+            if compressor is not None:
+                if gossip_every > 1:
+                    mixed, new_e1 = jax.lax.cond(
+                        jnp.mod(step, gossip_every) == 0,
+                        do_mix_ef,
+                        lambda he: he,
+                        (half, e1),
+                    )
+                else:
+                    mixed, new_e1 = do_mix_ef((half, e1))
+            elif gossip_every > 1:
                 mixed = jax.lax.cond(
                     jnp.mod(step, gossip_every) == 0, do_mix, lambda h: h, half
                 )
@@ -711,7 +814,15 @@ def make_train_setup(
             loss_mean = jax.lax.pmean(loss, node_axis)
             new_m_tree = unsqueeze(new_m) if momentum > 0.0 else m_tree
             if isinstance(m, dict):
-                new_m_out = {"step": step + 1, "m": new_m_tree}
+                new_m_out = {}
+                if "step" in m:
+                    new_m_out["step"] = step + 1
+                if "m" in m:
+                    new_m_out["m"] = new_m_tree
+                if "ef" in m:
+                    new_m_out["ef"] = (
+                        unsqueeze(new_e1) if new_e1 is not None else ef_tree
+                    )
             else:
                 new_m_out = new_m_tree
             return unsqueeze(mixed), new_m_out, loss_mean
@@ -721,7 +832,8 @@ def make_train_setup(
         )
         m_inner = node_specs if momentum > 0.0 else None
         if isinstance(momentum_state, dict):
-            mom_specs = {"step": P(), "m": m_inner}
+            key_spec = {"step": P(), "m": m_inner, "ef": node_specs}
+            mom_specs = {k: key_spec[k] for k in momentum_state}
         else:
             mom_specs = m_inner
         bspec = jax.tree_util.tree_map(lambda _: P(node_axis), batch)
@@ -756,7 +868,25 @@ def make_train_setup(
             cfg, mesh, mode=mode, schedule=schedule, lr=lr, momentum=momentum,
             impl=impl, grad_accum=grad_accum, gossip_every=gossip_every,
             online_w=online_w, sharded_transport="pool", pool=new_pool,
+            compression=compressor,
         )
+
+    def init_opt_state(params: PyTree):
+        # the momentum_state the step expects for this configuration:
+        # a dict of the present slots ({'step','m','ef'} keys), a bare
+        # momentum tree when only momentum is on, None when stateless
+        out: dict = {}
+        if gossip_every > 1:
+            out["step"] = jnp.zeros((), jnp.int32)
+        if momentum > 0.0:
+            out["m"] = jax.tree_util.tree_map(jnp.zeros_like, params)
+        if compressor is not None:
+            out["ef"] = ef_init(params)
+        if not out:
+            return None
+        if set(out) == {"m"}:
+            return out["m"]
+        return out
 
     return TrainSetup(
         train_step=train_step,
@@ -769,5 +899,7 @@ def make_train_setup(
         sharded_transport=resolved_transport,
         pool=pool,
         comm_bytes_per_step=comm_bytes,
+        compression=compressor,
         _rebuild=rebuild,
+        _init_opt_state=init_opt_state,
     )

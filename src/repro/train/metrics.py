@@ -34,6 +34,7 @@ def mix_bytes_per_step(
     n_comm_atoms: int | None = None,
     itemsize: int = 4,
     alive_frac: float = 1.0,
+    compression=None,
 ) -> int:
     """Bytes RECEIVED per node per mixing step, by transport.
 
@@ -65,22 +66,47 @@ def mix_bytes_per_step(
     is the fault-free model above; the faults runner instead keeps the
     full-rate model here and meters per-step delivery honestly through
     :meth:`CommMeter.tick`'s ``delivered_frac``.
+
+    ``compression`` (a ``repro.core.compression.Compressor``, a spec
+    string like ``"bf16"`` / ``"topk:0.25"``, or None) swaps the
+    per-payload wire layout: the element count and per-element width
+    above become the compressor's ``wire_layout(p_total, itemsize)`` --
+    bf16 ships the same elements at 2 bytes (EXACTLY half the f32
+    model, including under fractional ``alive_frac``), top-k ships
+    ``k = max(1, int(P * frac))`` value+index pairs at ``itemsize + 4``
+    bytes each. Only the payload-moving transports compose: ``dense``
+    moves nothing, and ``allreduce`` reduces in-network (there is no
+    per-edge payload a CHOCO wire could compress), so a non-identity
+    compressor there is rejected rather than silently ignored.
     """
+    from repro.core.compression import make_compressor
+
+    comp = make_compressor(compression)
     if n_nodes < 1 or p_total < 0:
         raise ValueError(f"bad n_nodes={n_nodes} / p_total={p_total}")
     if not 0.0 <= alive_frac <= 1.0:
         raise ValueError(f"alive_frac must be in [0, 1], got {alive_frac}")
+    if comp is None or comp.is_identity or p_total == 0:
+        wire_elems, wire_itemsize = p_total, itemsize
+    else:
+        wire_elems, wire_itemsize = comp.wire_layout(p_total, itemsize)
     if transport == "dense":
         return 0
     if transport == "allgather":
         # (alive - 1) peers actually send; floor at zero for a lone node
         senders = max(alive_frac * n_nodes - 1.0, 0.0)
-        return int(senders * p_total) * itemsize
+        return int(senders * wire_elems) * wire_itemsize
     if transport in ("ppermute", "pool"):
         if n_comm_atoms is None:
             raise ValueError(f"transport={transport!r} needs n_comm_atoms")
-        return int(alive_frac * n_comm_atoms * p_total) * itemsize
+        return int(alive_frac * n_comm_atoms * wire_elems) * wire_itemsize
     if transport == "allreduce":
+        if comp is not None and not comp.is_identity:
+            raise ValueError(
+                "allreduce has no compressed wire: the ring reduces "
+                "in-network, so a CHOCO compressor does not apply -- use a "
+                "gossip transport (allgather/ppermute/pool) for compression"
+            )
         n_alive = max(alive_frac * n_nodes, 1.0)
         return int(2 * (n_alive - 1) / n_alive * p_total) * itemsize
     raise ValueError(f"unknown transport {transport!r}")

@@ -32,13 +32,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.compression import ef_init, make_compressor
 from repro.core.dsgd import dsgd_init, dsgd_step_stacked
 from repro.core.mixing import BirkhoffSchedule, ScheduleArrays
 from repro.data.synthetic import MeanEstimationTask
 from .metrics import CommMeter, MetricLogger, consensus_distance, mix_bytes_per_step
 
 
-def _online_comm_meter(n_nodes: int, params_per_node: int) -> CommMeter:
+def _online_comm_meter(
+    n_nodes: int, params_per_node: int, compression=None
+) -> CommMeter:
     """Modeled comm meter for a data-plane (hot-swappable) schedule.
 
     The simulator runs on one host, so these are the bytes the SAME
@@ -46,10 +49,12 @@ def _online_comm_meter(n_nodes: int, params_per_node: int) -> CommMeter:
     there is the all-gather (``mix_arrays_sharded``) -- ``(n-1) P``
     received per node per step -- until a ``PermPool`` trainer brings
     it down to the staged slot count (``lm_trainer.run_segments``
-    meters that case from its own transport).
+    meters that case from its own transport). ``compression`` swaps in
+    the compressed wire layout (``(n-1) x wire_bytes(P)``).
     """
     return CommMeter(per_step_bytes=mix_bytes_per_step(
         "allgather", n_nodes=n_nodes, p_total=params_per_node,
+        compression=compression,
     ))
 
 PyTree = Any
@@ -82,6 +87,7 @@ def run_mean_estimation(
     zs: np.ndarray | None = None,
     on_segment=None,
     segment_len: int | None = None,
+    compression=None,
 ) -> dict:
     """D-SGD on ``F_i(theta, z) = (theta - z)^2``; returns error traces.
 
@@ -106,9 +112,18 @@ def run_mean_estimation(
     (how the drift scenarios of ``repro.data.drift`` are injected --
     the observation noise is exogenous to training, so a drifting task
     is just a different precomputed stream).
+
+    ``compression`` (a ``repro.core.compression.Compressor`` or a spec
+    string like ``"bf16"`` / ``"topk:0.25"``) mixes through the
+    EF-compressed data-plane transport instead: the error-feedback
+    memory rides the rollout carry (fixed shape -- hot swaps still
+    retrace nothing) and the returned ``comm`` meters the compressed
+    wire. Requires the online ``ScheduleArrays`` schedule; the identity
+    wire routes to the uncompressed transport bitwise.
     """
     if rollout not in ("scan", "loop"):
         raise ValueError(f"unknown rollout {rollout!r}")
+    compressor = make_compressor(compression)
     n = task.n_nodes
     rng = np.random.default_rng(seed)
     theta = jnp.zeros((n, 1))
@@ -134,24 +149,41 @@ def run_mean_estimation(
             "on_segment hot-swapping needs the schedule as ScheduleArrays "
             "(a static BirkhoffSchedule is baked into the trace)"
         )
+    if compressor is not None and not online:
+        raise ValueError(
+            "compression rides the retrace-free data plane: pass the "
+            "schedule as ScheduleArrays (static schedules have no EF carry)"
+        )
 
     def make_step(sched):
         def step(carry, z):
-            theta, st = carry
+            if compressor is not None:
+                theta, st, e = carry
+            else:
+                theta, st = carry
             grads = 2.0 * (theta - z.mean(axis=1, keepdims=True))
-            theta, st = dsgd_step_stacked(
-                theta, grads, st, Wj, lr,
-                use_kernel=use_kernel, schedule=sched, transport=transport,
-            )
+            if compressor is not None:
+                theta, st, e = dsgd_step_stacked(
+                    theta, grads, st, Wj, lr,
+                    use_kernel=use_kernel, schedule=sched, transport=transport,
+                    ef=e, compression=compressor,
+                )
+                new_carry = (theta, st, e)
+            else:
+                theta, st = dsgd_step_stacked(
+                    theta, grads, st, Wj, lr,
+                    use_kernel=use_kernel, schedule=sched, transport=transport,
+                )
+                new_carry = (theta, st)
             err = jnp.square(theta[:, 0] - theta_star)
-            return (theta, st), (jnp.mean(err), jnp.max(err), jnp.min(err))
+            return new_carry, (jnp.mean(err), jnp.max(err), jnp.min(err))
         return step
 
     if online:
         return _run_mean_estimation_online(
             theta, state, zs, make_step, schedule,
             steps=steps, segment_len=segment_len, on_segment=on_segment,
-            rollout=rollout,
+            rollout=rollout, compressor=compressor,
         )
 
     step = make_step(schedule)
@@ -195,6 +227,7 @@ def _run_mean_estimation_online(
     segment_len: int | None,
     on_segment,
     rollout: str,
+    compressor=None,
 ) -> dict:
     """Mean-estimation driver with the schedule threaded as data.
 
@@ -203,24 +236,26 @@ def _run_mean_estimation_online(
     computation. ``n_traces`` in the returned dict counts actual traces
     of the rollout: 1 per distinct segment length (exactly 1 when
     ``segment_len`` divides ``steps``), regardless of how many times
-    the schedule was swapped.
+    the schedule was swapped. Under ``compressor`` the EF memory joins
+    the carry (fixed shape, like the schedule itself), so the count
+    stays 1 in compressed runs too.
     """
     n_traces = 0
     if rollout == "scan":
         def roll_impl(carry, zs_seg):
             nonlocal n_traces
             n_traces += 1
-            theta, st, sa = carry
-            (theta, st), traces = jax.lax.scan(make_step(sa), (theta, st), zs_seg)
-            return (theta, st, sa), traces
+            inner, sa = carry[:-1], carry[-1]
+            inner, traces = jax.lax.scan(make_step(sa), inner, zs_seg)
+            return inner + (sa,), traces
         roll = jax.jit(roll_impl)
     else:
         def step_impl(carry, z):
             nonlocal n_traces
             n_traces += 1
-            theta, st, sa = carry
-            (theta, st), out = make_step(sa)((theta, st), z)
-            return (theta, st, sa), out
+            inner, sa = carry[:-1], carry[-1]
+            inner, out = make_step(sa)(inner, z)
+            return inner + (sa,), out
         step_j = jax.jit(step_impl)
 
         def roll(carry, zs_seg):
@@ -236,10 +271,15 @@ def _run_mean_estimation_online(
     seg = int(segment_len) if segment_len is not None else max(steps, 1)
     if seg < 1:
         raise ValueError(f"segment_len must be >= 1, got {segment_len}")
-    carry = (theta, state, sched0)
+    if compressor is not None:
+        carry = (theta, state, ef_init(theta), sched0)
+    else:
+        carry = (theta, state, sched0)
     mse_l, mx_l, mn_l = [], [], []
     swaps: list[int] = []
-    meter = _online_comm_meter(theta.shape[0], int(np.prod(theta.shape[1:])))
+    meter = _online_comm_meter(
+        theta.shape[0], int(np.prod(theta.shape[1:])), compression=compressor
+    )
     t0 = 0
     while t0 < steps:
         length = min(seg, steps - t0)
@@ -254,7 +294,7 @@ def _run_mean_estimation_online(
             # would burn a warm solve whose schedule nothing executes
             new_sa = on_segment(t0 - 1)
             if new_sa is not None:
-                carry = (carry[0], carry[1], new_sa)
+                carry = carry[:-1] + (new_sa,)
                 swaps.append(t0 - 1)
     theta = carry[0]
     empty = np.zeros((0,))
@@ -266,6 +306,7 @@ def _run_mean_estimation_online(
         "n_traces": n_traces,
         "swaps": swaps,
         "comm": meter.summary(),
+        "compression": compressor.label if compressor is not None else None,
     }
 
 
@@ -382,6 +423,7 @@ def run_classification(
     transport: str = "auto",
     rollout: str = "scan",
     on_segment=None,
+    compression=None,
 ) -> MetricLogger:
     """D-SGD classification with per-node local data (Algorithm 1).
 
@@ -399,7 +441,9 @@ def run_classification(
     zero retraces. The returned logger's ``aux`` dict records
     ``n_traces`` (compiled-rollout traces: one per distinct segment
     length -- swaps add none) and ``swaps`` (steps where a swap
-    landed).
+    landed). ``compression`` composes with the online path exactly as
+    in :func:`run_mean_estimation`: EF memory in the carry, compressed
+    wire in ``aux["comm"]``, zero extra traces.
     """
     if rollout not in ("scan", "loop"):
         raise ValueError(f"unknown rollout {rollout!r}")
@@ -408,6 +452,12 @@ def run_classification(
         raise ValueError(
             "on_segment hot-swapping needs the schedule as ScheduleArrays "
             "(a static BirkhoffSchedule is baked into the trace)"
+        )
+    compressor = make_compressor(compression)
+    if compressor is not None and not online:
+        raise ValueError(
+            "compression rides the retrace-free data plane: pass the "
+            "schedule as ScheduleArrays (static schedules have no EF carry)"
         )
     n = len(indices_per_node)
     num_classes = int(y.max()) + 1
@@ -428,7 +478,10 @@ def run_classification(
     grad_fn = jax.grad(classifier_loss)
 
     def step(carry, _):
-        if online:
+        if online and compressor is not None:
+            params, state, key, e, sa = carry
+            sched_t = sa
+        elif online:
             params, state, key, sa = carry
             sched_t = sa
         else:
@@ -445,13 +498,23 @@ def run_classification(
             return grad_fn(p, xb, yb), loss
 
         grads, losses = jax.vmap(node_grads)(params, data.x, data.y, data.lengths, keys)
-        new_params, new_state = dsgd_step_stacked(
-            params, grads, state, Wj, lr,
-            use_kernel=use_kernel, schedule=sched_t, transport=transport,
-        )
-        out_carry = (
-            (new_params, new_state, key, sa) if online else (new_params, new_state, key)
-        )
+        if compressor is not None:
+            new_params, new_state, new_e = dsgd_step_stacked(
+                params, grads, state, Wj, lr,
+                use_kernel=use_kernel, schedule=sched_t, transport=transport,
+                ef=e, compression=compressor,
+            )
+            out_carry = (new_params, new_state, key, new_e, sa)
+        else:
+            new_params, new_state = dsgd_step_stacked(
+                params, grads, state, Wj, lr,
+                use_kernel=use_kernel, schedule=sched_t, transport=transport,
+            )
+            out_carry = (
+                (new_params, new_state, key, sa)
+                if online
+                else (new_params, new_state, key)
+            )
         return out_carry, losses.mean()
 
     @jax.jit
@@ -509,7 +572,12 @@ def run_classification(
             n_traces += 1
             return jax.lax.scan(step, carry, None, length=length)
 
-        carry = (params, state, key, schedule) if online else (params, state, key)
+        if online and compressor is not None:
+            carry = (params, state, key, ef_init(params), schedule)
+        elif online:
+            carry = (params, state, key, schedule)
+        else:
+            carry = (params, state, key)
         t0 = 0
         for seg_len, evaluate in _eval_segments(steps, eval_every, segmented):
             carry, losses = roll(carry, seg_len)
@@ -524,7 +592,12 @@ def run_classification(
             return step(carry, x)
 
         step_j = jax.jit(step_impl)
-        carry = (params, state, key, schedule) if online else (params, state, key)
+        if online and compressor is not None:
+            carry = (params, state, key, ef_init(params), schedule)
+        elif online:
+            carry = (params, state, key, schedule)
+        else:
+            carry = (params, state, key)
         for t in range(steps):
             carry, loss = step_j(carry, None)
             log_segment(t, np.asarray(loss)[None], carry[0], do_eval)
@@ -540,7 +613,11 @@ def run_classification(
             n,
             sum(int(np.prod(np.asarray(p.shape))) for p in
                 jax.tree_util.tree_leaves(params0)),
+            compression=compressor,
         )
         meter.tick(steps)
         logger.aux["comm"] = meter.summary()
+        logger.aux["compression"] = (
+            compressor.label if compressor is not None else None
+        )
     return logger

@@ -1,0 +1,581 @@
+"""ISSUE 7: compressed-gossip wire formats + EF operators, property-tested.
+
+Four layers of contract:
+
+* top-k regression -- the exactly-k / tie / NaN / inf / truncation fixes
+  (the old ``>= threshold`` rule kept more than k on ties and kept
+  EVERYTHING when the k-th magnitude was 0.0);
+* CHOCO properties on random Birkhoff topologies (via the hypothesis
+  shim): identity wire bitwise-equals uncompressed mixing, per-step
+  node-mean preservation, the EF telescoping identity, and
+  schedule-transport == dense-reference agreement;
+* byte accounting -- ``mix_bytes_per_step`` / ``CommMeter`` under
+  compressed wire layouts (bf16 exactly halves, top-k charges values
+  AND indices, delivered/retransmit composition, allreduce rejection);
+* the online simulator drivers -- compressed runs hot-swap with zero
+  retraces and the identity wire reproduces the uncompressed run
+  bitwise end-to-end.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import topology as T
+from repro.core.compression import (
+    Compressor,
+    ef_gossip_step,
+    ef_init,
+    ef_mix_schedule_arrays,
+    make_compressor,
+    topk_compress,
+    topk_keep_count,
+    topk_mask,
+)
+from repro.core.dsgd import dsgd_init, dsgd_step_stacked
+from repro.core.mixing import (
+    ScheduleArrays,
+    mix_schedule_arrays,
+    schedule_from_matrix,
+    schedule_to_arrays,
+)
+from repro.train.metrics import CommMeter, mix_bytes_per_step
+from repro.train.trainer import run_mean_estimation
+
+
+def _random_arrays(rng: np.random.Generator, n: int, L: int) -> ScheduleArrays:
+    """Random Birkhoff schedule as data: identity + L-1 random atoms."""
+    perms = np.stack(
+        [np.arange(n)] + [rng.permutation(n) for _ in range(L - 1)]
+    )
+    gammas = rng.dirichlet(np.ones(L))
+    return ScheduleArrays(
+        gammas=jnp.asarray(gammas, jnp.float32),
+        perms=jnp.asarray(perms, jnp.int32),
+    )
+
+
+def _dense_of(arrays: ScheduleArrays) -> np.ndarray:
+    """W[i, j] = sum_l gamma_l [perms[l, i] == j] (receive convention)."""
+    g = np.asarray(arrays.gammas, np.float64)
+    p = np.asarray(arrays.perms)
+    L, n = p.shape
+    W = np.zeros((n, n))
+    for l in range(L):
+        W[np.arange(n), p[l]] += g[l]
+    return W
+
+
+# ---------------------------------------------------------------------------
+# top-k regression: exactly-k, ties, truncation, NaN/inf, determinism
+# ---------------------------------------------------------------------------
+
+def test_topk_keep_count_truncation():
+    assert topk_keep_count(10, 0.25) == 2      # int(2.5) truncates
+    assert topk_keep_count(7, 0.5) == 3
+    assert topk_keep_count(10, 0.01) == 1      # floor at one entry
+    assert topk_keep_count(10, 1.0) == 10
+    assert topk_keep_count(3, 0.99) == 2       # clamped below size
+    with pytest.raises(ValueError):
+        topk_keep_count(0, 0.5)
+
+
+def test_topk_exactly_k_on_ties():
+    """All-equal magnitudes: the >=-threshold rule kept ALL of them;
+    the stable-argsort rule keeps exactly k, lowest indices first."""
+    x = jnp.ones(10)
+    mask = np.asarray(topk_mask(x, 0.3))
+    assert mask.sum() == 3
+    assert mask[:3].all() and not mask[3:].any()
+
+
+def test_topk_many_zeros_leaf():
+    """All-zero payload: a 0.0 threshold passed everything; the mask
+    rule still keeps exactly k (of zeros -- the wire stays honest)."""
+    x = jnp.zeros(8)
+    mask = np.asarray(topk_mask(x, 0.5))
+    assert mask.sum() == 4
+    out = topk_compress(0.5)(x)
+    assert np.array_equal(np.asarray(out), np.zeros(8))
+
+
+def test_topk_nan_never_selected():
+    x = jnp.asarray([5.0, np.nan, 3.0, 1.0, 0.5, 0.1])
+    mask = np.asarray(topk_mask(x, 0.5))
+    assert mask.sum() == 3
+    assert not mask[1]
+    out = np.asarray(topk_compress(0.5)(x))
+    assert np.isfinite(out).all()
+
+
+def test_topk_inf_sorts_first():
+    x = jnp.asarray([1.0, 2.0, -np.inf, 3.0, 4.0, 5.0])
+    mask = np.asarray(topk_mask(x, 1 / 6))
+    assert mask.sum() == 1 and mask[2]
+
+
+def test_topk_frac_one_is_identity():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4, 7)), jnp.float32)
+    out = topk_compress(1.0)(x)
+    assert np.array_equal(np.asarray(out), np.asarray(x))
+
+
+def test_topk_deterministic_and_jit_consistent():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.integers(-3, 4, size=31), jnp.float32)  # many ties
+    eager = np.asarray(topk_mask(x, 0.4))
+    again = np.asarray(topk_mask(x, 0.4))
+    jitted = np.asarray(jax.jit(lambda v: topk_mask(v, 0.4))(x))
+    assert np.array_equal(eager, again)
+    assert np.array_equal(eager, jitted)
+    assert eager.sum() == topk_keep_count(31, 0.4)
+
+
+@settings(max_examples=5, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=64),
+    st.floats(min_value=0.01, max_value=1.0),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_topk_mask_count_property(size, frac, seed):
+    """Exactly ``topk_keep_count`` survivors for ANY payload -- ties,
+    zeros, repeated values included (values drawn from a tiny set to
+    force heavy magnitude collisions)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.choice([-1.0, 0.0, 0.5, 1.0], size=size), jnp.float32)
+    mask = np.asarray(topk_mask(x, frac))
+    assert int(mask.sum()) == topk_keep_count(size, frac)
+
+
+# ---------------------------------------------------------------------------
+# CHOCO properties on random Birkhoff topologies
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(
+    st.integers(min_value=3, max_value=12),
+    st.integers(min_value=2, max_value=5),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_identity_wire_bitwise_equals_uncompressed(n, L, seed):
+    """The identity Compressor routes to the PLAIN transport at trace
+    time, so equality is bitwise, not approximate -- in both the dense
+    reference and the data-plane schedule operator."""
+    rng = np.random.default_rng(seed)
+    arrays = _random_arrays(rng, n, L)
+    W = jnp.asarray(_dense_of(arrays), jnp.float32)
+    theta = jnp.asarray(rng.normal(size=(n, 5)), jnp.float32)
+    ef = ef_init(theta)
+
+    mixed, new_ef = ef_gossip_step(theta, ef, W, Compressor("identity"))
+    want = jnp.tensordot(W, theta, axes=([1], [0]))
+    assert np.array_equal(np.asarray(mixed), np.asarray(want))
+    assert np.array_equal(np.asarray(new_ef), np.asarray(ef))
+
+    mixed_a, ef_a = ef_mix_schedule_arrays(
+        theta, ef, arrays, Compressor("identity")
+    )
+    want_a = mix_schedule_arrays(theta, arrays)
+    assert np.array_equal(np.asarray(mixed_a), np.asarray(want_a))
+    assert np.array_equal(np.asarray(ef_a), np.asarray(ef))
+
+
+@settings(max_examples=5, deadline=None)
+@given(
+    st.integers(min_value=3, max_value=12),
+    st.sampled_from(["bf16", "topk:0.25", "topk:0.6", "topk:0.25:g0.25"]),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_ef_step_preserves_node_mean(n, wire, seed):
+    """1^T W = 1^T kills the ``W c - c`` term: compressed mixing moves
+    mass between nodes but never creates or destroys it."""
+    rng = np.random.default_rng(seed)
+    arrays = _random_arrays(rng, n, 3)
+    W = jnp.asarray(_dense_of(arrays), jnp.float32)
+    theta = jnp.asarray(rng.normal(size=(n, 6)), jnp.float32)
+    ef = jnp.asarray(rng.normal(size=(n, 6), scale=0.1), jnp.float32)
+    mixed, _ = ef_gossip_step(theta, ef, W, make_compressor(wire))
+    np.testing.assert_allclose(
+        np.asarray(mixed).mean(axis=0),
+        np.asarray(theta).mean(axis=0),
+        atol=1e-5,
+    )
+
+
+@settings(max_examples=5, deadline=None)
+@given(
+    st.integers(min_value=3, max_value=10),
+    st.sampled_from(["bf16", "topk:0.25", "topk:0.5"]),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_ef_telescoping_identity(n, wire, seed):
+    """theta_{t+1} - theta_t = (W - I)(theta_t + e_t - e_{t+1}):
+    the compressed view c equals the EF-memory difference, so whatever
+    the wire withholds stays in ``e`` and re-enters a later step --
+    nothing is silently lost."""
+    rng = np.random.default_rng(seed)
+    arrays = _random_arrays(rng, n, 3)
+    W64 = _dense_of(arrays)
+    W = jnp.asarray(W64, jnp.float32)
+    comp = make_compressor(wire)
+    theta = jnp.asarray(rng.normal(size=(n, 4)), jnp.float32)
+    e = jnp.zeros_like(theta)
+    for _ in range(3):
+        theta_new, e_new = ef_gossip_step(theta, e, W, comp)
+        c = np.asarray(theta, np.float64) + np.asarray(e, np.float64) \
+            - np.asarray(e_new, np.float64)
+        want = np.asarray(theta, np.float64) + (W64 - np.eye(n)) @ c
+        np.testing.assert_allclose(np.asarray(theta_new), want, atol=1e-4)
+        theta, e = theta_new, e_new
+
+
+@settings(max_examples=5, deadline=None)
+@given(
+    st.integers(min_value=3, max_value=12),
+    st.integers(min_value=2, max_value=5),
+    st.sampled_from(["bf16", "topk:0.25", "topk:0.5", "bf16:g0.5"]),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_compressed_schedule_matches_dense_reference(n, L, wire, seed):
+    """``ef_mix_schedule_arrays`` on a random Birkhoff schedule agrees
+    with ``ef_gossip_step`` on the reconstructed dense W: same EF memory
+    BITWISE (identical per-node compression ops) and same mixed output
+    up to f32 accumulation order."""
+    rng = np.random.default_rng(seed)
+    arrays = _random_arrays(rng, n, L)
+    W = jnp.asarray(_dense_of(arrays), jnp.float32)
+    comp = make_compressor(wire)
+    theta = jnp.asarray(rng.normal(size=(n, 7)), jnp.float32)
+    ef = jnp.asarray(rng.normal(size=(n, 7), scale=0.2), jnp.float32)
+    mixed_a, ef_a = ef_mix_schedule_arrays(theta, ef, arrays, comp)
+    mixed_d, ef_d = ef_gossip_step(theta, ef, W, comp)
+    assert np.array_equal(np.asarray(ef_a), np.asarray(ef_d))
+    np.testing.assert_allclose(
+        np.asarray(mixed_a), np.asarray(mixed_d), atol=1e-5
+    )
+
+
+def test_ef_memory_absorbs_dropped_mass():
+    """What top-k withholds is exactly the EF memory (to_send - c)."""
+    rng = np.random.default_rng(3)
+    arrays = _random_arrays(rng, 6, 3)
+    W = jnp.asarray(_dense_of(arrays), jnp.float32)
+    comp = make_compressor("topk:0.25")
+    theta = jnp.asarray(rng.normal(size=(6, 8)), jnp.float32)
+    ef = jnp.zeros_like(theta)
+    _, new_ef = ef_gossip_step(theta, ef, W, comp)
+    # per node: kept entries have zero memory, dropped entries keep the
+    # full withheld value
+    k = topk_keep_count(8, 0.25)
+    nz = np.count_nonzero(np.asarray(new_ef), axis=1)
+    assert (nz <= 8 - k).all()
+    np.testing.assert_allclose(
+        np.asarray(new_ef) + np.asarray(jax.vmap(comp)(theta)),
+        np.asarray(theta),
+        atol=1e-6,
+    )
+
+
+def test_dsgd_step_stacked_ef_triple_and_rejections():
+    rng = np.random.default_rng(0)
+    arrays = _random_arrays(rng, 6, 3)
+    theta = jnp.asarray(rng.normal(size=(6, 4)), jnp.float32)
+    grads = jnp.zeros_like(theta)
+    state = dsgd_init(theta)
+    ef = ef_init(theta)
+    comp = make_compressor("bf16")
+    out = dsgd_step_stacked(
+        theta, grads, state, None, 0.1, schedule=arrays, ef=ef,
+        compression=comp,
+    )
+    assert len(out) == 3
+    mixed, new_state, new_ef = out
+    assert int(new_state.step) == 1
+    assert np.asarray(new_ef).shape == np.asarray(ef).shape
+    # static (closure-format) schedules carry no EF memory
+    static_sched = schedule_from_matrix(T.ring(6))
+    with pytest.raises(ValueError, match="ScheduleArrays"):
+        dsgd_step_stacked(
+            theta, grads, state, None, 0.1, schedule=static_sched, ef=ef,
+            compression=comp,
+        )
+    with pytest.raises(ValueError, match="ef"):
+        dsgd_step_stacked(
+            theta, grads, state, None, 0.1, schedule=arrays,
+            compression=comp,
+        )
+
+
+# ---------------------------------------------------------------------------
+# byte accounting: wire layouts through mix_bytes_per_step / CommMeter
+# ---------------------------------------------------------------------------
+
+def test_bf16_halves_bytes_exactly():
+    for transport, kw in (
+        ("allgather", {}),
+        ("pool", {"n_comm_atoms": 3}),
+        ("ppermute", {"n_comm_atoms": 5}),
+    ):
+        for alive in (1.0, 0.7, 0.5):
+            plain = mix_bytes_per_step(
+                transport, n_nodes=8, p_total=1000, alive_frac=alive, **kw
+            )
+            bf = mix_bytes_per_step(
+                transport, n_nodes=8, p_total=1000, alive_frac=alive,
+                compression="bf16", **kw
+            )
+            assert bf * 2 == plain, (transport, alive, bf, plain)
+
+
+def test_topk_charges_values_and_indices():
+    # k = 250 of P = 1000, each entry 4B value + 4B int32 index
+    got = mix_bytes_per_step(
+        "allgather", n_nodes=8, p_total=1000, compression="topk:0.25"
+    )
+    assert got == 7 * 250 * 8
+    got_pool = mix_bytes_per_step(
+        "pool", n_nodes=8, p_total=1000, n_comm_atoms=3,
+        compression="topk:0.25",
+    )
+    assert got_pool == 3 * 250 * 8
+    # a sparsifier that only charged values would claim half this
+    assert got == 2 * mix_bytes_per_step(
+        "allgather", n_nodes=8, p_total=250
+    )
+
+
+def test_identity_compression_is_byte_neutral():
+    for transport, kw in (("allgather", {}), ("pool", {"n_comm_atoms": 3}),
+                          ("allreduce", {})):
+        plain = mix_bytes_per_step(transport, n_nodes=8, p_total=999, **kw)
+        ident = mix_bytes_per_step(
+            transport, n_nodes=8, p_total=999, compression="identity", **kw
+        )
+        assert ident == plain, transport
+
+
+def test_allreduce_rejects_compressed_wire():
+    with pytest.raises(ValueError, match="allreduce"):
+        mix_bytes_per_step(
+            "allreduce", n_nodes=8, p_total=100, compression="bf16"
+        )
+
+
+def test_comm_meter_compressed_delivery_composition():
+    """delivered_frac and retransmit compose without double-counting
+    on a compressed rate: delivered + dropped == modeled volume, and
+    retransmissions add on top of (never into) the modeled bytes."""
+    rate = mix_bytes_per_step(
+        "pool", n_nodes=8, p_total=1000, n_comm_atoms=3, compression="bf16"
+    )
+    meter = CommMeter(per_step_bytes=rate)
+    meter.tick(10, delivered_frac=0.6)
+    modeled = 10 * rate
+    assert meter.total_bytes == int(modeled * 0.6)
+    assert meter.dropped_bytes == modeled - int(modeled * 0.6)
+    meter.retransmit(123)
+    assert meter.retransmit_bytes == 123
+    assert meter.total_bytes == int(modeled * 0.6) + 123
+    assert meter.total_bytes + meter.dropped_bytes == modeled + 123
+    summary = meter.summary()
+    assert summary["per_step_bytes"] == rate
+    assert summary["steps"] == 10
+
+
+def test_make_compressor_parsing_and_validation():
+    assert make_compressor(None) is None
+    for spec in ("none", "identity"):
+        c = make_compressor(spec)
+        assert c.is_identity and c.label == "identity"
+    c = make_compressor("bf16")
+    assert c.kind == "bf16" and not c.is_identity
+    assert make_compressor("topk").frac == 0.25
+    tk = make_compressor("topk:0.1")
+    assert tk.kind == "topk" and tk.frac == 0.1
+    # labels round-trip through the parser
+    for spec in ("identity", "bf16", "topk:0.25", "topk:0.1"):
+        assert make_compressor(make_compressor(spec).label).label == \
+            make_compressor(spec).label
+    # a Compressor passes through untouched
+    assert make_compressor(tk) is tk
+    with pytest.raises(ValueError):
+        make_compressor("zstd")
+    with pytest.raises(TypeError):
+        make_compressor(lambda x: x)   # bare callables have no byte model
+    with pytest.raises(ValueError):
+        Compressor("gzip")
+    with pytest.raises(ValueError):
+        Compressor("topk", 0.0)
+    with pytest.raises(ValueError):
+        Compressor("topk", 1.5)
+
+
+def test_gamma_spec_parsing_and_validation():
+    """CHOCO consensus step size: ``:g<gamma>`` suffix on any wire."""
+    c = make_compressor("topk:0.1:g0.25")
+    assert (c.kind, c.frac, c.gamma) == ("topk", 0.1, 0.25)
+    assert make_compressor("bf16:g0.5").gamma == 0.5
+    assert make_compressor("topk:g0.5") == Compressor("topk", 0.25, 0.5)
+    assert make_compressor("identity:g0.7").gamma == 0.7
+    # labels round-trip, gamma=1 stays suffix-free
+    for spec in ("topk:0.1:g0.25", "bf16:g0.5", "bf16", "topk:0.25"):
+        c = make_compressor(spec)
+        assert make_compressor(c.label) == c
+    assert make_compressor("bf16").label == "bf16"
+    # only the UNDAMPED identity is the plain transport bitwise
+    assert make_compressor("identity").routes_to_plain
+    assert not make_compressor("identity:g0.5").routes_to_plain
+    assert not make_compressor("bf16").routes_to_plain
+    with pytest.raises(ValueError):
+        make_compressor("bf16:0.5")   # frac only means something on topk
+    with pytest.raises(ValueError):
+        make_compressor("topk:0.1:0.2")   # second frac token
+    with pytest.raises(ValueError):
+        Compressor("bf16", gamma=0.0)
+    with pytest.raises(ValueError):
+        Compressor("bf16", gamma=1.5)
+    # gamma never changes the wire: same byte model at any step size
+    assert Compressor("topk", 0.25, 0.5).wire_layout(1000) == \
+        Compressor("topk", 0.25).wire_layout(1000)
+
+
+def test_damped_identity_is_damped_exact_gossip():
+    """identity at gamma<1 must NOT route to plain mixing: it is
+    ``(1-g) theta + g W theta`` with zero EF memory, on both the dense
+    reference and the schedule transport."""
+    rng = np.random.default_rng(7)
+    n, d, g = 6, 5, 0.5
+    arrays = _random_arrays(rng, n, 3)
+    W = jnp.asarray(_dense_of(arrays), jnp.float32)
+    theta = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    e = jnp.zeros_like(theta)
+    comp = Compressor("identity", gamma=g)
+    want = (1 - g) * np.asarray(theta) + g * np.asarray(
+        jnp.tensordot(W, theta, axes=([1], [0]))
+    )
+    mixed, new_e = ef_gossip_step(theta, e, W, comp)
+    np.testing.assert_allclose(np.asarray(mixed), want, atol=1e-5)
+    assert not np.asarray(new_e).any()
+    mixed_a, new_e_a = ef_mix_schedule_arrays(theta, e, arrays, comp)
+    np.testing.assert_allclose(np.asarray(mixed_a), want, atol=1e-5)
+    assert not np.asarray(new_e_a).any()
+
+
+def test_gamma_damps_topk_ef_steady_state_error():
+    """Regression for the frontier divergence: aggressive top-k EF
+    gossip at gamma=1 feeds its compression error back through (W - I)
+    undamped. On a ring with heterogeneous local pulls, the damped wire
+    must settle measurably closer to consensus (deterministic seed; at
+    full scale undamped top-k diverges outright -- see bench_online's
+    frontier gamma note)."""
+    rng = np.random.default_rng(0)
+    n, d = 8, 32
+    targets = jnp.asarray(rng.normal(size=(n, d), scale=5.0), jnp.float32)
+    W = jnp.asarray(np.asarray(T.ring(n)), jnp.float32)
+    devs = {}
+    for spec in ("topk:0.1", "topk:0.1:g0.25"):
+        comp = make_compressor(spec)
+        theta = jnp.zeros((n, d))
+        e = jnp.zeros((n, d))
+        for _ in range(150):
+            theta = theta - 0.4 * (theta - targets)
+            theta, e = ef_gossip_step(theta, e, W, comp)
+        devs[spec] = float(jnp.abs(theta - jnp.mean(targets, 0)).max())
+    assert np.isfinite(devs["topk:0.1:g0.25"])
+    assert devs["topk:0.1:g0.25"] < 0.8 * devs["topk:0.1"], devs
+
+
+def test_wire_ratio_closed_form():
+    assert Compressor("bf16").wire_ratio(1000) == 0.5
+    assert Compressor("identity").wire_ratio(1000) == 1.0
+    tk = Compressor("topk", 0.25)
+    assert tk.wire_ratio(1000) == (250 * 8) / (1000 * 4)
+    # scalar payload: the value+index wire COSTS more than f32 -- the
+    # meter reports that honestly instead of pretending compression
+    assert Compressor("topk", 0.25).wire_ratio(1) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# online simulator drivers: zero retraces + identity end-to-end bitwise
+# ---------------------------------------------------------------------------
+
+def _mean_estimation_run(wire, on_segment=None):
+    from repro.data.synthetic import mean_estimation_clusters
+
+    task = mean_estimation_clusters(n_nodes=8, K=2, m=3.0, sigma_tilde2=0.2)
+    sa = schedule_to_arrays(schedule_from_matrix(T.ring(8)), 4)
+    return run_mean_estimation(
+        task, None, steps=40, lr=0.1, batch=2, seed=5, schedule=sa,
+        segment_len=10, on_segment=on_segment, compression=wire,
+    )
+
+
+def test_online_compressed_swap_zero_retraces_and_bytes():
+    sa_alt = schedule_to_arrays(
+        schedule_from_matrix(T.alternating_ring(8)), 4
+    )
+    hooks = {"fired": 0}
+
+    def hook(t):
+        hooks["fired"] += 1
+        return sa_alt if hooks["fired"] == 1 else None
+
+    out_plain = _mean_estimation_run(None, hook)
+    hooks["fired"] = 0
+    out_id = _mean_estimation_run("identity", hook)
+    hooks["fired"] = 0
+    out_bf = _mean_estimation_run("bf16", hook)
+    hooks["fired"] = 0
+    out_tk = _mean_estimation_run("topk:0.5", hook)
+
+    for name, out in (("plain", out_plain), ("identity", out_id),
+                      ("bf16", out_bf), ("topk", out_tk)):
+        assert out["n_traces"] == 1, (name, out["n_traces"])
+        assert out["swaps"], name
+        assert np.isfinite(out["mean_sq_error"]).all(), name
+    # identity wire: END-TO-END bitwise, through the hot swap
+    assert np.array_equal(out_id["mean_sq_error"], out_plain["mean_sq_error"])
+    assert out_id["comm"]["per_step_bytes"] == out_plain["comm"]["per_step_bytes"]
+    assert out_id["compression"] == "identity"
+    assert out_plain["compression"] is None
+    # bf16: exactly half the wire, still converging
+    assert out_bf["comm"]["per_step_bytes"] * 2 == \
+        out_plain["comm"]["per_step_bytes"]
+    assert not np.array_equal(out_bf["mean_sq_error"],
+                              out_plain["mean_sq_error"])
+    # scalar payload: top-k value+index costs 2x f32 -- metered honestly
+    assert out_tk["comm"]["per_step_bytes"] == \
+        2 * out_plain["comm"]["per_step_bytes"]
+
+
+def test_online_compressed_loop_rollout_matches_scan():
+    from repro.data.synthetic import mean_estimation_clusters
+
+    task = mean_estimation_clusters(n_nodes=6, K=2, m=2.0, sigma_tilde2=0.2)
+    sa = schedule_to_arrays(schedule_from_matrix(T.ring(6)), 3)
+    outs = {}
+    for rollout in ("scan", "loop"):
+        outs[rollout] = run_mean_estimation(
+            task, None, steps=20, lr=0.1, batch=2, seed=7, schedule=sa,
+            segment_len=5, compression="bf16", rollout=rollout,
+        )
+    assert np.array_equal(
+        outs["scan"]["mean_sq_error"], outs["loop"]["mean_sq_error"]
+    )
+
+
+def test_run_mean_estimation_rejects_compression_off_data_plane():
+    from repro.data.synthetic import mean_estimation_clusters
+
+    task = mean_estimation_clusters(n_nodes=6, K=2, m=2.0)
+    with pytest.raises(ValueError, match="ScheduleArrays"):
+        run_mean_estimation(task, T.ring(6), steps=5, compression="bf16")
+    static_sched = schedule_from_matrix(T.ring(6))
+    with pytest.raises(ValueError, match="ScheduleArrays"):
+        run_mean_estimation(
+            task, None, steps=5, schedule=static_sched, compression="bf16"
+        )

@@ -491,6 +491,92 @@ def test_online_w_rejects_invalid_configs():
     assert "ONLINE_W_VALIDATION_OK" in out
 
 
+def test_compressed_sharded_transports_agree_and_validate():
+    """ISSUE 7: the EF-compressed pool and all-gather transports must be
+    bitwise twins on the same schedule and wire (like their uncompressed
+    counterparts); the identity wire must route to the PLAIN transports
+    bitwise; and make_train_setup must reject the combos that have no
+    compressed wire (fsdp all-reduce, dsgd_pod einsum, offline runs)."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import AxisType, make_compat_mesh, set_mesh, shard_map
+        from repro.configs import get_smoke_config
+        from repro.core import topology as T
+        from repro.core.compression import (Compressor, make_compressor,
+                                            mix_arrays_sharded_ef,
+                                            mix_dense_sharded_ef,
+                                            mix_ppermute_pool_ef)
+        from repro.core.mixing import (PermPool, mix_arrays_sharded,
+                                       mix_ppermute_pool, schedule_from_matrix)
+        from repro.train.lm_trainer import make_train_setup
+
+        mesh = make_compat_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+        sched = schedule_from_matrix(T.ring(8))
+        pool = PermPool.from_schedule(sched, capacity=6)
+        g, dropped = pool.project(sched)
+        assert dropped == 0.0
+        arrays = pool.arrays_for(g)
+        gj = jnp.asarray(g)
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(8, 37)), jnp.float32)
+        e = jnp.asarray(rng.normal(size=(8, 37), scale=0.2), jnp.float32)
+
+        def run(fn):
+            return jax.jit(shard_map(fn, mesh=mesh, in_specs=(P("data"), P("data")),
+                                     out_specs=(P("data"), P("data")),
+                                     axis_names={"data"}, check_vma=False))(x, e)
+
+        for wire in ("bf16", "topk:0.25"):
+            comp = make_compressor(wire)
+            mp, ep = run(lambda v, m: mix_ppermute_pool_ef(v, m, gj, pool,
+                                                           "data", comp))
+            ma, ea = run(lambda v, m: mix_arrays_sharded_ef(v, m, arrays,
+                                                            "data", comp))
+            assert np.array_equal(np.asarray(mp), np.asarray(ma)), wire
+            assert np.array_equal(np.asarray(ep), np.asarray(ea)), wire
+            # dense reference on the reconstructed W: same EF bitwise,
+            # mixed equal up to accumulation order
+            Wj = jnp.asarray(sched.to_matrix(), jnp.float32)
+            md, ed = run(lambda v, m: mix_dense_sharded_ef(v, m, Wj,
+                                                           "data", comp))
+            assert np.array_equal(np.asarray(ep), np.asarray(ed)), wire
+            assert np.allclose(np.asarray(mp), np.asarray(md), atol=1e-5), wire
+
+        ident = Compressor("identity")
+        mi, ei = run(lambda v, m: mix_ppermute_pool_ef(v, m, gj, pool,
+                                                       "data", ident))
+        plain = jax.jit(shard_map(
+            lambda v: mix_ppermute_pool(v, gj, pool, "data"), mesh=mesh,
+            in_specs=(P("data"),), out_specs=P("data"), axis_names={"data"},
+            check_vma=False))(x)
+        assert np.array_equal(np.asarray(mi), np.asarray(plain))
+        assert np.array_equal(np.asarray(ei), np.asarray(e))  # ef untouched
+
+        mesh2 = make_compat_mesh((8, 1), ("data", "model"),
+                                 axis_types=(AxisType.Auto,) * 2)
+        cfg = get_smoke_config("qwen3-0.6b")
+        for kwargs in ({"mode": "fsdp"},
+                       {"mode": "dsgd_pod"},
+                       {"mode": "dsgd", "online_w": False}):
+            try:
+                make_train_setup(cfg, mesh2, lr=1e-2, compression="bf16",
+                                 **kwargs)
+            except ValueError:
+                continue
+            raise AssertionError(f"{kwargs} + compression should be rejected")
+        s = make_train_setup(cfg, mesh2, mode="dsgd", online_w=True, lr=1e-2,
+                             sharded_transport="pool", pool=pool,
+                             compression="topk:0.25")
+        assert s.compression.label == "topk:0.25"
+        assert s.comm_bytes_per_step < make_train_setup(
+            cfg, mesh2, mode="dsgd", online_w=True, lr=1e-2,
+            sharded_transport="pool", pool=pool).comm_bytes_per_step
+        print("COMPRESSED_SHARDED_OK")
+    """)
+    assert "COMPRESSED_SHARDED_OK" in out
+
+
 def test_run_segments_checkpoint_resume_bitwise():
     """Crash recovery for the mesh trainer: stop after 2 segments (the
     scripted crash), resume from the checkpoint, and land bitwise on the
