@@ -12,7 +12,16 @@ crash recovery (ISSUE 6).
    renormalization all reach the compiled rollout as data (the
    jit-cache-miss detector of the acceptance criteria).
 
-2. **Crash recovery** -- the micro scenario CI runs in --smoke: n=8, a
+2. **Straggler sweep** (ISSUE 8) -- bounded-delay gossip under a
+   tau_max x straggler-fraction x {wait, degrade} grid, same
+   observation stream as the fault-free baseline. Acceptance bars: at
+   tau_max <= 4 and <= 25% stragglers the wait policy's tail error
+   stays within 10% of fault-free and degrade within 20%; every cell
+   -- including a topology refresh landing UNDER staleness -- runs at
+   zero retraces, and the delays=0 control arm is BITWISE the fresh
+   run (losses AND bytes).
+
+3. **Crash recovery** -- the micro scenario CI runs in --smoke: n=8, a
    scripted node crash + rejoin window (via ``NodeChurn`` ->
    ``FaultPlan.from_node_churn``), one warm topology refresh landing
    mid-run UNDER the faults, then the run is killed at a segment
@@ -33,7 +42,11 @@ import time
 import numpy as np
 
 from .common import emit, result_dir
-from repro.core.mixing import schedule_from_result, schedule_to_arrays
+from repro.core.mixing import (
+    StragglerPolicy,
+    schedule_from_result,
+    schedule_to_arrays,
+)
 from repro.core.stl_fw import learn_topology
 from repro.data.drift import NodeChurn
 from repro.data.synthetic import mean_estimation_clusters
@@ -118,6 +131,186 @@ def _bench_fault_sweep(results: dict, smoke: bool) -> None:
         f"{len(cells)}cells_base={base_err:.2e}"
         f"_worst={worst['gap_ratio']:.2f}x@cr{worst['crash_rate']}"
         f"t{worst['tau_max']}e{worst['edge_drop_rate']}_retraces=0",
+    )
+
+
+def _bench_straggler_sweep(results: dict, smoke: bool) -> None:
+    """Bounded-delay gossip: tau_max x straggler-rate x policy grid."""
+    if smoke:
+        n, K, steps, seg, batch = 8, 4, 120, 20, 2
+        hard_rate = 0.02
+    else:
+        n, K, steps, seg, batch = 32, 8, 600, 50, 2
+        hard_rate = 0.01  # larger fleets tolerate fewer per-node cuts
+    lr = 0.02
+    tau_maxes = (2, 4)
+    straggler_rates = (0.1, 0.25)
+    task = mean_estimation_clusters(n_nodes=n, K=K, m=5.0, sigma_tilde2=1.0)
+    res0 = learn_topology(task.Pi, budget=8, lam=LAM)
+    sched0 = schedule_from_result(res0)
+    arrays = schedule_to_arrays(sched0, sched0.n_atoms + 2)
+    rng = np.random.default_rng(6)
+    zs = np.stack([task.sample(batch, rng) for _ in range(steps)]).astype(
+        np.float32
+    )
+    tail = slice(-max(10, steps // 3), None)
+    kw = dict(lr=lr, seed=2, zs=zs, segment_len=seg)
+
+    def straggler_plan(tau: int, rate: float) -> FaultPlan:
+        """Stragglers at ``rate`` with delays <= tau (on-time for a
+        deadline of tau), plus a sparse seeded set of HARD stragglers
+        whose delay exceeds any deadline in the grid -- the node-steps
+        where wait (clamp to tau) and degrade (cut for the step)
+        actually disagree. Post-editing ``plan.delays`` follows the
+        ``from_node_churn`` precedent of scripting part of a trace."""
+        plan = FaultPlan(
+            n_nodes=n, steps=steps, seed=8,
+            straggler_rate=rate, tau_max=tau,
+        )
+        srng = np.random.default_rng([8, 99, tau, int(rate * 100)])
+        late = srng.random((steps, n)) < hard_rate
+        plan.delays[late] = tau + 2
+        return plan
+
+    t0 = time.perf_counter()
+    plan0 = FaultPlan(n_nodes=n, steps=steps, seed=0)
+    base = run_faulty_mean_estimation(task, plan0, arrays, **kw)
+    assert base["n_traces"] == 1
+    base_err = float(np.median(base["mean_sq_error"][tail]))
+
+    # delays=0 control arm: the stale data plane with an all-zero delay
+    # trace must be BITWISE the fresh run -- losses AND bytes
+    bitwise_controls = {}
+    for mode in ("wait", "degrade"):
+        ctrl = run_faulty_mean_estimation(
+            task, plan0, arrays,
+            staleness=StragglerPolicy(mode=mode, tau_max=4), **kw
+        )
+        assert ctrl["n_traces"] == 1, ctrl["n_traces"]
+        assert np.array_equal(
+            ctrl["mean_sq_error"], base["mean_sq_error"]
+        ), f"delays=0 {mode} arm diverged bitwise from the fresh run"
+        assert ctrl["comm"]["total_bytes"] == base["comm"]["total_bytes"]
+        assert ctrl["comm"]["deferred_bytes"] == 0
+        assert ctrl["comm"]["dropped_bytes"] == 0
+        bitwise_controls[mode] = {
+            "bitwise_losses": True,
+            "total_bytes": ctrl["comm"]["total_bytes"],
+        }
+
+    def assert_comm_closed_form(out, plan, policy) -> None:
+        """The metered bytes must equal the closed form from the plan's
+        transfer fates, aggregated segment-by-segment exactly as the
+        meter ticks (volume conservation + deferred subset)."""
+        comm = out["comm"]
+        per_step = comm["per_step_bytes"]
+        assert comm["total_bytes"] + comm["dropped_bytes"] == steps * per_step
+        exp_total = exp_deferred = 0
+        for t0 in range(0, steps, seg):
+            k = min(seg, steps - t0)
+            fates = [
+                plan.transfer_fracs(
+                    t, deadline=policy.tau_max, mode=policy.mode
+                )
+                for t in range(t0, t0 + k)
+            ]
+            on = float(np.mean([f[0] for f in fates]))
+            df = float(np.mean([f[1] for f in fates]))
+            exp_total += int(k * per_step * (on + df))
+            exp_deferred += int(k * per_step * df)
+        assert comm["total_bytes"] == exp_total, (
+            comm["total_bytes"], exp_total
+        )
+        assert comm["deferred_bytes"] == exp_deferred, (
+            comm["deferred_bytes"], exp_deferred
+        )
+
+    cells = []
+    for tau in tau_maxes:
+        for rate in straggler_rates:
+            plan = straggler_plan(tau, rate)
+            for mode in ("wait", "degrade"):
+                policy = StragglerPolicy(mode=mode, tau_max=tau)
+                out = run_faulty_mean_estimation(
+                    task, plan, arrays, staleness=policy, **kw
+                )
+                assert out["n_traces"] == 1, (
+                    f"straggler cell retraced: {out['n_traces']}"
+                )
+                assert_comm_closed_form(out, plan, policy)
+                err = float(np.median(out["mean_sq_error"][tail]))
+                ratio = err / base_err
+                # acceptance: tau_max <= 4, <= 25% stragglers => wait
+                # within 10% of fault-free, degrade within 20%
+                bar = 1.10 if mode == "wait" else 1.20
+                assert ratio <= bar, (
+                    f"{mode} tau={tau} rate={rate}: {ratio:.3f} > {bar}"
+                )
+                cells.append({
+                    "tau_max": tau, "straggler_rate": rate, "policy": mode,
+                    "tail_median_err": err,
+                    "gap_ratio": ratio,
+                    "comm": out["comm"],
+                    "n_traces": out["n_traces"],
+                })
+
+    # one refresh lands UNDER live staleness: still zero retraces
+    # (the refresher's own l_max padding is the base, so the swap is a
+    # same-shape value change)
+    ref = TopologyRefresher(res0, RefreshConfig(budget=4, lam=LAM))
+    arrays_r = ref.schedule_arrays()
+    plan_r = straggler_plan(4, 0.25)
+    done = {"swapped": False}
+
+    def hook(t):
+        if not done["swapped"] and t >= 2 * seg - 1:
+            done["swapped"] = True
+            ref.refresh(task.Pi)
+            return ref.schedule_arrays()
+        return None
+
+    refreshed = run_faulty_mean_estimation(
+        task, plan_r, arrays_r,
+        staleness=StragglerPolicy(mode="wait", tau_max=4),
+        on_segment=hook, **kw
+    )
+    assert refreshed["n_traces"] == 1, refreshed["n_traces"]
+    assert refreshed["swaps"] == [2 * seg - 1], refreshed["swaps"]
+    assert_comm_closed_form(
+        refreshed, plan_r, StragglerPolicy(mode="wait", tau_max=4)
+    )
+    refresh_err = float(np.median(refreshed["mean_sq_error"][tail]))
+    assert refresh_err / base_err <= 1.10, refresh_err / base_err
+
+    wall = time.perf_counter() - t0
+    worst = max(cells, key=lambda c: c["gap_ratio"])
+    results["straggler_sweep"] = {
+        "n": n, "K": K, "steps": steps, "segment_len": seg, "lr": lr,
+        "lam": LAM, "batch": batch,
+        "tau_maxes": list(tau_maxes),
+        "straggler_rates": list(straggler_rates),
+        "hard_straggler_rate": hard_rate,
+        "baseline_tail_median_err": base_err,
+        "baseline_comm": base["comm"],
+        "bitwise_controls": bitwise_controls,
+        "cells": cells,
+        "refresh_under_staleness": {
+            "swaps": refreshed["swaps"],
+            "tail_median_err": refresh_err,
+            "gap_ratio": refresh_err / base_err,
+            "n_traces": refreshed["n_traces"],
+            "comm": refreshed["comm"],
+        },
+        "acceptance": {"wait_bar": 1.10, "degrade_bar": 1.20,
+                       "all_cells_pass": True},
+        "wall_s": wall,
+    }
+    emit(
+        f"faults_stragglers_n{n}", wall / max(len(cells), 1) * 1e6,
+        f"{len(cells)}cells_base={base_err:.2e}"
+        f"_worst={worst['gap_ratio']:.2f}x@{worst['policy']}"
+        f"t{worst['tau_max']}r{worst['straggler_rate']}"
+        f"_bitwise0=ok_retraces=0",
     )
 
 
@@ -215,6 +408,7 @@ def _bench_crash_recovery(results: dict, smoke: bool) -> None:
 def main(smoke: bool = False) -> None:
     results: dict = {"smoke": smoke}
     _bench_fault_sweep(results, smoke)
+    _bench_straggler_sweep(results, smoke)
     _bench_crash_recovery(results, smoke)
     os.makedirs(result_dir(), exist_ok=True)
     path = os.path.join(result_dir(), "BENCH_faults.json")

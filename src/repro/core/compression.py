@@ -57,11 +57,20 @@ import jax.numpy as jnp
 from .mixing import (
     PermPool,
     ScheduleArrays,
+    ShardStaleState,
+    StaleBuffer,
     _mix_arrays_flat,
+    _stale_slot,
     mix_arrays_sharded,
+    mix_arrays_sharded_stale,
     mix_dense_sharded,
     mix_ppermute_pool,
+    mix_ppermute_pool_stale,
     mix_schedule_arrays,
+    mix_schedule_arrays_stale,
+    shard_stale_push,
+    stale_push,
+    stale_view,
 )
 
 PyTree = Any
@@ -76,9 +85,12 @@ __all__ = [
     "ef_gossip_step",
     "ef_init",
     "ef_mix_schedule_arrays",
+    "ef_stale_mix_flat",
     "mix_arrays_sharded_ef",
+    "mix_arrays_sharded_stale_ef",
     "mix_dense_sharded_ef",
     "mix_ppermute_pool_ef",
+    "mix_ppermute_pool_stale_ef",
 ]
 
 # legacy alias: a bare callable compressor (no byte model, applied to the
@@ -365,6 +377,49 @@ def ef_mix_schedule_arrays(
     )
 
 
+def ef_stale_mix_flat(
+    flat_half: jax.Array,
+    ef_flat: jax.Array,
+    buffer: StaleBuffer,
+    arrays: ScheduleArrays,
+    delays: jax.Array,
+    compressor: Compressor,
+) -> tuple[jax.Array, jax.Array, StaleBuffer]:
+    """EF-compressed bounded-delay mixing on the flat (n, P) convention.
+
+    The composition the staleness engine needs in ONE scan carry: the
+    ring buffer holds the last ``depth`` WIRE payloads (what actually
+    crossed the network -- under compression that is ``c = C(theta +
+    e)``, under the identity wire the half-step itself), the EF memory
+    stays local and fresh (a node's own error never travels, so it is
+    never late), and the CHOCO combine subtracts the node's own FRESH
+    compressed view:
+
+        theta_i <- theta_i + gamma (sum_j W_ij c_j^{t - tau_j} - c_i^t)
+        e_i     <- (theta_i + e_i) - c_i^t
+
+    Returns ``(mixed, new_ef, new_buffer)``. With the identity wire
+    this routes at trace time to the plain stale transport
+    (:func:`repro.core.mixing.mix_schedule_arrays_stale`) and returns
+    ``ef_flat`` untouched -- and with ``delays == 0`` the ring read
+    returns the payload just pushed, so each route is BITWISE its fresh
+    twin (:func:`ef_mix_schedule_arrays` / ``_mix_arrays_flat``).
+    """
+    compressor = _require_wire(compressor)
+    if compressor.routes_to_plain:
+        buffer = stale_push(buffer, flat_half)
+        mixed = mix_schedule_arrays_stale(buffer, arrays, delays)
+        return mixed, ef_flat, buffer
+    g = compressor.gamma
+    to_send = flat_half + ef_flat.astype(flat_half.dtype)
+    c = _apply_stacked(compressor, to_send)
+    new_ef = (to_send - c).astype(ef_flat.dtype)
+    buffer = stale_push(buffer, c)
+    acc = _mix_arrays_flat(stale_view(buffer, delays), arrays)
+    mixed = flat_half + acc - c if g == 1.0 else flat_half + g * (acc - c)
+    return mixed, new_ef, buffer
+
+
 def _ef_leaf_map(params: PyTree, ef: PyTree, fn, serialize: bool):
     """Two-tree leaf map with the gather-serialization chaining of
     ``mixing._serialized_leaf_map`` (one leaf's all-gather live at a
@@ -531,3 +586,136 @@ def mix_ppermute_pool_ef(
     # no gather to serialize: ppermute payloads are leaf-sized (the
     # plain pool transport tree_maps for the same reason)
     return _ef_leaf_map(params, ef, leaf, serialize=False)
+
+
+def _ef_stale_prepare(params, ef, compressor):
+    """Compress every leaf locally: returns ``(x_leaves, treedef, c_tree,
+    new_ef)``. The wire payloads are what the stale ring stores -- a
+    node's own EF memory never travels, so it stays fresh."""
+    x_leaves, treedef = jax.tree_util.tree_flatten(params)
+    e_leaves = jax.tree_util.tree_leaves(ef)
+    if len(e_leaves) != len(x_leaves):
+        raise ValueError("ef memory must mirror the parameter pytree")
+    cs, new_es = [], []
+    for x, e in zip(x_leaves, e_leaves):
+        to_send = x.astype(jnp.float32) + e.astype(jnp.float32)
+        c = compressor(to_send)
+        cs.append(c)
+        new_es.append((to_send - c).astype(e.dtype))
+    return (
+        x_leaves,
+        treedef,
+        jax.tree_util.tree_unflatten(treedef, cs),
+        jax.tree_util.tree_unflatten(treedef, new_es),
+    )
+
+
+def mix_arrays_sharded_stale_ef(
+    params: PyTree,
+    ef: PyTree,
+    state: ShardStaleState,
+    arrays: ScheduleArrays,
+    delays: jax.Array,
+    axis_name: str,
+    compressor: Compressor,
+    *,
+    serialize: bool = True,
+) -> tuple[PyTree, PyTree, ShardStaleState]:
+    """EF-compressed bounded-delay ``mix_arrays_sharded`` (in shard_map).
+
+    The mesh twin of :func:`ef_stale_mix_flat`: the per-node ring holds
+    the last ``depth`` COMPRESSED wire payloads, the all-gather moves
+    the delayed views, and the CHOCO combine subtracts the node's own
+    fresh ``c``. Identity wire routes to the plain stale transport;
+    ``delays == 0`` is bitwise :func:`mix_arrays_sharded_ef`. Returns
+    ``(mixed, new_ef, new_state)``.
+    """
+    compressor = _require_wire(compressor)
+    if compressor.routes_to_plain:
+        mixed, state = mix_arrays_sharded_stale(
+            params, state, arrays, delays, axis_name, serialize=serialize
+        )
+        return mixed, ef, state
+    step = compressor.gamma
+    x_leaves, treedef, c_tree, new_ef = _ef_stale_prepare(params, ef, compressor)
+    state = shard_stale_push(state, c_tree)
+    slot = _stale_slot(state, delays, axis_name)
+    i = jax.lax.axis_index(axis_name)
+    srcs = arrays.perms[:, i]
+    c_leaves = jax.tree_util.tree_leaves(c_tree)
+    r_leaves = treedef.flatten_up_to(state.rings)
+    outs = []
+    token = None
+    for x, c, ring in zip(x_leaves, c_leaves, r_leaves):
+        if serialize and token is not None:
+            ring, _ = jax.lax.optimization_barrier((ring, token))
+        d32 = jax.lax.dynamic_index_in_dim(ring, slot, axis=0, keepdims=False)
+        g = jax.lax.all_gather(d32, axis_name)
+
+        def body(acc, gs):
+            gamma, src = gs
+            contrib = jax.lax.dynamic_index_in_dim(g, src, axis=0, keepdims=False)
+            return acc + gamma.astype(jnp.float32) * contrib, None
+
+        acc, _ = jax.lax.scan(body, jnp.zeros_like(d32), (arrays.gammas, srcs))
+        x32 = x.astype(jnp.float32)
+        out = x32 + acc - c if step == 1.0 else x32 + step * (acc - c)
+        out = out.astype(x.dtype)
+        token = out
+        outs.append(out)
+    return jax.tree_util.tree_unflatten(treedef, outs), new_ef, state
+
+
+def mix_ppermute_pool_stale_ef(
+    params: PyTree,
+    ef: PyTree,
+    state: ShardStaleState,
+    gammas: jax.Array,
+    pool: PermPool,
+    delays: jax.Array,
+    axis_name: str,
+    compressor: Compressor,
+) -> tuple[PyTree, PyTree, ShardStaleState]:
+    """EF-compressed bounded-delay staged-pool mixing.
+
+    Every staged ppermute ships the node's DELAYED compressed payload;
+    gammas, delays, the EF memory and the ring are all data, so an
+    in-pool swap under compression AND staleness is still a pure value
+    change. Identity wire routes to :func:`mix_ppermute_pool_stale`;
+    ``delays == 0`` is bitwise :func:`mix_ppermute_pool_ef`. Returns
+    ``(mixed, new_ef, new_state)``.
+    """
+    compressor = _require_wire(compressor)
+    if compressor.routes_to_plain:
+        mixed, state = mix_ppermute_pool_stale(
+            params, state, gammas, pool, delays, axis_name
+        )
+        return mixed, ef, state
+    step = compressor.gamma
+    n = pool.n_nodes
+    ident = pool.identity
+    if gammas.shape != (pool.capacity,):
+        raise ValueError(
+            f"gammas must be ({pool.capacity},) to match the pool, "
+            f"got {gammas.shape}"
+        )
+    x_leaves, treedef, c_tree, new_ef = _ef_stale_prepare(params, ef, compressor)
+    state = shard_stale_push(state, c_tree)
+    slot = _stale_slot(state, delays, axis_name)
+    c_leaves = jax.tree_util.tree_leaves(c_tree)
+    r_leaves = treedef.flatten_up_to(state.rings)
+    outs = []
+    for x, c, ring in zip(x_leaves, c_leaves, r_leaves):
+        d32 = jax.lax.dynamic_index_in_dim(ring, slot, axis=0, keepdims=False)
+        acc = jnp.zeros_like(d32)
+        for l, perm in enumerate(pool.perms):
+            if perm == ident:
+                contrib = d32
+            else:
+                pairs = [(int(perm[i]), i) for i in range(n)]
+                contrib = jax.lax.ppermute(d32, axis_name, pairs)
+            acc = acc + gammas[l].astype(jnp.float32) * contrib
+        x32 = x.astype(jnp.float32)
+        out = x32 + acc - c if step == 1.0 else x32 + step * (acc - c)
+        outs.append(out.astype(x.dtype))
+    return jax.tree_util.tree_unflatten(treedef, outs), new_ef, state

@@ -80,6 +80,15 @@ __all__ = [
     "stale_push",
     "stale_view",
     "mix_schedule_arrays_stale",
+    "StragglerPolicy",
+    "straggler_stream",
+    "straggler_pool_stream",
+    "degrade_pool_gammas",
+    "ShardStaleState",
+    "shard_stale_init",
+    "shard_stale_push",
+    "mix_arrays_sharded_stale",
+    "mix_ppermute_pool_stale",
     "mix_schedule_arrays",
     "mix_dense_sharded",
     "PermPool",
@@ -568,6 +577,404 @@ def mix_schedule_arrays_stale(
     reproduce the fault-free mixing bitwise.
     """
     return _mix_arrays_flat(stale_view(buffer, delays), arrays)
+
+
+# ---------------------------------------------------------------------------
+# Straggler policy: wait vs deadline-based graceful degradation
+# ---------------------------------------------------------------------------
+#
+# The ring buffer above implements the MECHANISM of bounded-delay
+# mixing; the policy below decides, per node per step, what a delay
+# MEANS. Under ``wait`` every late payload is consumed at its (clamped)
+# staleness -- the unified bounded-delay model of Koloskova et al.,
+# where convergence survives any tau <= tau_max. Under ``degrade`` a
+# delay past the deadline is treated as an outage for that one step:
+# the schedule is repaired on the on-time support (same cycle-collapse
+# as :func:`degrade_schedule`, so W stays EXACTLY doubly stochastic)
+# and the late node keeps its own parameters -- graceful degradation
+# instead of a barrier stall. Both arms are host-side control-plane
+# decisions: what reaches the compiled rollout is a repaired
+# ``ScheduleArrays`` value plus an effective int32 delay vector, both
+# ordinary scan data, so switching policies (or a straggler appearing)
+# never retraces.
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerPolicy:
+    """Deadline policy for bounded-delay gossip (frozen/hashable).
+
+    Attributes:
+      mode: ``"wait"`` consumes every payload at its staleness, clamped
+        to ``tau_max`` (the ring depth bounds how far back a view can
+        reach); ``"degrade"`` treats any delay PAST ``tau_max`` as an
+        offline node for that step and repairs the schedule on the
+        on-time support.
+      tau_max: the staleness deadline. The ring buffer consuming this
+        policy must have ``depth == ring_depth == tau_max + 1``.
+    """
+
+    mode: str = "wait"
+    tau_max: int = 1
+
+    def __post_init__(self):
+        if self.mode not in ("wait", "degrade"):
+            raise ValueError(
+                f"StragglerPolicy mode must be 'wait' or 'degrade', "
+                f"got {self.mode!r}"
+            )
+        if self.tau_max < 0:
+            raise ValueError(f"tau_max must be >= 0, got {self.tau_max}")
+
+    @property
+    def ring_depth(self) -> int:
+        return self.tau_max + 1
+
+    def apply(
+        self,
+        arrays: ScheduleArrays,
+        delays,
+        alive_mask=None,
+        dropped_edges=(),
+    ) -> tuple[ScheduleArrays, np.ndarray]:
+        """Resolve one step's raw delay vector against the deadline.
+
+        Returns ``(arrays', eff_delays)``: the (possibly repaired)
+        schedule to mix with and the effective (n,) int32 delay vector
+        to read the ring at. Host-side numpy -- faults and deadlines
+        are exogenous control-plane events, like topology refreshes.
+        Composes with crash faults: ``alive_mask``/``dropped_edges``
+        are folded into the SAME single repair, and offline nodes
+        always get effective delay 0 (the alive mask governs them, not
+        staleness).
+        """
+        delays = np.asarray(delays, np.int64).reshape(-1)
+        n = delays.shape[0]
+        if arrays.n_nodes != n:
+            raise ValueError(
+                f"delays are for {n} nodes, schedule for {arrays.n_nodes}"
+            )
+        if delays.min() < 0:
+            raise ValueError("delays must be non-negative")
+        alive = (
+            np.ones(n, bool)
+            if alive_mask is None
+            else np.asarray(alive_mask, bool).reshape(n)
+        )
+        if self.mode == "wait":
+            eff = np.minimum(delays, self.tau_max)
+            mask = alive
+        else:
+            late = delays > self.tau_max
+            eff = np.where(late, 0, delays)
+            mask = alive & ~late
+        eff = np.where(alive, eff, 0).astype(np.int32)
+        edges = np.asarray(
+            dropped_edges
+            if isinstance(dropped_edges, np.ndarray)
+            else list(dropped_edges)
+        )
+        if not mask.all() or edges.size:
+            arrays = degrade_schedule(arrays, mask, edges)
+        return arrays, eff
+
+
+def straggler_stream(
+    policy: StragglerPolicy,
+    arrays: ScheduleArrays,
+    delays,
+    alive=None,
+    edges_at=None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Resolve a (T, n) raw delay trace into stacked per-step scan xs.
+
+    Returns ``(gammas (T, l_max), perms (T, l_max, n), eff (T, n))`` --
+    the exact xs a scanned stale rollout consumes (one schedule value
+    and one delay vector per step, all data). ``alive`` is an optional
+    (T, n) bool mask and ``edges_at(t)`` an optional per-step dropped-
+    edge callback, both folded into each step's single repair.
+    """
+    delays = np.asarray(delays, np.int64)
+    if delays.ndim != 2:
+        raise ValueError(f"delays must be (T, n), got shape {delays.shape}")
+    T = delays.shape[0]
+    g_rows, p_rows, d_rows = [], [], []
+    for t in range(T):
+        a_t = None if alive is None else np.asarray(alive)[t]
+        e_t = () if edges_at is None else edges_at(t)
+        sa, eff = policy.apply(
+            arrays, delays[t], alive_mask=a_t, dropped_edges=e_t
+        )
+        g_rows.append(np.asarray(sa.gammas, np.float32))
+        p_rows.append(np.asarray(sa.perms, np.int32))
+        d_rows.append(eff)
+    return (
+        jnp.asarray(np.stack(g_rows)),
+        jnp.asarray(np.stack(p_rows)),
+        jnp.asarray(np.stack(d_rows)),
+    )
+
+
+def degrade_pool_gammas(pool: "PermPool", gammas, offline_mask) -> np.ndarray:
+    """Repair pool-coordinate mixing when some nodes are offline/late.
+
+    The pool transport cannot rewrite its (compiled-in) permutation
+    slots, so the repair is coarser than :func:`degrade_schedule`'s
+    cycle collapse: every non-identity slot that moves data to or from
+    an offline node is zeroed and its coefficient mass moved to an
+    identity slot. The result is still an exact convex combination of
+    permutations (doubly stochastic to machine precision) in which
+    every offline node is a fixed point of every surviving atom -- the
+    same isolation guarantee, paid for with more lost mixing mass.
+    Host-side numpy; the returned (capacity,) float32 vector is a pure
+    gamma value change (zero retraces).
+    """
+    g = np.asarray(gammas, np.float64).copy()
+    if g.shape != (pool.capacity,):
+        raise ValueError(
+            f"gammas must be ({pool.capacity},), got {g.shape}"
+        )
+    off = np.asarray(offline_mask, bool).reshape(pool.n_nodes)
+    if not off.any():
+        return g.astype(np.float32)
+    ident = pool.identity
+    try:
+        id_slot = pool.perms.index(ident)
+    except ValueError:
+        raise ValueError(
+            "degrade_pool_gammas needs an identity slot to absorb the "
+            "dropped mass; stage the pool with headroom "
+            "(PermPool.from_schedule pads with identities)"
+        ) from None
+    moved = 0.0
+    for l, p in enumerate(pool.perms):
+        if p == ident:
+            continue
+        touches = any(
+            p[i] != i and (off[i] or off[p[i]]) for i in range(pool.n_nodes)
+        )
+        if touches:
+            moved += g[l]
+            g[l] = 0.0
+    g[id_slot] += moved
+    return g.astype(np.float32)
+
+
+def straggler_pool_stream(
+    policy: StragglerPolicy,
+    gammas,
+    pool: "PermPool",
+    delays,
+) -> tuple[jax.Array, jax.Array]:
+    """Pool-transport twin of :func:`straggler_stream`: resolve a
+    (T, n) raw delay trace into per-step pool coordinates.
+
+    Returns ``(gammas (T, capacity), eff (T, n))``. Under ``"wait"``
+    every step keeps the base gamma vector and clamps delays to the
+    deadline; under ``"degrade"`` past-deadline nodes are repaired out
+    via :func:`degrade_pool_gammas` (their effective delay drops to 0 --
+    the repaired atoms self-loop them, so they keep their own fresh
+    half-step). Host-side numpy, stacked to scan xs: a straggler burst
+    is a pure value change on the compiled pool transport.
+    """
+    d = np.asarray(delays, np.int64)
+    if d.ndim != 2:
+        raise ValueError(f"delays must be (T, n), got shape {d.shape}")
+    if d.shape[1] != pool.n_nodes:
+        raise ValueError(
+            f"delays are for {d.shape[1]} nodes, pool for {pool.n_nodes}"
+        )
+    if d.size and d.min() < 0:
+        raise ValueError("delays must be non-negative")
+    base = np.asarray(gammas, np.float32).reshape(pool.capacity)
+    T = d.shape[0]
+    g_out = np.empty((T, pool.capacity), np.float32)
+    e_out = np.empty(d.shape, np.int32)
+    for t in range(T):
+        if policy.mode == "wait":
+            g_out[t] = base
+            e_out[t] = np.minimum(d[t], policy.tau_max)
+        else:
+            late = d[t] > policy.tau_max
+            e_out[t] = np.where(late, 0, d[t])
+            g_out[t] = (
+                degrade_pool_gammas(pool, base, late) if late.any() else base
+            )
+    return jnp.asarray(g_out), jnp.asarray(e_out)
+
+
+# ---------------------------------------------------------------------------
+# Sharded bounded-delay transports (stale ring inside shard_map)
+# ---------------------------------------------------------------------------
+#
+# The mesh twins of the ring buffer above. Inside ``shard_map`` every
+# node holds only its own parameter shard, so the ring is per-node and
+# SENDER-side: each node keeps its own last ``depth`` wire payloads
+# (f32, the exact value the fresh transports put on the wire) and
+# contributes the slot ``delays[i]`` pushes back -- source-indexed
+# delay, matching :func:`stale_view` row-for-row. The ring pytree and
+# the delay vector ride the training carry as data: a straggler
+# appearing, a deadline decision, or a hot-swapped schedule are all
+# pure value changes into the compiled step. With ``delays == 0`` the
+# slot just pushed is read back verbatim, so both transports reduce
+# BITWISE to their fresh counterparts (asserted in
+# tests/test_staleness.py on a forced-8-device mesh).
+
+
+class ShardStaleState(NamedTuple):
+    """Per-node sender-side ring of the last ``depth`` wire payloads.
+
+    ``rings`` mirrors the parameter pytree with per-leaf shape
+    ``(depth, *leaf.shape)`` in f32 (the wire dtype of the sharded
+    transports); ``head`` indexes the most recent push. A NamedTuple of
+    arrays, so it rides a scan carry / opt-state slot like
+    :class:`StaleBuffer` does.
+    """
+
+    rings: PyTree
+    head: jax.Array  # () int32
+
+    @property
+    def depth(self) -> int:
+        return jax.tree_util.tree_leaves(self.rings)[0].shape[0]
+
+
+def shard_stale_init(params: PyTree, depth: int) -> ShardStaleState:
+    """Fill all ``depth`` slots of every leaf ring with the current
+    payload (a delay larger than the pushes so far reads the initial
+    state, never garbage)."""
+    if depth < 1:
+        raise ValueError(f"depth must be >= 1 (tau_max + 1), got {depth}")
+    rings = jax.tree_util.tree_map(
+        lambda x: jnp.tile(
+            x.astype(jnp.float32)[None], (depth,) + (1,) * x.ndim
+        ),
+        params,
+    )
+    return ShardStaleState(rings=rings, head=jnp.zeros((), jnp.int32))
+
+
+def shard_stale_push(state: ShardStaleState, params: PyTree) -> ShardStaleState:
+    """Advance the shared head and write this step's payloads."""
+    depth = state.depth
+    head = jax.lax.rem(state.head + 1, jnp.asarray(depth, state.head.dtype))
+    rings = jax.tree_util.tree_map(
+        lambda r, x: jax.lax.dynamic_update_index_in_dim(
+            r, x.astype(jnp.float32), head, axis=0
+        ),
+        state.rings,
+        params,
+    )
+    return ShardStaleState(rings=rings, head=head)
+
+
+def _stale_slot(state: ShardStaleState, delays: jax.Array, axis_name: str):
+    """This node's ring slot under source-indexed delay ``delays[i]``."""
+    i = jax.lax.axis_index(axis_name)
+    d = jax.lax.dynamic_index_in_dim(delays, i, axis=0, keepdims=False)
+    return jnp.mod(state.head - d, state.depth)
+
+
+def _zip_leaf_map(params: PyTree, rings: PyTree, mix_leaf, serialize: bool) -> PyTree:
+    """Two-tree :func:`_serialized_leaf_map`: walk (param, ring) leaf
+    pairs with the same one-gather-live-at-a-time barrier chaining."""
+    p_leaves, treedef = jax.tree_util.tree_flatten(params)
+    r_leaves = treedef.flatten_up_to(rings)
+    outs: list[jax.Array] = []
+    token = None
+    for x, r in zip(p_leaves, r_leaves):
+        if serialize and token is not None:
+            r, _ = jax.lax.optimization_barrier((r, token))
+        out = mix_leaf(x, r)
+        token = out
+        outs.append(out)
+    return jax.tree_util.tree_unflatten(treedef, outs)
+
+
+def mix_arrays_sharded_stale(
+    params: PyTree,
+    state: ShardStaleState,
+    arrays: ScheduleArrays,
+    delays: jax.Array,
+    axis_name: str,
+    *,
+    serialize: bool = True,
+) -> tuple[PyTree, ShardStaleState]:
+    """Bounded-delay :func:`mix_arrays_sharded`: all-gather of DELAYED
+    payloads, schedule and delays as data.
+
+    Pushes this step's params into the ring, reads back this node's
+    payload from ``delays[i]`` pushes ago, gathers, and accumulates
+    ``sum_l gammas[l] * gathered[perms[l, i]]`` exactly as the fresh
+    transport does -- with ``delays == 0`` the slot read returns the
+    value just pushed, so the result is bitwise the fresh mix. Returns
+    ``(mixed, new_state)``; the caller threads the ring through its
+    carry (fixed shape: hot swaps stay value changes).
+    """
+    state = shard_stale_push(state, params)
+    slot = _stale_slot(state, delays, axis_name)
+    i = jax.lax.axis_index(axis_name)
+    srcs = arrays.perms[:, i]
+
+    def mix_leaf(x, ring):
+        d32 = jax.lax.dynamic_index_in_dim(ring, slot, axis=0, keepdims=False)
+        g = jax.lax.all_gather(d32, axis_name)
+
+        def body(acc, gs):
+            gamma, src = gs
+            contrib = jax.lax.dynamic_index_in_dim(g, src, axis=0, keepdims=False)
+            return acc + gamma.astype(jnp.float32) * contrib, None
+
+        acc, _ = jax.lax.scan(
+            body, jnp.zeros_like(d32), (arrays.gammas, srcs)
+        )
+        return acc.astype(x.dtype)
+
+    mixed = _zip_leaf_map(params, state.rings, mix_leaf, serialize)
+    return mixed, state
+
+
+def mix_ppermute_pool_stale(
+    params: PyTree,
+    state: ShardStaleState,
+    gammas: jax.Array,
+    pool: "PermPool",
+    delays: jax.Array,
+    axis_name: str,
+) -> tuple[PyTree, ShardStaleState]:
+    """Bounded-delay :func:`mix_ppermute_pool`: each staged ppermute
+    moves the DELAYED payload; gammas and delays are data.
+
+    Identity slots contribute the node's own delayed payload (the
+    sender-side ring applies to self-delivery too, matching
+    :func:`stale_view` semantics), non-identity slots ppermute it.
+    Accumulation (f32, slot order, zeros init) mirrors the fresh pool
+    transport op-for-op, so ``delays == 0`` reproduces it bitwise.
+    Returns ``(mixed, new_state)``.
+    """
+    n = pool.n_nodes
+    ident = pool.identity
+    if gammas.shape != (pool.capacity,):
+        raise ValueError(
+            f"gammas must be ({pool.capacity},) to match the pool, "
+            f"got {gammas.shape}"
+        )
+    state = shard_stale_push(state, params)
+    slot = _stale_slot(state, delays, axis_name)
+
+    def mix_leaf(x, ring):
+        d32 = jax.lax.dynamic_index_in_dim(ring, slot, axis=0, keepdims=False)
+        acc = jnp.zeros_like(d32)
+        for l, perm in enumerate(pool.perms):
+            if perm == ident:
+                contrib = d32
+            else:
+                pairs = [(int(perm[i]), i) for i in range(n)]
+                contrib = jax.lax.ppermute(d32, axis_name, pairs)
+            acc = acc + gammas[l].astype(jnp.float32) * contrib
+        return acc.astype(x.dtype)
+
+    mixed = _zip_leaf_map(params, state.rings, mix_leaf, serialize=False)
+    return mixed, state
 
 
 def _serialized_leaf_map(params: PyTree, mix_leaf, serialize: bool) -> PyTree:

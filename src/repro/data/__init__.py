@@ -3,8 +3,11 @@
 from . import drift, partition, synthetic, tokens
 from .drift import (
     AbruptLabelSwap,
+    ConceptShift,
+    FeatureDrift,
     GradualDirichlet,
     NodeChurn,
+    features_stream,
     labels_stream,
     partition_from_pi,
 )
@@ -23,8 +26,11 @@ __all__ = [
     "synthetic",
     "tokens",
     "AbruptLabelSwap",
+    "ConceptShift",
+    "FeatureDrift",
     "GradualDirichlet",
     "NodeChurn",
+    "features_stream",
     "labels_stream",
     "partition_from_pi",
     "cluster_partition",

@@ -20,9 +20,24 @@ subsystem exists for:
   the slot) and optional offline windows during which the node emits no
   observations (labels = -1, which the streaming estimator masks).
 
+Two feature-space drift shapes complete the taxonomy (both carry a
+Gaussian class-conditional feature model, so they emit (features,
+labels) pairs via ``sample``):
+
+* ``FeatureDrift``          -- covariate shift: at ``t_drift`` every node's
+  feature distribution gains a seeded node-specific mean offset while
+  the label marginals never move (``Pi(t) = Pi0`` for all t). The
+  label-space detector is provably blind to it; monitoring must watch a
+  feature statistic.
+* ``ConceptShift``          -- ``P(y | x)`` changes: at ``t_drift`` the
+  labels are re-mapped by a seeded class permutation while the feature
+  process is untouched. The label marginals permute with it, so the
+  streaming-Pi detector CAN see this one.
+
 ``labels_stream`` materializes any scenario into a (steps, n, batch)
-array for presampled rollouts, and ``partition_from_pi`` resamples a
-dataset partition matching a target Pi -- the bridge from a drifted
+array for presampled rollouts (``features_stream`` is the
+feature-bearing twin), and ``partition_from_pi`` resamples a dataset
+partition matching a target Pi -- the bridge from a drifted
 distribution back to ``run_classification``'s per-node index lists.
 """
 
@@ -36,7 +51,10 @@ __all__ = [
     "AbruptLabelSwap",
     "GradualDirichlet",
     "NodeChurn",
+    "FeatureDrift",
+    "ConceptShift",
     "labels_stream",
+    "features_stream",
     "partition_from_pi",
 ]
 
@@ -242,6 +260,156 @@ class NodeChurn:
         return labels
 
 
+@dataclasses.dataclass
+class FeatureDrift:
+    """Covariate shift: node-specific Gaussian feature-mean offsets
+    switch on at ``t_drift``; the label process never moves.
+
+    Features are drawn from a shared class-conditional Gaussian model
+    (seeded class means at pairwise distance ~``class_sep``, isotropic
+    ``noise``); from ``t_drift`` on, node ``i``'s features are all
+    shifted by a seeded unit direction scaled to ``shift``. Because
+    ``Pi(t) = Pi0`` for every t, a detector watching label proportions
+    (``StreamingPiEstimator`` + heterogeneity proxy) sees NOTHING --
+    the scenario exists to exercise feature-statistic monitoring
+    (e.g. feed ``DriftDetector`` the per-step deviation of the batch
+    feature mean from a pre-drift baseline) and mean-re-estimation
+    recovery.
+    """
+
+    Pi0: np.ndarray
+    t_drift: int
+    dim: int = 8
+    class_sep: float = 4.0
+    shift: float = 3.0
+    noise: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        self.Pi0 = _check_pi(self.Pi0, "Pi0")
+        if self.dim < 1:
+            raise ValueError(f"dim must be >= 1, got {self.dim}")
+        if self.shift < 0 or self.noise < 0:
+            raise ValueError("shift and noise must be non-negative")
+        n, K = self.Pi0.shape
+        rng = np.random.default_rng(self.seed)
+        self._class_means = self.class_sep * rng.normal(size=(K, self.dim))
+        direc = rng.normal(size=(n, self.dim))
+        direc /= np.linalg.norm(direc, axis=1, keepdims=True)
+        self._node_shift = self.shift * direc
+
+    @property
+    def n_nodes(self) -> int:
+        return self.Pi0.shape[0]
+
+    @property
+    def num_classes(self) -> int:
+        return self.Pi0.shape[1]
+
+    def Pi(self, t: int) -> np.ndarray:
+        return self.Pi0  # label marginals are drift-invariant by design
+
+    def feature_shift(self, t: int) -> np.ndarray:
+        """The (n, dim) mean offset in effect at step t (the oracle the
+        detector smoke test checks its statistic against)."""
+        if t < self.t_drift:
+            return np.zeros_like(self._node_shift)
+        return self._node_shift
+
+    def sample_labels(self, t: int, batch: int, rng: np.random.Generator) -> np.ndarray:
+        return _sample_rows(self.Pi0, batch, rng)
+
+    def sample(
+        self, t: int, batch: int, rng: np.random.Generator
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """One step's observations: ``(X (n, batch, dim) f32, y (n, batch))``."""
+        y = self.sample_labels(t, batch, rng)
+        X = self._class_means[y] + self.noise * rng.normal(
+            size=(self.n_nodes, batch, self.dim)
+        )
+        X = X + self.feature_shift(t)[:, None, :]
+        return X.astype(np.float32), y
+
+
+@dataclasses.dataclass
+class ConceptShift:
+    """``P(y | x)`` drift: from ``t_drift`` on, labels are re-mapped by a
+    seeded class permutation while the feature process is untouched.
+
+    The latent class (which drives the features through the same
+    Gaussian model as :class:`FeatureDrift`) is always drawn from
+    ``Pi0``; the EMITTED label is ``class_perm[latent]`` once the drift
+    hits. The label marginals permute accordingly --
+    ``Pi(t)[:, class_perm[k]] = Pi0[:, k]`` -- so the streaming-Pi
+    detector CAN see this drift (unlike pure covariate shift), and a
+    model trained pre-drift misclassifies exactly the moved classes
+    until it adapts.
+
+    ``class_perm=None`` draws a seeded derangement-ish permutation
+    (re-drawn until it is not the identity; requires ``K >= 2``).
+    """
+
+    Pi0: np.ndarray
+    t_drift: int
+    class_perm: np.ndarray | None = None
+    dim: int = 8
+    class_sep: float = 4.0
+    noise: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        self.Pi0 = _check_pi(self.Pi0, "Pi0")
+        n, K = self.Pi0.shape
+        rng = np.random.default_rng(self.seed)
+        if self.class_perm is None:
+            if K < 2:
+                raise ValueError("a default class_perm needs K >= 2")
+            perm = np.arange(K)
+            while np.array_equal(perm, np.arange(K)):
+                perm = rng.permutation(K)
+            self.class_perm = perm
+        self.class_perm = np.asarray(self.class_perm)
+        if not np.array_equal(np.sort(self.class_perm), np.arange(K)):
+            raise ValueError("class_perm must be a permutation of the classes")
+        self._class_means = self.class_sep * rng.normal(size=(K, self.dim))
+
+    @property
+    def n_nodes(self) -> int:
+        return self.Pi0.shape[0]
+
+    @property
+    def num_classes(self) -> int:
+        return self.Pi0.shape[1]
+
+    def Pi(self, t: int) -> np.ndarray:
+        if t < self.t_drift:
+            return self.Pi0
+        # emitted label c had latent class argsort(perm)[c]
+        return self.Pi0[:, np.argsort(self.class_perm)]
+
+    def sample_labels(self, t: int, batch: int, rng: np.random.Generator) -> np.ndarray:
+        latent = _sample_rows(self.Pi0, batch, rng)
+        if t < self.t_drift:
+            return latent
+        return self.class_perm[latent].astype(np.int32)
+
+    def sample(
+        self, t: int, batch: int, rng: np.random.Generator
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """One step's observations: features keyed by the LATENT class,
+        labels by the (possibly permuted) emitted class."""
+        latent = _sample_rows(self.Pi0, batch, rng)
+        X = self._class_means[latent] + self.noise * rng.normal(
+            size=(self.n_nodes, batch, self.dim)
+        )
+        y = (
+            latent
+            if t < self.t_drift
+            else self.class_perm[latent].astype(np.int32)
+        )
+        return X.astype(np.float32), y
+
+
 def labels_stream(
     scenario, steps: int, batch: int, seed: int = 0
 ) -> np.ndarray:
@@ -255,6 +423,28 @@ def labels_stream(
     return np.stack(
         [scenario.sample_labels(t, batch, rng) for t in range(steps)]
     ) if steps else np.zeros((0, scenario.n_nodes, batch), np.int32)
+
+
+def features_stream(
+    scenario, steps: int, batch: int, seed: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """Feature-bearing twin of :func:`labels_stream` for scenarios with a
+    ``sample(t, batch, rng)`` method (:class:`FeatureDrift`,
+    :class:`ConceptShift`): returns ``(X (steps, n, batch, dim) f32,
+    y (steps, n, batch) int32)``, one rng for the whole stream so the
+    same arguments are bit-reproducible.
+    """
+    rng = np.random.default_rng(seed)
+    if not steps:
+        return (
+            np.zeros((0, scenario.n_nodes, batch, scenario.dim), np.float32),
+            np.zeros((0, scenario.n_nodes, batch), np.int32),
+        )
+    pairs = [scenario.sample(t, batch, rng) for t in range(steps)]
+    return (
+        np.stack([X for X, _ in pairs]),
+        np.stack([y for _, y in pairs]),
+    )
 
 
 def partition_from_pi(

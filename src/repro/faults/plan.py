@@ -122,9 +122,21 @@ class FaultPlan:
         rng = np.random.default_rng([self.seed, _STREAM_DELAYS])
         lagging = rng.random((T, n)) < self.straggler_rate
         draw = rng.integers(1, self.tau_max + 1, size=(T, n), dtype=np.int32)
-        delays[lagging] = draw[lagging]
+        # defensive clamp to the ring's reach: a delay past tau_max would
+        # alias modulo the (tau_max + 1)-deep ring and silently read a
+        # NEWER state than asked for (the draw above already respects the
+        # bound; the clamp pins the invariant against future draw changes)
+        delays[lagging] = np.minimum(draw[lagging], self.tau_max)
+        # offline nodes carry delay 0: the alive mask governs them (their
+        # transfers are cut by schedule repair), not staleness
         delays[~self.alive] = 0
         return delays
+
+    @property
+    def ring_depth(self) -> int:
+        """Ring-buffer depth that makes every drawn delay reachable:
+        ``tau_max + 1`` slots hold delays 0..tau_max without aliasing."""
+        return self.tau_max + 1
 
     def dropped_edges(self, t: int) -> np.ndarray:
         """(m, 2) int64 array of (src, dst) drops at step ``t``.
@@ -182,6 +194,49 @@ class FaultPlan:
             ok[edges[:, 0], edges[:, 1]] = False
         return float(ok.sum()) / (n * (n - 1))
 
+    def transfer_fracs(
+        self, t: int, deadline: int | None = None, mode: str = "wait"
+    ) -> tuple[float, float, float]:
+        """Three-way fate split of step ``t``'s n(n-1) directed transfers:
+        ``(on_time, deferred, dropped)``, summing to 1.
+
+        * *dropped*: an endpoint is dead or the edge was dropped -- the
+          bytes never arrive. Under ``mode="degrade"`` with a
+          ``deadline``, a source later than the deadline joins this
+          bucket (the repaired schedule self-loops it for the step).
+        * *deferred*: the source is a straggler (``delays[t, src] > 0``)
+          but the transfer is otherwise alive -- the bytes DO arrive,
+          past their freshness deadline (the wait policy consumes them
+          stale).
+        * *on_time*: everything else.
+
+        ``on_time + deferred == delivered_frac(t)`` under ``wait`` (the
+        back-compatible two-way split); ``degrade`` moves the
+        past-deadline deferred mass into dropped. This is the honest
+        pair for :meth:`repro.train.metrics.CommMeter.tick`'s
+        ``(delivered_frac, deferred_frac)``.
+        """
+        if mode not in ("wait", "degrade"):
+            raise ValueError(f"mode must be 'wait' or 'degrade', got {mode!r}")
+        n = self.n_nodes
+        if n < 2:
+            return 1.0, 0.0, 0.0
+        a = np.asarray(self.alive[t], bool).copy()
+        d = np.asarray(self.delays[t])
+        if mode == "degrade" and deadline is not None:
+            a &= ~(d > deadline)
+        ok = np.outer(a, a)
+        np.fill_diagonal(ok, False)
+        edges = self.dropped_edges(t)
+        if edges.size:
+            ok[edges[:, 0], edges[:, 1]] = False
+        total = n * (n - 1)
+        delivered = int(ok.sum())
+        late_src = (d > 0) & a
+        deferred = int(ok[late_src, :].sum())
+        on_time = delivered - deferred
+        return on_time / total, deferred / total, (total - delivered) / total
+
     def fingerprint(self) -> str:
         """sha256 over the full derived trace (the cross-process
         determinism witness: two processes with the same config must
@@ -221,15 +276,24 @@ class FaultInjector:
     a compiled rollout consumes as scan data. ``rebind`` swaps the
     fault-free base schedule after an online topology refresh -- the
     degradation then applies to the NEW topology from the next step on.
+
+    ``policy`` (a :class:`repro.core.mixing.StragglerPolicy`) resolves
+    the plan's raw delay trace against a deadline: each step's alive
+    mask, edge drops AND past-deadline stragglers fold into one
+    schedule repair, and the streamed delay vectors become the policy's
+    effective (clamped / zeroed) delays. ``policy=None`` keeps the
+    PR 6 behavior: repair on crashes/drops only, raw delays passed
+    through.
     """
 
-    def __init__(self, plan: FaultPlan, base: ScheduleArrays):
+    def __init__(self, plan: FaultPlan, base: ScheduleArrays, policy=None):
         if base.n_nodes != plan.n_nodes:
             raise ValueError(
                 f"schedule is for {base.n_nodes} nodes, plan for {plan.n_nodes}"
             )
         self.plan = plan
         self.base = base
+        self.policy = policy
 
     def rebind(self, base: ScheduleArrays) -> None:
         if base.n_nodes != self.plan.n_nodes or base.l_max != self.base.l_max:
@@ -256,11 +320,21 @@ class FaultInjector:
         zero-retrace argument."""
         gammas = np.empty((k, self.base.l_max), np.float32)
         perms = np.empty((k, self.base.l_max, self.base.n_nodes), np.int32)
+        delays = np.empty((k, self.base.n_nodes), np.int32)
         for j in range(k):
-            arrays_t = self.arrays_at(t0 + j)
+            t = t0 + j
+            if self.policy is None:
+                arrays_t = self.arrays_at(t)
+                delays[j] = self.plan.delays[t]
+            else:
+                arrays_t, delays[j] = self.policy.apply(
+                    self.base,
+                    self.plan.delays[t],
+                    alive_mask=self.plan.alive[t],
+                    dropped_edges=self.plan.dropped_edges(t),
+                )
             gammas[j] = np.asarray(arrays_t.gammas)
             perms[j] = np.asarray(arrays_t.perms)
-        delays = np.asarray(self.plan.delays[t0 : t0 + k], np.int32)
         return gammas, perms, delays
 
 

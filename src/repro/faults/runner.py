@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core.mixing import (
     ScheduleArrays,
+    StragglerPolicy,
     mix_schedule_arrays_stale,
     stale_buffer_init,
     stale_push,
@@ -61,6 +62,7 @@ def run_faulty_mean_estimation(
     checkpoint_every: int = 1,
     resume: bool = False,
     stop_after_segments: int | None = None,
+    staleness: StragglerPolicy | None = None,
 ) -> dict:
     """D-SGD mean estimation under a seeded fault plan.
 
@@ -85,6 +87,14 @@ def run_faulty_mean_estimation(
       stop_after_segments: execute at most this many segments in this
         process then return (the scripted "crash" of recovery drills);
         ``stopped_at`` records where.
+      staleness: a ``StragglerPolicy`` resolving the plan's raw delays
+        against a deadline. ``"wait"`` consumes every late payload at
+        its (clamped) staleness; ``"degrade"`` treats past-deadline
+        stragglers as offline for the step (one combined schedule
+        repair with the crash/drop faults). The ring depth becomes the
+        POLICY's ``ring_depth`` and the meter splits delivered bytes
+        into on-time vs deferred (``comm["deferred_bytes"]``). ``None``
+        keeps the PR 6 behavior: raw delays, ring sized by the plan.
 
     Returns a dict with the fault-free driver's keys
     (``mean/max/min_sq_error``, ``theta``, ``n_traces``, ``swaps``,
@@ -113,9 +123,9 @@ def run_faulty_mean_estimation(
     if zs.ndim != 3 or zs.shape[0] != steps or zs.shape[1] != n:
         raise ValueError(f"zs must be ({steps}, {n}, batch), got {zs.shape}")
 
-    depth = plan.tau_max + 1
+    depth = staleness.ring_depth if staleness is not None else plan.ring_depth
     buffer = stale_buffer_init(theta, depth)
-    injector = FaultInjector(plan, schedule)
+    injector = FaultInjector(plan, schedule, policy=staleness)
     lr = float(lr)
 
     n_traces = 0
@@ -197,8 +207,23 @@ def run_faulty_mean_estimation(
         mse_l.append(np.asarray(e_mean))
         mx_l.append(np.asarray(e_max))
         mn_l.append(np.asarray(e_min))
-        frac = float(np.mean([plan.delivered_frac(t) for t in range(t0, t0 + k)]))
-        meter.tick(k, delivered_frac=frac)
+        if staleness is not None:
+            fates = [
+                plan.transfer_fracs(
+                    t, deadline=staleness.tau_max, mode=staleness.mode
+                )
+                for t in range(t0, t0 + k)
+            ]
+            on_time = float(np.mean([f[0] for f in fates]))
+            deferred = float(np.mean([f[1] for f in fates]))
+            meter.tick(
+                k, delivered_frac=on_time + deferred, deferred_frac=deferred
+            )
+        else:
+            frac = float(
+                np.mean([plan.delivered_frac(t) for t in range(t0, t0 + k)])
+            )
+            meter.tick(k, delivered_frac=frac)
         t0 += k
         seg_idx += 1
         theta, buffer = carry

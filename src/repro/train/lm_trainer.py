@@ -37,24 +37,32 @@ from repro.core.compression import (
     ef_init,
     make_compressor,
     mix_arrays_sharded_ef,
+    mix_arrays_sharded_stale_ef,
     mix_dense_sharded_ef,
     mix_ppermute_pool_ef,
+    mix_ppermute_pool_stale_ef,
 )
 from repro.core.mixing import (
     BirkhoffSchedule,
     PermPool,
     PoolSwap,
     ScheduleArrays,
+    ShardStaleState,
+    StragglerPolicy,
     autotune_sharded_transport,
     mix_arrays_sharded,
+    mix_arrays_sharded_stale,
     mix_dense_sharded,
     mix_ppermute,
     mix_ppermute_pool,
+    mix_ppermute_pool_stale,
+    straggler_pool_stream,
+    straggler_stream,
 )
 from repro.models import registry
 from repro.models.common import ModelConfig
 from .checkpoints import latest_step, restore_checkpoint, save_checkpoint
-from .metrics import CommMeter, mix_bytes_per_step
+from .metrics import CommMeter, mix_bytes_per_step, staleness_transfer_fracs
 from .sharding import make_param_specs
 
 PyTree = Any
@@ -92,6 +100,12 @@ class TrainSetup:
     # resolved wire format (repro.core.compression.Compressor) when the
     # online transports run EF-compressed gossip; None = uncompressed
     compression: "Compressor | None" = None
+    # bounded-delay gossip policy (repro.core.mixing.StragglerPolicy).
+    # When set, the step takes per-step delays as a second trailing data
+    # argument -- train_step(params, opt_state, batch, mix_w, delays) --
+    # and the sender-side stale ring travels in the opt-state dict under
+    # "stale" (build it with init_opt_state). None = fresh gossip.
+    staleness: "StragglerPolicy | None" = None
 
     def abstract_params(self) -> PyTree:
         return jax.eval_shape(self.init_params, jax.random.PRNGKey(0))
@@ -135,18 +149,34 @@ class TrainSetup:
         operand: calling the same jitted multi-step with a refreshed W
         is a value change, not a shape change, so the hot swap compiles
         nothing (asserted in tests/test_distributed.py).
+
+        With ``staleness`` set the signature grows per-STEP operands --
+        ``multi_step(params, opt_state, batches, mix_stack, delays)``
+        where ``mix_stack`` stacks the per-step mixing operand over a
+        leading ``(k, ...)`` time axis (a ``ScheduleArrays`` of stacked
+        gammas/perms, or ``(k, capacity)`` pool gammas) and ``delays``
+        is ``(k, n)`` int32 -- both scanned as xs, so a straggler burst
+        or a per-step degrade repair is pure data into the one trace.
+        ``TrainSetup.run_segments`` builds these stacks from the policy
+        and a raw delay trace; see ``straggler_stream`` /
+        ``straggler_pool_stream``.
         """
         if rollout == "scan":
             def multi_step(params, momentum_state, batches, *mix_w):
                 self._check_online_args(mix_w)
+                stale = self.online_w and self.staleness is not None
+                # fresh mixing operands are loop-invariant (closed over);
+                # stale operands are per-step and scan as xs
+                xs = (batches,) + mix_w if stale else batches
 
-                def body(carry, batch_t):
+                def body(carry, x):
                     p, m = carry
-                    p, m, loss = self.train_step(p, m, batch_t, *mix_w)
+                    step_args = x if stale else (x,) + mix_w
+                    p, m, loss = self.train_step(p, m, *step_args)
                     return (p, m), loss
 
                 (params, momentum_state), losses = jax.lax.scan(
-                    body, (params, momentum_state), batches
+                    body, (params, momentum_state), xs
                 )
                 return params, momentum_state, losses
 
@@ -157,11 +187,22 @@ class TrainSetup:
                 if self._jitted_step is None:
                     self._jitted_step = jax.jit(self.train_step)
                 k = jax.tree_util.tree_leaves(batches)[0].shape[0]
+                stale = self.online_w and self.staleness is not None
                 losses = []
                 for t in range(k):
                     batch_t = jax.tree_util.tree_map(lambda x: x[t], batches)
+                    # per-step slices of the stacked stale operands; the
+                    # fresh path passes mix_w through whole
+                    extra = (
+                        tuple(
+                            jax.tree_util.tree_map(lambda x: x[t], w)
+                            for w in mix_w
+                        )
+                        if stale
+                        else mix_w
+                    )
                     params, momentum_state, loss = self._jitted_step(
-                        params, momentum_state, batch_t, *mix_w
+                        params, momentum_state, batch_t, *extra
                     )
                     losses.append(loss)
                 return params, momentum_state, jnp.stack(losses)
@@ -170,6 +211,13 @@ class TrainSetup:
         raise ValueError(f"unknown rollout {rollout!r}")
 
     def _check_online_args(self, mix_w: tuple) -> None:
+        if self.online_w and self.staleness is not None:
+            if len(mix_w) != 2:
+                raise TypeError(
+                    "staleness setup: call multi_step(params, opt_state, "
+                    "batches, mix_stack, delays)"
+                )
+            return
         if self.online_w and len(mix_w) != 1:
             raise TypeError(
                 "online_w setup: call multi_step(params, opt_state, batches, mix_w)"
@@ -193,6 +241,7 @@ class TrainSetup:
         checkpoint_every: int = 1,
         resume: bool = False,
         stop_after_segments: int | None = None,
+        delays=None,
     ) -> dict:
         """Segmented online rollout with hot-swap handoff at boundaries.
 
@@ -237,6 +286,20 @@ class TrainSetup:
         checkpoint cannot capture -- resume from the returned ``setup``
         in that case.
 
+        Bounded-delay gossip: on a ``staleness`` setup, ``delays`` is
+        the raw ``(steps, n)`` non-negative delay trace (default all
+        zeros -- bitwise the fresh run). Each segment resolves its slice
+        against the policy host-side (``straggler_stream`` /
+        ``straggler_pool_stream``) into per-step stacked operands, so
+        wait-clamping, per-step degrade repairs, AND a hook's hot swap
+        all stay value changes into the one compiled multi-step. The
+        hook still trades in BASE operands (ScheduleArrays / pool
+        gammas; dense W has no per-sender ring semantics and is
+        rejected), and the checkpoint stores the base operand -- a
+        resumed run re-resolves the same delays from ``t0``, bitwise.
+        The meter splits delivered bytes into on-time vs deferred per
+        the closed form (``comm["deferred_bytes"]``).
+
         Returns ``{"params", "opt_state", "losses", "n_traces",
         "swaps", "recompiles", "segment_s", "comm", "setup", "mix",
         "resumed_from", "stopped_at"}``
@@ -262,18 +325,55 @@ class TrainSetup:
         steps = jax.tree_util.tree_leaves(batches)[0].shape[0]
         setup = self
         n_traces = 0
+        if self.staleness is None:
+            if delays is not None:
+                raise ValueError(
+                    "delays given but this setup has no staleness policy: "
+                    "build with make_train_setup(staleness=StragglerPolicy(...))"
+                )
+        else:
+            delays = (
+                np.zeros((steps, setup.n_nodes), np.int64)
+                if delays is None
+                else np.asarray(delays, np.int64)
+            )
+            if delays.shape != (steps, setup.n_nodes):
+                raise ValueError(
+                    f"delays must be ({steps}, {setup.n_nodes}), "
+                    f"got {delays.shape}"
+                )
+            if delays.size and delays.min() < 0:
+                raise ValueError("delays must be non-negative")
 
         def jit_counted(ms):
-            def counted(p, m, b, w):
+            def counted(p, m, b, *w):
                 nonlocal n_traces
                 n_traces += 1
-                return ms(p, m, b, w)
+                return ms(p, m, b, *w)
 
             return jax.jit(counted)
 
         msj = jit_counted(setup.multi_step_fn(rollout))
         pool = setup.pool
         mix = _as_mix_operand(mix, setup, pool)
+
+        def stale_stream(base, d_seg):
+            # resolve this segment's delay slice against the policy into
+            # per-step stacked scan operands (host-side control plane)
+            pol = setup.staleness
+            if isinstance(base, ScheduleArrays):
+                g, p, eff = straggler_stream(pol, base, d_seg)
+                return ScheduleArrays(gammas=g, perms=p), eff
+            arr = np.asarray(base)
+            if arr.ndim == 1:
+                g, eff = straggler_pool_stream(pol, base, pool, d_seg)
+                return g, eff
+            raise ValueError(
+                "staleness needs a ScheduleArrays or pool-gamma mixing "
+                "operand: a dense (n, n) W has no per-sender payload to "
+                "delay (decompose it with schedule_from_matrix)"
+            )
+
         meter = CommMeter(per_step_bytes=setup.comm_bytes_per_step or 0)
         losses, swaps, segment_s = [], [], []
         recompiles = 0
@@ -302,10 +402,30 @@ class TrainSetup:
             k = min(segment_len, steps - t0)
             seg = jax.tree_util.tree_map(lambda x: x[t0 : t0 + k], batches)
             tic = time.perf_counter()
-            params, opt_state, loss = msj(params, opt_state, seg, mix)
+            if setup.staleness is not None:
+                d_seg = delays[t0 : t0 + k]
+                w_stack, eff = stale_stream(mix, d_seg)
+                params, opt_state, loss = msj(
+                    params, opt_state, seg, w_stack, eff
+                )
+            else:
+                params, opt_state, loss = msj(params, opt_state, seg, mix)
             loss.block_until_ready()  # segment wall time is the overlap probe
             segment_s.append(time.perf_counter() - tic)
-            meter.tick(k)
+            if setup.staleness is not None:
+                fates = [
+                    staleness_transfer_fracs(
+                        d_seg[j], setup.staleness.tau_max, setup.staleness.mode
+                    )
+                    for j in range(k)
+                ]
+                on_time = float(np.mean([f[0] for f in fates]))
+                deferred = float(np.mean([f[1] for f in fates]))
+                meter.tick(
+                    k, delivered_frac=on_time + deferred, deferred_frac=deferred
+                )
+            else:
+                meter.tick(k)
             losses.append(np.asarray(loss))
             t0 += k
             seg_idx += 1
@@ -468,6 +588,7 @@ def make_train_setup(
     sharded_transport: str = "auto",
     pool: PermPool | None = None,
     compression: "Compressor | str | None" = None,
+    staleness: "StragglerPolicy | None" = None,
 ) -> TrainSetup:
     """Build the distributed train step for (cfg, mesh, mode).
 
@@ -522,8 +643,50 @@ def make_train_setup(
     explicitly. The identity wire routes to the uncompressed transports
     at trace time, so it is bitwise the ``compression=None`` run -- the
     A/B control arm.
+
+    ``staleness`` (a ``repro.core.mixing.StragglerPolicy``) turns the
+    online mixing into bounded-delay gossip: every node keeps a
+    sender-side ring of its last ``tau_max + 1`` wire payloads in the
+    opt-state dict under ``"stale"`` (build it with
+    ``TrainSetup.init_opt_state`` -- it rides the scan carry next to
+    the EF memory, so hot swaps stay zero-retrace), and the step takes
+    a per-step ``(n,)`` delay vector as a second trailing data argument
+    after ``mix_w``. A straggler's payload is then consumed
+    ``delays[i]`` pushes old; ``delays == 0`` reads back the value just
+    pushed, reproducing the fresh transports bitwise. Only the
+    per-sender-payload transports compose (ScheduleArrays on allgather,
+    gammas on pool -- a dense (n, n) ``mix_w`` is rejected at mix
+    time); fsdp/dsgd_pod (no per-node ring) and ``gossip_every > 1``
+    (off-steps would desynchronize ring pushes from consumption) are
+    rejected explicitly. Composes with ``compression``: the ring then
+    stores the compressed wire payload and the EF memory stays local
+    and fresh (see ``repro.core.compression``).
     """
     compressor = make_compressor(compression)
+    if staleness is not None:
+        if not isinstance(staleness, StragglerPolicy):
+            raise TypeError(
+                f"staleness must be a StragglerPolicy, got {type(staleness)}"
+            )
+        if mode != "dsgd":
+            raise ValueError(
+                f"staleness is incompatible with mode={mode!r}: the "
+                "bounded-delay ring is per-NODE sender state, which only "
+                "the dsgd shard_map transports carry (fsdp all-reduces "
+                "in-network; dsgd_pod mixes by GSPMD einsum)"
+            )
+        if not online_w:
+            raise ValueError(
+                "staleness rides the online (retrace-free) transports: "
+                "build with online_w=True"
+            )
+        if gossip_every > 1:
+            raise ValueError(
+                f"staleness is incompatible with gossip_every={gossip_every}: "
+                "off-steps would push no ring slot while delays keep "
+                "counting pushes, silently re-basing every delay -- run "
+                "bounded-delay gossip with gossip_every=1"
+            )
     if compressor is not None:
         if mode == "fsdp":
             raise ValueError(
@@ -694,7 +857,7 @@ def make_train_setup(
     else:
         grad_of = grad_of_single
 
-    def _step_impl(params, momentum_state, batch, mix_w=None):
+    def _step_impl(params, momentum_state, batch, mix_w=None, delays=None):
         if node_axis is None:
             loss, grads = grad_of(params, batch)
             new_params, new_m = _sgd_update(params, grads, momentum_state, lr, momentum)
@@ -753,6 +916,20 @@ def make_train_setup(
                     "entry (build it with TrainSetup.init_opt_state)"
                 )
             e1 = squeeze(ef_tree) if ef_tree is not None else None
+            stale_tree = m.get("stale") if isinstance(m, dict) else None
+            if staleness is not None and stale_tree is None:
+                raise ValueError(
+                    "bounded-delay mixing carries its sender-side ring in "
+                    "the opt state: pass momentum_state including a 'stale' "
+                    "entry (build it with TrainSetup.init_opt_state)"
+                )
+            st1 = (
+                ShardStaleState(
+                    rings=squeeze(stale_tree["buf"]), head=stale_tree["head"]
+                )
+                if stale_tree is not None
+                else None
+            )
             # In dsgd_pod mode the within-pod `data` axis stays automatic:
             # GSPMD data-parallelizes the loss/grad over it (the batch input
             # sharding carries P(pod, data, ...)).
@@ -795,7 +972,41 @@ def make_train_setup(
                     "momentum_state={'step': jnp.zeros((), jnp.int32), 'm': ...}"
                 )
             new_e1 = None
-            if compressor is not None:
+            new_st1 = None
+            if staleness is not None:
+                # bounded-delay dispatch: same transport fork as do_mix,
+                # with the sender-side ring and this step's delay vector
+                # threaded as data (gossip_every > 1 was rejected at
+                # build time, so every step both pushes and mixes)
+                w, d = w_args
+                stale_dense_msg = (
+                    "staleness needs a per-sender payload to delay: pass "
+                    "mix_w as ScheduleArrays (allgather) or pool gammas, "
+                    "not a dense (n, n) W"
+                )
+                if compressor is not None:
+                    if resolved_transport == "pool":
+                        mixed, new_e1, new_st1 = mix_ppermute_pool_stale_ef(
+                            half, e1, st1, w, pool, d, node_axis, compressor
+                        )
+                    elif isinstance(w, ScheduleArrays):
+                        mixed, new_e1, new_st1 = mix_arrays_sharded_stale_ef(
+                            half, e1, st1, w, d, node_axis, compressor
+                        )
+                    else:
+                        raise TypeError(stale_dense_msg)
+                else:
+                    if resolved_transport == "pool":
+                        mixed, new_st1 = mix_ppermute_pool_stale(
+                            half, st1, w, pool, d, node_axis
+                        )
+                    elif isinstance(w, ScheduleArrays):
+                        mixed, new_st1 = mix_arrays_sharded_stale(
+                            half, st1, w, d, node_axis
+                        )
+                    else:
+                        raise TypeError(stale_dense_msg)
+            elif compressor is not None:
                 if gossip_every > 1:
                     mixed, new_e1 = jax.lax.cond(
                         jnp.mod(step, gossip_every) == 0,
@@ -823,6 +1034,12 @@ def make_train_setup(
                     new_m_out["ef"] = (
                         unsqueeze(new_e1) if new_e1 is not None else ef_tree
                     )
+                if "stale" in m:
+                    new_m_out["stale"] = (
+                        {"buf": unsqueeze(new_st1.rings), "head": new_st1.head}
+                        if new_st1 is not None
+                        else stale_tree
+                    )
             else:
                 new_m_out = new_m_tree
             return unsqueeze(mixed), new_m_out, loss_mean
@@ -832,7 +1049,14 @@ def make_train_setup(
         )
         m_inner = node_specs if momentum > 0.0 else None
         if isinstance(momentum_state, dict):
-            key_spec = {"step": P(), "m": m_inner, "ef": node_specs}
+            key_spec = {
+                "step": P(),
+                "m": m_inner,
+                "ef": node_specs,
+                # ring leaves carry (n, depth, *shape): node-sharded like
+                # params; the head counter is a replicated scalar
+                "stale": {"buf": node_specs, "head": P()},
+            }
             mom_specs = {k: key_spec[k] for k in momentum_state}
         else:
             mom_specs = m_inner
@@ -845,6 +1069,11 @@ def make_train_setup(
             w_specs = jax.tree_util.tree_map(lambda _: P(), mix_w)
             in_specs = in_specs + (w_specs,)
             args = args + (mix_w,)
+            if staleness is not None:
+                # the (n,) delay vector is replicated; each node picks
+                # its own entry by axis_index inside the transport
+                in_specs = in_specs + (P(),)
+                args = args + (delays,)
         return shard_map(
             per_node,
             mesh=mesh,
@@ -854,7 +1083,10 @@ def make_train_setup(
             check_vma=False,
         )(*args)
 
-    if online_w:
+    if online_w and staleness is not None:
+        def train_step(params, momentum_state, batch, mix_w, delays):
+            return _step_impl(params, momentum_state, batch, mix_w, delays)
+    elif online_w:
         def train_step(params, momentum_state, batch, mix_w):
             return _step_impl(params, momentum_state, batch, mix_w)
     else:
@@ -868,7 +1100,7 @@ def make_train_setup(
             cfg, mesh, mode=mode, schedule=schedule, lr=lr, momentum=momentum,
             impl=impl, grad_accum=grad_accum, gossip_every=gossip_every,
             online_w=online_w, sharded_transport="pool", pool=new_pool,
-            compression=compressor,
+            compression=compressor, staleness=staleness,
         )
 
     def init_opt_state(params: PyTree):
@@ -882,6 +1114,21 @@ def make_train_setup(
             out["m"] = jax.tree_util.tree_map(jnp.zeros_like, params)
         if compressor is not None:
             out["ef"] = ef_init(params)
+        if staleness is not None:
+            # per-node sender-side ring, all ring_depth slots primed with
+            # the initial payload (a day-one straggler reads the shared
+            # init, never garbage); leaves (n, depth, *shape) in f32, the
+            # wire dtype
+            out["stale"] = {
+                "buf": jax.tree_util.tree_map(
+                    lambda x: jnp.tile(
+                        x.astype(jnp.float32)[:, None],
+                        (1, staleness.ring_depth) + (1,) * (x.ndim - 1),
+                    ),
+                    params,
+                ),
+                "head": jnp.zeros((), jnp.int32),
+            }
         if not out:
             return None
         if set(out) == {"m"}:
@@ -900,6 +1147,7 @@ def make_train_setup(
         pool=pool,
         comm_bytes_per_step=comm_bytes,
         compression=compressor,
+        staleness=staleness,
         _rebuild=rebuild,
         _init_opt_state=init_opt_state,
     )

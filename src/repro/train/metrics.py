@@ -22,8 +22,46 @@ __all__ = [
     "node_spread",
     "MetricLogger",
     "mix_bytes_per_step",
+    "staleness_transfer_fracs",
     "CommMeter",
 ]
+
+
+def staleness_transfer_fracs(
+    delays, tau_max: int, mode: str = "wait"
+) -> tuple[float, float, float]:
+    """Closed-form fate split of one step's n(n-1) directed transfers
+    under a raw per-source delay vector: ``(on_time, deferred,
+    dropped)``, summing to 1.
+
+    The all-gather model: every node sends to every other node, and a
+    source with delay d > 0 delivers ALL its transfers late. Under
+    ``"wait"`` nothing is dropped -- late payloads are consumed stale
+    (``deferred``). Under ``"degrade"`` a source past the ``tau_max``
+    deadline is cut for the step (the repaired schedule self-loops it,
+    BOTH directions), so its transfers move from deferred to dropped
+    and the delivered support shrinks to the on-time nodes. This is the
+    pure-staleness twin of
+    :meth:`repro.faults.plan.FaultPlan.transfer_fracs` (which folds in
+    crashes and edge drops) and the closed form the CI smoke checks the
+    meter against.
+    """
+    if mode not in ("wait", "degrade"):
+        raise ValueError(f"mode must be 'wait' or 'degrade', got {mode!r}")
+    d = np.asarray(delays).reshape(-1)
+    n = d.shape[0]
+    if n < 2:
+        return 1.0, 0.0, 0.0
+    on = d <= tau_max if mode == "degrade" else np.ones(n, bool)
+    n_on = int(on.sum())
+    total = n * (n - 1)
+    delivered = n_on * (n_on - 1)
+    deferred = int(((d > 0) & on).sum()) * (n_on - 1)
+    return (
+        (delivered - deferred) / total,
+        deferred / total,
+        (total - delivered) / total,
+    )
 
 
 def mix_bytes_per_step(
@@ -128,25 +166,48 @@ class CommMeter:
     zero bytes so they need no counting; retransmissions DO arrive and
     are added on top via :meth:`retransmit` (``retransmit_bytes``,
     also folded into ``total_bytes``).
+
+    Bounded-delay gossip adds a third fate: a straggler's payload that
+    ARRIVES, late. ``tick(k, delivered_frac=f, deferred_frac=d)``
+    records that ``d`` of the step's volume was delivered past its
+    deadline (``deferred_bytes``, a SUBSET of ``total_bytes`` -- late
+    bytes still cross the wire and are charged as delivered, unlike
+    dropped bytes, which never arrive). The degrade policy converts
+    would-be-deferred transfers into dropped ones (the repaired
+    schedule self-loops them), so the deferred/dropped split is exactly
+    the wait-vs-degrade policy decision, metered.
     """
 
     per_step_bytes: int = 0
     steps: int = 0
     total_bytes: int = 0
     dropped_bytes: int = 0
+    deferred_bytes: int = 0
     retransmit_bytes: int = 0
     events: list = dataclasses.field(default_factory=list)
 
-    def tick(self, k: int = 1, delivered_frac: float = 1.0) -> None:
+    def tick(
+        self,
+        k: int = 1,
+        delivered_frac: float = 1.0,
+        deferred_frac: float = 0.0,
+    ) -> None:
         if not 0.0 <= delivered_frac <= 1.0:
             raise ValueError(
                 f"delivered_frac must be in [0, 1], got {delivered_frac}"
+            )
+        if not 0.0 <= deferred_frac <= delivered_frac:
+            raise ValueError(
+                f"deferred_frac must be in [0, delivered_frac="
+                f"{delivered_frac}], got {deferred_frac} (deferred bytes "
+                f"are a subset of delivered bytes)"
             )
         self.steps += int(k)
         volume = int(k) * self.per_step_bytes
         delivered = int(volume * delivered_frac)
         self.total_bytes += delivered
         self.dropped_bytes += volume - delivered
+        self.deferred_bytes += int(volume * deferred_frac)
 
     def retransmit(self, nbytes: int) -> None:
         """Count a successful re-send (delivered, on top of the model)."""
@@ -167,6 +228,7 @@ class CommMeter:
             "steps": self.steps,
             "total_bytes": self.total_bytes,
             "dropped_bytes": self.dropped_bytes,
+            "deferred_bytes": self.deferred_bytes,
             "retransmit_bytes": self.retransmit_bytes,
             "rate_changes": list(self.events),
         }

@@ -32,11 +32,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compression import ef_init, make_compressor
-from repro.core.dsgd import dsgd_init, dsgd_step_stacked
-from repro.core.mixing import BirkhoffSchedule, ScheduleArrays
+from repro.core.compression import ef_init, ef_stale_mix_flat, make_compressor
+from repro.core.dsgd import DSGDState, dsgd_init, dsgd_step_stacked
+from repro.core.mixing import (
+    BirkhoffSchedule,
+    ScheduleArrays,
+    StragglerPolicy,
+    mix_schedule_arrays_stale,
+    ravel_stack,
+    stale_buffer_init,
+    stale_push,
+    straggler_stream,
+    unravel_stack,
+)
 from repro.data.synthetic import MeanEstimationTask
-from .metrics import CommMeter, MetricLogger, consensus_distance, mix_bytes_per_step
+from .metrics import (
+    CommMeter,
+    MetricLogger,
+    consensus_distance,
+    mix_bytes_per_step,
+    staleness_transfer_fracs,
+)
 
 
 def _online_comm_meter(
@@ -69,6 +85,56 @@ __all__ = [
 ]
 
 
+def _check_staleness_args(staleness, delays, steps, n, online, rollout):
+    """Validate + normalize the (staleness, delays) pair shared by both
+    simulator drivers. Returns the (steps, n) int32 raw-delay trace, or
+    None when no policy is given."""
+    if staleness is None:
+        if delays is not None:
+            raise ValueError(
+                "delays without staleness: pass a StragglerPolicy to say "
+                "how the delay trace should be consumed (wait vs degrade)"
+            )
+        return None
+    if not isinstance(staleness, StragglerPolicy):
+        raise TypeError(
+            f"staleness must be a StragglerPolicy, got {type(staleness).__name__}"
+        )
+    if not online:
+        raise ValueError(
+            "staleness rides the retrace-free data plane: pass the "
+            "schedule as ScheduleArrays (a static schedule cannot carry "
+            "the ring buffer / per-step delay data)"
+        )
+    if rollout != "scan":
+        raise ValueError(
+            "staleness needs rollout='scan': the per-step schedule and "
+            "delay vectors travel as scan xs"
+        )
+    if delays is None:
+        delays = np.zeros((steps, n), np.int32)
+    delays = np.asarray(delays)
+    if delays.shape != (steps, n):
+        raise ValueError(
+            f"delays must be (steps={steps}, n={n}), got {delays.shape}"
+        )
+    if delays.size and delays.min() < 0:
+        raise ValueError("delays must be non-negative")
+    return delays.astype(np.int32)
+
+
+def _staleness_meter_fracs(delays, staleness) -> tuple[float, float]:
+    """Mean (delivered_frac, deferred_frac) over a (k, n) delay window --
+    the :meth:`CommMeter.tick` pair, from the closed-form model."""
+    fates = [
+        staleness_transfer_fracs(row, staleness.tau_max, staleness.mode)
+        for row in np.asarray(delays)
+    ]
+    on_time = float(np.mean([f[0] for f in fates])) if fates else 1.0
+    deferred = float(np.mean([f[1] for f in fates])) if fates else 0.0
+    return on_time + deferred, deferred
+
+
 # ---------------------------------------------------------------------------
 # Section 6.1: decentralized mean estimation
 # ---------------------------------------------------------------------------
@@ -88,6 +154,8 @@ def run_mean_estimation(
     on_segment=None,
     segment_len: int | None = None,
     compression=None,
+    staleness: StragglerPolicy | None = None,
+    delays: np.ndarray | None = None,
 ) -> dict:
     """D-SGD on ``F_i(theta, z) = (theta - z)^2``; returns error traces.
 
@@ -120,6 +188,17 @@ def run_mean_estimation(
     retrace nothing) and the returned ``comm`` meters the compressed
     wire. Requires the online ``ScheduleArrays`` schedule; the identity
     wire routes to the uncompressed transport bitwise.
+
+    ``staleness`` (a ``repro.core.mixing.StragglerPolicy``) turns on
+    bounded-delay gossip: ``delays`` is the raw (steps, n) per-source
+    delay trace (e.g. ``FaultPlan.delays``; defaults to all-zero), the
+    policy resolves it per step into a repaired schedule + effective
+    delays, and the half-steps mix through the staleness ring buffer
+    riding the scan carry. Composes with ``compression`` (EF memory and
+    stale ring share one carry) and with ``on_segment`` hot swaps (the
+    refreshed base is re-resolved from the next segment on). All-zero
+    delays reproduce the fresh run BITWISE. Requires the online
+    ``ScheduleArrays`` schedule and ``rollout="scan"``.
     """
     if rollout not in ("scan", "loop"):
         raise ValueError(f"unknown rollout {rollout!r}")
@@ -153,6 +232,16 @@ def run_mean_estimation(
         raise ValueError(
             "compression rides the retrace-free data plane: pass the "
             "schedule as ScheduleArrays (static schedules have no EF carry)"
+        )
+    delays_arr = _check_staleness_args(
+        staleness, delays, steps, n, online, rollout
+    )
+    if staleness is not None:
+        return _run_mean_estimation_stale(
+            theta, zs, schedule,
+            steps=steps, segment_len=segment_len, on_segment=on_segment,
+            lr=lr, theta_star=theta_star, staleness=staleness,
+            delays=delays_arr, compressor=compressor,
         )
 
     def make_step(sched):
@@ -310,6 +399,105 @@ def _run_mean_estimation_online(
     }
 
 
+def _run_mean_estimation_stale(
+    theta,
+    zs,
+    sched0: ScheduleArrays,
+    *,
+    steps: int,
+    segment_len: int | None,
+    on_segment,
+    lr: float,
+    theta_star,
+    staleness: StragglerPolicy,
+    delays: np.ndarray,
+    compressor=None,
+) -> dict:
+    """Mean-estimation driver under bounded-delay gossip.
+
+    Same step math as the fresh online driver op-for-op (grads, local
+    half-step) with the mixing routed through the staleness ring: the
+    per-step policy-resolved ``(gammas, perms, eff_delays)`` ride the
+    scan as xs (fixed shapes whatever the delays -- zero retraces), the
+    ring buffer (and the EF memory, under ``compressor``) rides the
+    carry. A hot swap rebases the HOST-side schedule the policy
+    resolves from; the compiled rollout never notices. All-zero delays
+    read back the value just pushed, so the trajectory is bitwise the
+    fresh driver's.
+    """
+    n = theta.shape[0]
+    lr = float(lr)
+    buffer = stale_buffer_init(theta, staleness.ring_depth)
+    n_traces = 0
+
+    def roll_impl(carry, xs):
+        nonlocal n_traces
+        n_traces += 1
+
+        def step(c, x):
+            z, g_t, p_t, d_t = x
+            sa = ScheduleArrays(gammas=g_t, perms=p_t)
+            grads_of = lambda th: 2.0 * (th - z.mean(axis=1, keepdims=True))
+            if compressor is not None:
+                th, e, buf = c
+                half = th - lr * grads_of(th)
+                th, e, buf = ef_stale_mix_flat(half, e, buf, sa, d_t, compressor)
+                new_c = (th, e, buf)
+            else:
+                th, buf = c
+                half = th - lr * grads_of(th)
+                buf = stale_push(buf, half)
+                th = mix_schedule_arrays_stale(buf, sa, d_t)
+                new_c = (th, buf)
+            err = jnp.square(th[:, 0] - theta_star)
+            return new_c, (jnp.mean(err), jnp.max(err), jnp.min(err))
+
+        return jax.lax.scan(step, carry, xs)
+
+    roll = jax.jit(roll_impl)
+    seg = int(segment_len) if segment_len is not None else max(steps, 1)
+    if seg < 1:
+        raise ValueError(f"segment_len must be >= 1, got {segment_len}")
+    if compressor is not None:
+        carry = (theta, ef_init(theta), buffer)
+    else:
+        carry = (theta, buffer)
+    base = sched0
+    meter = _online_comm_meter(n, 1, compression=compressor)
+    mse_l, mx_l, mn_l = [], [], []
+    swaps: list[int] = []
+    t0 = 0
+    while t0 < steps:
+        k = min(seg, steps - t0)
+        g_k, p_k, d_k = straggler_stream(staleness, base, delays[t0 : t0 + k])
+        carry, (e_mean, e_max, e_min) = roll(carry, (zs[t0 : t0 + k], g_k, p_k, d_k))
+        mse_l.append(np.asarray(e_mean))
+        mx_l.append(np.asarray(e_max))
+        mn_l.append(np.asarray(e_min))
+        delivered, deferred = _staleness_meter_fracs(
+            delays[t0 : t0 + k], staleness
+        )
+        meter.tick(k, delivered_frac=delivered, deferred_frac=deferred)
+        t0 += k
+        if on_segment is not None and t0 < steps:
+            new_sa = on_segment(t0 - 1)
+            if new_sa is not None:
+                base = new_sa
+                swaps.append(t0 - 1)
+    empty = np.zeros((0,))
+    return {
+        "mean_sq_error": np.concatenate(mse_l) if mse_l else empty,
+        "max_sq_error": np.concatenate(mx_l) if mx_l else empty,
+        "min_sq_error": np.concatenate(mn_l) if mn_l else empty,
+        "theta": np.asarray(carry[0]),
+        "n_traces": n_traces,
+        "swaps": swaps,
+        "comm": meter.summary(),
+        "compression": compressor.label if compressor is not None else None,
+        "staleness": {"mode": staleness.mode, "tau_max": staleness.tau_max},
+    }
+
+
 # ---------------------------------------------------------------------------
 # Section 6.2: label-skew classification
 # ---------------------------------------------------------------------------
@@ -424,6 +612,8 @@ def run_classification(
     rollout: str = "scan",
     on_segment=None,
     compression=None,
+    staleness: StragglerPolicy | None = None,
+    delays: np.ndarray | None = None,
 ) -> MetricLogger:
     """D-SGD classification with per-node local data (Algorithm 1).
 
@@ -444,6 +634,15 @@ def run_classification(
     landed). ``compression`` composes with the online path exactly as
     in :func:`run_mean_estimation`: EF memory in the carry, compressed
     wire in ``aux["comm"]``, zero extra traces.
+
+    ``staleness`` / ``delays`` turn on bounded-delay gossip exactly as
+    in :func:`run_mean_estimation`: the half-step pytree is raveled
+    into one (n, P) buffer, pushed into the staleness ring riding the
+    scan carry, and mixed under the policy-resolved per-step schedule
+    + effective delays (scan xs). Composes with ``compression`` (EF
+    memory and stale ring in ONE carry) and ``on_segment`` hot swaps;
+    all-zero delays are bitwise the fresh run. Scan rollout + online
+    ``ScheduleArrays`` required.
     """
     if rollout not in ("scan", "loop"):
         raise ValueError(f"unknown rollout {rollout!r}")
@@ -460,6 +659,9 @@ def run_classification(
             "schedule as ScheduleArrays (static schedules have no EF carry)"
         )
     n = len(indices_per_node)
+    delays_arr = _check_staleness_args(
+        staleness, delays, steps, n, online, rollout
+    )
     num_classes = int(y.max()) + 1
     dim = X.shape[1]
     data = _stack_node_data(X, y, indices_per_node)
@@ -477,6 +679,13 @@ def run_classification(
 
     grad_fn = jax.grad(classifier_loss)
 
+    def node_grads(p, x_node, y_node, length, k):
+        idx = jax.random.randint(k, (batch_size,), 0, jnp.maximum(length, 1))
+        xb = x_node[idx]
+        yb = y_node[idx]
+        loss = classifier_loss(p, xb, yb)
+        return grad_fn(p, xb, yb), loss
+
     def step(carry, _):
         if online and compressor is not None:
             params, state, key, e, sa = carry
@@ -489,14 +698,6 @@ def run_classification(
             sched_t = schedule
         key, sub = jax.random.split(key)
         keys = jax.random.split(sub, n)
-
-        def node_grads(p, x_node, y_node, length, k):
-            idx = jax.random.randint(k, (batch_size,), 0, jnp.maximum(length, 1))
-            xb = x_node[idx]
-            yb = y_node[idx]
-            loss = classifier_loss(p, xb, yb)
-            return grad_fn(p, xb, yb), loss
-
         grads, losses = jax.vmap(node_grads)(params, data.x, data.y, data.lengths, keys)
         if compressor is not None:
             new_params, new_state, new_e = dsgd_step_stacked(
@@ -565,7 +766,67 @@ def run_classification(
     # end-of-run call.
     segmented = do_eval or on_segment is not None
 
-    if rollout == "scan":
+    if staleness is not None:
+        # bounded-delay branch: the half-step pytree ravels into one
+        # (n, P) buffer so the ring holds ONE array; schedule + delays
+        # arrive as scan xs (policy-resolved host-side per segment)
+        flat0, ravel_spec = ravel_stack(params)
+        buffer = stale_buffer_init(flat0, staleness.ring_depth)
+
+        def stale_step(carry, x):
+            if compressor is not None:
+                params, state, key, e, buf = carry
+            else:
+                params, state, key, buf = carry
+            g_t, p_t, d_t = x
+            sa_t = ScheduleArrays(gammas=g_t, perms=p_t)
+            key, sub = jax.random.split(key)
+            keys = jax.random.split(sub, n)
+            grads, losses = jax.vmap(node_grads)(
+                params, data.x, data.y, data.lengths, keys
+            )
+            half = jax.tree_util.tree_map(
+                lambda p, g: p - lr * g, params, grads
+            )
+            flat, _ = ravel_stack(half)
+            if compressor is not None:
+                mixed, e, buf = ef_stale_mix_flat(
+                    flat, e, buf, sa_t, d_t, compressor
+                )
+                rest = (e, buf)
+            else:
+                buf = stale_push(buf, flat)
+                mixed = mix_schedule_arrays_stale(buf, sa_t, d_t)
+                rest = (buf,)
+            new_params = unravel_stack(mixed, ravel_spec)
+            new_state = DSGDState(step=state.step + 1, momentum=None)
+            return (new_params, new_state, key) + rest, losses.mean()
+
+        def roll_stale_impl(carry, xs):
+            nonlocal n_traces
+            n_traces += 1
+            return jax.lax.scan(stale_step, carry, xs)
+
+        roll_stale = jax.jit(roll_stale_impl)
+        if compressor is not None:
+            carry = (params, state, key, jnp.zeros_like(flat0), buffer)
+        else:
+            carry = (params, state, key, buffer)
+        base_sa = schedule
+        t0 = 0
+        for seg_len, evaluate in _eval_segments(steps, eval_every, segmented):
+            xs = straggler_stream(
+                staleness, base_sa, delays_arr[t0 : t0 + seg_len]
+            )
+            carry, losses = roll_stale(carry, xs)
+            log_segment(t0, np.asarray(losses), carry[0], evaluate and do_eval)
+            t0 += seg_len
+            if t0 < steps and on_segment is not None:
+                new_sa = on_segment(t0 - 1)
+                if new_sa is not None:
+                    base_sa = new_sa  # re-resolved from the next segment on
+                    swaps.append(t0 - 1)
+    elif rollout == "scan":
         @functools.partial(jax.jit, static_argnames=("length",))
         def roll(carry, length: int):
             nonlocal n_traces
@@ -615,7 +876,14 @@ def run_classification(
                 jax.tree_util.tree_leaves(params0)),
             compression=compressor,
         )
-        meter.tick(steps)
+        if staleness is not None:
+            delivered, deferred = _staleness_meter_fracs(delays_arr, staleness)
+            meter.tick(steps, delivered_frac=delivered, deferred_frac=deferred)
+            logger.aux["staleness"] = {
+                "mode": staleness.mode, "tau_max": staleness.tau_max,
+            }
+        else:
+            meter.tick(steps)
         logger.aux["comm"] = meter.summary()
         logger.aux["compression"] = (
             compressor.label if compressor is not None else None

@@ -5,8 +5,11 @@ import pytest
 
 from repro.data.drift import (
     AbruptLabelSwap,
+    ConceptShift,
+    FeatureDrift,
     GradualDirichlet,
     NodeChurn,
+    features_stream,
     labels_stream,
     partition_from_pi,
 )
@@ -256,3 +259,141 @@ def test_fault_plan_from_churn_stream_consistency():
     for t in range(20):
         dark = set(np.flatnonzero((stream[t] < 0).all(axis=1)))
         assert dark == set(np.flatnonzero(~plan.alive[t]))
+
+
+# ---------------------------------------------------------------------------
+# feature-space drift: covariate shift + concept shift (ISSUE 8 satellite)
+# ---------------------------------------------------------------------------
+
+def test_feature_drift_shifts_means_not_labels():
+    Pi0 = _dirichlet_pi(6, 4, seed=3)
+    fd = FeatureDrift(Pi0, t_drift=10, dim=5, shift=3.0, seed=4)
+    np.testing.assert_allclose(fd.Pi(0), fd.Pi(100))  # label marginals fixed
+    assert np.allclose(fd.feature_shift(9), 0.0)
+    post = fd.feature_shift(10)
+    np.testing.assert_allclose(np.linalg.norm(post, axis=1), 3.0)
+    rng = np.random.default_rng(0)
+    X_pre, y_pre = fd.sample(0, 2000, rng)
+    X_post, y_post = fd.sample(10, 2000, rng)
+    assert X_pre.shape == (6, 2000, 5) and X_pre.dtype == np.float32
+    # per-node mean moves by ~ the node's offset, labels stay on-Pi
+    moved = X_post.mean(axis=1) - X_pre.mean(axis=1)
+    assert np.abs(moved - post).max() < 0.5
+    emp = np.stack([np.bincount(y_post[i], minlength=4) / 2000 for i in range(6)])
+    assert np.abs(emp - Pi0).max() < 0.05
+    with pytest.raises(ValueError):
+        FeatureDrift(Pi0, t_drift=1, shift=-1.0)
+
+
+def test_feature_drift_detector_fires_on_feature_stat_not_labels():
+    """The label-space proxy is blind to covariate shift; a feature-mean
+    statistic sees it. Recovery: re-centering on a post-drift window
+    restores nearest-class-mean accuracy."""
+    from repro.online.streaming import DriftDetector, StreamingPiEstimator
+
+    # near-balanced rows so every (node, class) pool is populated for the
+    # per-node mean re-estimation below; class_sep < shift so a stale
+    # classifier actually breaks at the drift
+    Pi0 = _dirichlet_pi(8, 4, seed=5, alpha=5.0)
+    fd = FeatureDrift(Pi0, t_drift=30, dim=6, class_sep=1.5, shift=4.0,
+                      noise=0.5, seed=6)
+    X, y = features_stream(fd, steps=60, batch=64, seed=7)
+
+    # label-space: Pi_hat never leaves Pi0's neighborhood
+    est = StreamingPiEstimator(8, 4, beta=0.2, init=Pi0)
+    # the Pi_hat statistic is also near-zero sampling noise pre-drift:
+    # slack it above the noise floor so only a real marginal move fires
+    label_det = DriftDetector(threshold=1.5, abs_slack=0.1, warmup=3)
+    label_fired = []
+    baseline_mean = X[:10].mean(axis=(0, 2))          # (n, dim) pre-drift
+    # the pre-drift statistic is near-zero sampling noise, so the
+    # relative trigger needs its absolute slack (the documented knob for
+    # near-zero baselines); the post-drift jump is ~||shift|| * sqrt(n)
+    feat_det = DriftDetector(threshold=1.5, abs_slack=1.0, warmup=3)
+    feat_fired = []
+    for t in range(60):
+        Pi_hat = est.update(y[t])
+        label_fired.append(label_det.update(np.abs(Pi_hat - Pi0).max()))
+        stat = np.linalg.norm(X[t].mean(axis=1) - baseline_mean)
+        feat_fired.append(feat_det.update(stat))
+    assert not any(label_fired), "label detector must be blind to covariate shift"
+    assert any(feat_fired[30:]), "feature statistic must fire post-drift"
+    assert not any(feat_fired[:30])
+
+    # recovery: each node re-estimates its class means on a post-drift
+    # window (the shift is node-specific, so pooled means cannot recover)
+    # and nearest-class-mean classification works again
+    def ncm_acc(means, Xe, ye):
+        pred = np.argmin(
+            np.linalg.norm(Xe[..., None, :] - means, axis=-1), axis=-1
+        )
+        return float((pred == ye).mean())
+
+    K, n = 4, 8
+    acc_stale, acc_recov = [], []
+    for i in range(n):
+        means_pre = np.stack(
+            [X[:20, i][y[:20, i] == k].mean(axis=0) for k in range(K)]
+        )
+        means_post = np.stack(
+            [X[40:, i][y[40:, i] == k].mean(axis=0) for k in range(K)]
+        )
+        acc_stale.append(ncm_acc(means_pre, X[50, i], y[50, i]))
+        acc_recov.append(ncm_acc(means_post, X[50, i], y[50, i]))
+    acc_stale, acc_recov = np.mean(acc_stale), np.mean(acc_recov)
+    assert acc_recov > 0.9, acc_recov
+    assert acc_recov > acc_stale + 0.1, (acc_stale, acc_recov)
+
+
+def test_concept_shift_permutes_labels_and_marginals():
+    Pi0 = _dirichlet_pi(5, 4, seed=8)
+    cs = ConceptShift(Pi0, t_drift=10, seed=9)
+    perm = cs.class_perm
+    assert not np.array_equal(perm, np.arange(4))
+    np.testing.assert_allclose(cs.Pi(9), Pi0)
+    # emitted-marginal identity: Pi(t)[:, perm[k]] == Pi0[:, k]
+    np.testing.assert_allclose(cs.Pi(10)[:, perm], Pi0)
+    rng = np.random.default_rng(0)
+    X_pre, y_pre = cs.sample(0, 3000, rng)
+    X_post, y_post = cs.sample(10, 3000, rng)
+    emp = np.stack([np.bincount(y_post[i], minlength=4) / 3000 for i in range(5)])
+    assert np.abs(emp - cs.Pi(10)).max() < 0.05
+    with pytest.raises(ValueError):
+        ConceptShift(Pi0, t_drift=1, class_perm=np.zeros(4, np.int64))
+    with pytest.raises(ValueError):
+        ConceptShift(np.ones((3, 1)), t_drift=1)  # K=1 has no non-identity perm
+
+
+def test_concept_shift_detector_sees_it_and_estimator_recovers():
+    """Unlike covariate shift, a class permutation moves the label
+    marginals: the streaming-Pi detector fires, and after the drift the
+    estimator converges to the permuted Pi."""
+    from repro.online.streaming import DriftDetector, StreamingPiEstimator
+
+    Pi0 = _dirichlet_pi(6, 4, seed=10)
+    cs = ConceptShift(Pi0, t_drift=25, seed=11)
+    stream = labels_stream(cs, steps=60, batch=64, seed=12)
+    est = StreamingPiEstimator(6, 4, beta=0.2, init=Pi0)
+    det = DriftDetector(threshold=1.5, abs_slack=0.1, warmup=3)
+    fired = []
+    for t in range(60):
+        Pi_hat = est.update(stream[t])
+        fired.append(det.update(np.abs(Pi_hat - Pi0).max()))
+    assert not any(fired[:25])
+    assert any(fired[25:]), "label detector must see a class permutation"
+    # recovery: the estimator tracks the post-drift marginals
+    assert np.abs(est.Pi_hat - cs.Pi(59)).max() < 0.1
+
+
+def test_features_stream_reproducible_and_shaped():
+    Pi0 = _dirichlet_pi(4, 3, seed=13)
+    for sc in (FeatureDrift(Pi0, t_drift=3, dim=5, seed=1),
+               ConceptShift(Pi0, t_drift=3, dim=5, seed=1)):
+        Xa, ya = features_stream(sc, 6, 7, seed=2)
+        Xb, yb = features_stream(sc, 6, 7, seed=2)
+        assert Xa.shape == (6, 4, 7, 5) and Xa.dtype == np.float32
+        assert ya.shape == (6, 4, 7) and ya.dtype == np.int32
+        np.testing.assert_array_equal(Xa, Xb)
+        np.testing.assert_array_equal(ya, yb)
+        X0, y0 = features_stream(sc, 0, 7)
+        assert X0.shape == (0, 4, 7, 5) and y0.shape == (0, 4, 7)

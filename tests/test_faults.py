@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.core.mixing import (
     ScheduleArrays,
+    StragglerPolicy,
     degrade_schedule,
     mix_schedule_arrays,
     mix_schedule_arrays_stale,
@@ -210,6 +211,114 @@ def test_fault_plan_dead_nodes_have_zero_delay():
     assert plan.delays.max() <= 4
 
 
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 6))
+def test_fault_plan_delay_draws_bounded_by_ring(seed, tau):
+    """Every drawn delay is reachable in a ``ring_depth``-deep ring:
+    delays live in [0, tau_max] (no modular aliasing), offline nodes
+    carry delay 0, and ``ring_depth == tau_max + 1``."""
+    plan = FaultPlan(
+        n_nodes=6, steps=60, seed=seed, crash_rate=0.1, mean_outage=4.0,
+        straggler_rate=0.8, tau_max=tau,
+    )
+    assert plan.ring_depth == tau + 1
+    assert plan.delays.dtype == np.int32
+    assert plan.delays.min() >= 0
+    assert plan.delays.max() <= tau
+    assert (plan.delays[~plan.alive] == 0).all()
+
+
+def test_fault_plan_zero_tau_means_no_staleness():
+    plan = FaultPlan(
+        n_nodes=4, steps=30, seed=3, straggler_rate=1.0, tau_max=0
+    )
+    assert plan.ring_depth == 1
+    assert not plan.delays.any()
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000))
+def test_transfer_fracs_wait_is_backcompat_split(seed):
+    """Under wait: fates sum to 1 and on_time + deferred equals the
+    two-way ``delivered_frac`` (deferred bytes DO arrive)."""
+    plan = FaultPlan(
+        n_nodes=8, steps=25, seed=seed, crash_rate=0.08, mean_outage=5.0,
+        straggler_rate=0.4, tau_max=3, edge_drop_rate=0.1,
+    )
+    for t in range(plan.steps):
+        on, dfr, drp = plan.transfer_fracs(t, deadline=3, mode="wait")
+        assert abs(on + dfr + drp - 1.0) < 1e-12
+        assert abs((on + dfr) - plan.delivered_frac(t)) < 1e-12
+
+
+def test_transfer_fracs_degrade_moves_deferred_to_dropped():
+    """A degrade deadline below the plan's tau_max converts exactly the
+    past-deadline deferred mass into dropped mass (closed form)."""
+    plan = FaultPlan(
+        n_nodes=8, steps=40, seed=5, straggler_rate=0.6, tau_max=4
+    )
+    n = plan.n_nodes
+    total = n * (n - 1)
+    saw_late = False
+    for t in range(plan.steps):
+        d = plan.delays[t]
+        on_w, dfr_w, drp_w = plan.transfer_fracs(t, mode="wait")
+        assert drp_w == 0.0  # no crashes/drops in this plan
+        on_d, dfr_d, drp_d = plan.transfer_fracs(t, deadline=2, mode="degrade")
+        # closed form on the on-time support
+        on_time = d <= 2
+        n_on = int(on_time.sum())
+        assert abs((on_d + dfr_d) - n_on * (n_on - 1) / total) < 1e-12
+        assert abs(dfr_d - int(((d > 0) & on_time).sum()) * (n_on - 1) / total) < 1e-12
+        if (d > 2).any():
+            saw_late = True
+            assert drp_d > drp_w
+        else:
+            assert (on_d, dfr_d, drp_d) == (on_w, dfr_w, drp_w)
+    assert saw_late  # the sweep actually exercised the deadline
+
+
+def test_injector_stream_applies_wait_policy():
+    """A policy-aware injector streams CLAMPED effective delays and
+    leaves the schedule repaired only for crashes/drops (wait never
+    repairs for staleness)."""
+    plan = FaultPlan(n_nodes=8, steps=12, seed=4, straggler_rate=0.9, tau_max=4)
+    arrays = _arrays(8)
+    policy = StragglerPolicy(mode="wait", tau_max=2)
+    inj = FaultInjector(plan, arrays, policy=policy)
+    gammas, perms, delays = inj.stream(0, plan.steps)
+    assert delays.max() <= 2  # clamped to the policy deadline, not the plan's
+    expect = np.minimum(plan.delays, 2)
+    assert np.array_equal(delays, expect)
+    # everyone alive + wait => schedule untouched every step
+    for t in range(plan.steps):
+        assert np.array_equal(perms[t], np.asarray(arrays.perms))
+        assert np.array_equal(gammas[t], np.asarray(arrays.gammas))
+
+
+def test_injector_stream_applies_degrade_policy():
+    """Under degrade, past-deadline nodes are self-looped in every atom
+    of that step's repaired schedule and their effective delay is 0."""
+    plan = FaultPlan(n_nodes=8, steps=20, seed=6, straggler_rate=0.7, tau_max=4)
+    arrays = _arrays(8)
+    policy = StragglerPolicy(mode="degrade", tau_max=1)
+    inj = FaultInjector(plan, arrays, policy=policy)
+    gammas, perms, delays = inj.stream(0, plan.steps)
+    assert delays.max() <= 1
+    saw_late = False
+    for t in range(plan.steps):
+        late = plan.delays[t] > 1
+        assert (np.asarray(delays[t])[late] == 0).all()
+        step_arrays = ScheduleArrays(gammas=gammas[t], perms=perms[t])
+        W = _dense(step_arrays)
+        assert np.abs(W.sum(axis=0) - 1.0).max() < 1e-12
+        assert np.abs(W.sum(axis=1) - 1.0).max() < 1e-12
+        for i in np.flatnonzero(late):
+            saw_late = True
+            assert (np.asarray(perms[t])[:, i] == i).all()  # isolated
+    assert saw_late
+
+
 def test_fault_plan_validation():
     with pytest.raises(ValueError):
         FaultPlan(n_nodes=4, steps=10, crash_rate=1.5)
@@ -371,3 +480,20 @@ def test_comm_meter_degraded_accounting():
     assert s["dropped_bytes"] == 200
     with pytest.raises(ValueError):
         m.tick(1, delivered_frac=1.2)
+
+
+def test_comm_meter_deferred_vs_dropped():
+    """Deferred bytes are a SUBSET of delivered bytes (they arrive,
+    late); dropped bytes never arrive. The two are accounted apart."""
+    m = CommMeter(per_step_bytes=1000)
+    m.tick(5, delivered_frac=0.9, deferred_frac=0.3)
+    assert m.total_bytes == 4500
+    assert m.dropped_bytes == 500
+    assert m.deferred_bytes == 1500
+    s = m.summary()
+    assert s["deferred_bytes"] == 1500
+    # deferred cannot exceed delivered
+    with pytest.raises(ValueError):
+        m.tick(1, delivered_frac=0.5, deferred_frac=0.6)
+    with pytest.raises(ValueError):
+        m.tick(1, deferred_frac=-0.1)
