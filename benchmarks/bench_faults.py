@@ -216,8 +216,13 @@ def _bench_straggler_sweep(results: dict, smoke: bool) -> None:
             ]
             on = float(np.mean([f[0] for f in fates]))
             df = float(np.mean([f[1] for f in fates]))
-            exp_total += int(k * per_step * (on + df))
-            exp_deferred += int(k * per_step * df)
+            delivered = int(k * per_step * (on + df))
+            exp_total += delivered
+            # deferred derives from the truncated delivered volume (the
+            # PR 9 CommMeter fix: subset invariant by construction)
+            exp_deferred += (
+                int(delivered * (df / (on + df))) if on + df > 0 else 0
+            )
         assert comm["total_bytes"] == exp_total, (
             comm["total_bytes"], exp_total
         )

@@ -22,6 +22,7 @@ from . import (
     bench_fig2,
     bench_kernels,
     bench_mixing,
+    bench_obs,
     bench_online,
     bench_stl_fw,
     bench_tables,
@@ -41,6 +42,7 @@ BENCHES = {
     "online": bench_online.main,
     "stl_fw": bench_stl_fw.main,
     "faults": bench_faults.main,
+    "obs": bench_obs.main,
 }
 
 

@@ -286,7 +286,8 @@ class FaultInjector:
     through.
     """
 
-    def __init__(self, plan: FaultPlan, base: ScheduleArrays, policy=None):
+    def __init__(self, plan: FaultPlan, base: ScheduleArrays, policy=None,
+                 tracer=None):
         if base.n_nodes != plan.n_nodes:
             raise ValueError(
                 f"schedule is for {base.n_nodes} nodes, plan for {plan.n_nodes}"
@@ -294,6 +295,9 @@ class FaultInjector:
         self.plan = plan
         self.base = base
         self.policy = policy
+        # a repro.obs.Tracer (duck-typed; this module stays importable
+        # without obs loaded) -- stream() records "faults.stream" spans
+        self.tracer = tracer
 
     def rebind(self, base: ScheduleArrays) -> None:
         if base.n_nodes != self.plan.n_nodes or base.l_max != self.base.l_max:
@@ -318,6 +322,12 @@ class FaultInjector:
         for a ``lax.scan``: ``(gammas (k, l_max), perms (k, l_max, n),
         delays (k, n))``. Fixed shapes whatever the faults -- the whole
         zero-retrace argument."""
+        if self.tracer is not None:
+            with self.tracer.span("faults.stream", t0=int(t0), k=int(k)):
+                return self._stream(t0, k)
+        return self._stream(t0, k)
+
+    def _stream(self, t0: int, k: int):
         gammas = np.empty((k, self.base.l_max), np.float32)
         perms = np.empty((k, self.base.l_max, self.base.n_nodes), np.int32)
         delays = np.empty((k, self.base.n_nodes), np.int32)

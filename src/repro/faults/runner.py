@@ -39,8 +39,11 @@ from repro.core.mixing import (
     stale_buffer_init,
     stale_push,
 )
+from repro.obs.trace import Tracer
 from repro.train.checkpoints import latest_step, restore_checkpoint, save_checkpoint
 from repro.train.metrics import CommMeter, mix_bytes_per_step
+
+_NULL_TRACER = Tracer(enabled=False)
 
 from .plan import FaultInjector, FaultPlan
 
@@ -63,6 +66,8 @@ def run_faulty_mean_estimation(
     resume: bool = False,
     stop_after_segments: int | None = None,
     staleness: StragglerPolicy | None = None,
+    tracer: "Tracer | None" = None,
+    retrace_guard=None,
 ) -> dict:
     """D-SGD mean estimation under a seeded fault plan.
 
@@ -95,6 +100,11 @@ def run_faulty_mean_estimation(
         POLICY's ``ring_depth`` and the meter splits delivered bytes
         into on-time vs deferred (``comm["deferred_bytes"]``). ``None``
         keeps the PR 6 behavior: raw delays, ring sized by the plan.
+      tracer: a ``repro.obs.Tracer`` -- records ``sim.segment`` spans
+        per rollout segment and ``faults.stream`` spans for the
+        host-side fault resolution (via the injector).
+      retrace_guard: a ``repro.obs.RetraceGuard`` -- rollout compiles
+        are counted under ``"faults.roll"``.
 
     Returns a dict with the fault-free driver's keys
     (``mean/max/min_sq_error``, ``theta``, ``n_traces``, ``swaps``,
@@ -125,7 +135,11 @@ def run_faulty_mean_estimation(
 
     depth = staleness.ring_depth if staleness is not None else plan.ring_depth
     buffer = stale_buffer_init(theta, depth)
-    injector = FaultInjector(plan, schedule, policy=staleness)
+    tracer = _NULL_TRACER if tracer is None else tracer
+    injector = FaultInjector(
+        plan, schedule, policy=staleness,
+        tracer=tracer if tracer.enabled else None,
+    )
     lr = float(lr)
 
     n_traces = 0
@@ -133,6 +147,8 @@ def run_faulty_mean_estimation(
     def roll_impl(carry, xs):
         nonlocal n_traces
         n_traces += 1
+        if retrace_guard is not None:
+            retrace_guard.record("faults.roll")
 
         def step(c, x):
             th, buf = c
@@ -199,11 +215,13 @@ def run_faulty_mean_estimation(
     while t0 < steps:
         k = min(seg, steps - t0)
         gammas_k, perms_k, delays_k = injector.stream(t0, k)
-        carry, (e_mean, e_max, e_min) = roll(
-            carry,
-            (zs[t0 : t0 + k], jnp.asarray(gammas_k), jnp.asarray(perms_k),
-             jnp.asarray(delays_k)),
-        )
+        with tracer.span("sim.segment", t0=t0, k=k):
+            carry, (e_mean, e_max, e_min) = roll(
+                carry,
+                (zs[t0 : t0 + k], jnp.asarray(gammas_k), jnp.asarray(perms_k),
+                 jnp.asarray(delays_k)),
+            )
+            jax.block_until_ready(e_mean)
         mse_l.append(np.asarray(e_mean))
         mx_l.append(np.asarray(e_max))
         mn_l.append(np.asarray(e_min))

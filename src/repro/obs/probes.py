@@ -1,0 +1,234 @@
+"""In-rollout health probes: the paper's quantities as scan DATA.
+
+The theory names exactly which quantities predict convergence, and all
+of them can be computed *inside* a compiled rollout as pure value
+computations -- no retrace, no host round-trip, a health sample at
+EVERY step instead of at eval boundaries only:
+
+* ``consensus``  -- consensus distance ``||Theta - Theta_bar||_F^2``,
+  the quantity Lemma 3 controls (and Koloskova et al. show governs
+  D-SGD under changing topologies). Computed on the post-mix stacked
+  parameters.
+* ``grad_dev``   -- per-node gradient deviation
+  ``(1/n) sum_i ||g_i - g_bar||^2``, the streaming proxy for
+  Assumption 4's H(theta) that the gradient-subspace drift detector
+  consumes (``zeta_bar^2`` at the current iterate, cf.
+  ``core.heterogeneity.local_heterogeneity``).
+* ``tau_bar``    -- Proposition 2's closed-form ``tau_bar^2`` evaluated
+  at the LIVE label-histogram estimate Pi_hat and the schedule
+  currently in the carry:
+  ``K B / n ||W Pi_hat - 1 pibar^T||_F^2 + sigma^2/n ||W - J||_F^2``.
+  Both terms come straight off :class:`ScheduleArrays` without ever
+  densifying W (see :func:`tau_bar_arrays`), so a topology hot-swap
+  or a drifting Pi_hat changes the probe's VALUE, never its trace.
+
+:class:`HealthProbes` is a frozen config selecting which probes a
+rollout emits; ``names()`` fixes the output ordering the drivers and
+the report pipeline agree on. All probe functions are jnp-traceable
+and f32-accumulated; correctness against the host-side reference
+implementations in ``core.heterogeneity`` is asserted in
+``tests/test_obs.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mixing import ScheduleArrays
+
+PyTree = Any
+
+__all__ = [
+    "HealthProbes",
+    "consensus_sq",
+    "grad_deviation_sq",
+    "mix_pi_arrays",
+    "w_frobenius_sq",
+    "w_minus_j_frobenius_sq",
+    "tau_bar_arrays",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthProbes:
+    """Which health quantities a compiled rollout emits per step.
+
+    Frozen and hashable so it can key jit caches / closures safely.
+    ``tau_bar`` needs the run to carry a ``ScheduleArrays`` (the
+    simulators' online and stale paths; the mesh trainer rejects it --
+    its pool transport never materializes W's coefficients in the
+    carry) plus a Pi_hat operand and the Prop. 2 constants ``B`` /
+    ``sigma2``.
+    """
+
+    consensus: bool = True
+    grad_dev: bool = True
+    tau_bar: bool = False
+    B: float = 1.0
+    sigma2: float = 0.0
+
+    def __post_init__(self):
+        if self.tau_bar and self.B < 0.0:
+            raise ValueError(f"B must be >= 0, got {self.B}")
+        if self.tau_bar and self.sigma2 < 0.0:
+            raise ValueError(f"sigma2 must be >= 0, got {self.sigma2}")
+        if not (self.consensus or self.grad_dev or self.tau_bar):
+            raise ValueError(
+                "HealthProbes with every probe disabled -- pass probes=None "
+                "instead of an empty config"
+            )
+
+    def names(self) -> tuple[str, ...]:
+        """Probe output ordering (the contract between rollout and report)."""
+        out = []
+        if self.consensus:
+            out.append("consensus")
+        if self.grad_dev:
+            out.append("grad_dev")
+        if self.tau_bar:
+            out.append("tau_bar")
+        return tuple(out)
+
+
+def consensus_sq(params_stack: PyTree) -> jax.Array:
+    """``||Theta - Theta_bar||_F^2`` over node-stacked parameters.
+
+    Same math as ``repro.train.metrics.consensus_distance`` (asserted
+    equal in tests); defined here too so ``repro.obs`` stays importable
+    below ``repro.train`` in the layering (train imports obs, not the
+    reverse).
+    """
+    total = jnp.zeros((), jnp.float32)
+    for leaf in jax.tree_util.tree_leaves(params_stack):
+        mean = jnp.mean(leaf, axis=0, keepdims=True)
+        total = total + jnp.sum(jnp.square((leaf - mean).astype(jnp.float32)))
+    return total
+
+
+def grad_deviation_sq(grads_stack: PyTree) -> jax.Array:
+    """``(1/n) sum_i ||g_i - g_bar||^2`` over node-stacked gradients.
+
+    The in-rollout twin of ``core.heterogeneity.local_heterogeneity``
+    (which takes a host-side (n, d) matrix): same quantity, computed on
+    a pytree whose leaves carry the node axis first, f32-accumulated.
+    """
+    leaves = jax.tree_util.tree_leaves(grads_stack)
+    n = leaves[0].shape[0]
+    total = jnp.zeros((), jnp.float32)
+    for leaf in leaves:
+        mean = jnp.mean(leaf, axis=0, keepdims=True)
+        total = total + jnp.sum(jnp.square((leaf - mean).astype(jnp.float32)))
+    return total / n
+
+
+def mix_pi_arrays(arrays: ScheduleArrays, pi: jax.Array) -> jax.Array:
+    """``W @ Pi`` straight from the Birkhoff atoms: ``(n, K)``.
+
+    ``(W Pi)[i, k] = sum_l gamma_l Pi[perms[l, i], k]`` -- L row
+    gathers instead of densifying the (n, n) matrix, the same idiom as
+    the ``_mix_arrays_flat`` transport. O(L n K).
+    """
+    pi = pi.astype(jnp.float32)
+
+    def body(acc, atom):
+        gamma, perm = atom
+        return acc + gamma * jnp.take(pi, perm, axis=0), None
+
+    init = jnp.zeros_like(pi)
+    out, _ = jax.lax.scan(
+        body, init, (arrays.gammas.astype(jnp.float32), arrays.perms)
+    )
+    return out
+
+
+def w_frobenius_sq(arrays: ScheduleArrays) -> jax.Array:
+    """``||W||_F^2`` from the atoms: ``g^T E g`` with
+    ``E[l, m] = #{i : perms[l, i] == perms[m, i]}``.
+
+    Two atoms' contributions to entry (i, j) collide exactly where
+    their permutations agree, so the Frobenius norm is a quadratic
+    form in the coefficients over the (l_max, l_max) agreement-count
+    matrix. O(L^2 n) -- no (n, n) densification.
+    """
+    eq = jnp.sum(
+        (arrays.perms[:, None, :] == arrays.perms[None, :, :]), axis=-1
+    ).astype(jnp.float32)
+    g = arrays.gammas.astype(jnp.float32)
+    return g @ eq @ g
+
+
+def w_minus_j_frobenius_sq(arrays: ScheduleArrays) -> jax.Array:
+    """``||W - 11^T/n||_F^2 = ||W||_F^2 - 1`` for doubly stochastic W.
+
+    ``<W, J> = (1/n) sum_ij W_ij = 1`` (rows sum to 1) and
+    ``||J||_F^2 = 1``, so the cross terms collapse; clamp at 0 against
+    float round-off when W is exactly J.
+    """
+    return jnp.maximum(w_frobenius_sq(arrays) - 1.0, 0.0)
+
+
+def tau_bar_arrays(
+    arrays: ScheduleArrays,
+    pi_hat: jax.Array,
+    B: float,
+    sigma2: float,
+) -> jax.Array:
+    """Proposition 2's ``tau_bar^2`` at (schedule-in-carry, Pi_hat).
+
+    ``K B / n * sum_{k,i} ((W Pi)_ik - pibar_k)^2
+    + sigma^2 / n * ||W - 11^T/n||_F^2``
+
+    -- the traceable twin of ``core.heterogeneity.tau_bar_label_skew``
+    (host-side, dense W), evaluated on the data-plane schedule and a
+    live label-histogram estimate. Both inputs are values: a refresh
+    hot-swap or an updated Pi_hat moves the probe without a retrace.
+    """
+    pi_hat = pi_hat.astype(jnp.float32)
+    n, K = pi_hat.shape
+    resid = mix_pi_arrays(arrays, pi_hat) - jnp.mean(
+        pi_hat, axis=0, keepdims=True
+    )
+    bias = jnp.sum(jnp.square(resid)) / n
+    return K * B * bias + sigma2 / n * w_minus_j_frobenius_sq(arrays)
+
+
+def compute_probes(
+    probes: HealthProbes,
+    *,
+    params_stack: PyTree = None,
+    grads_stack: PyTree = None,
+    arrays: ScheduleArrays | None = None,
+    pi_hat: jax.Array | None = None,
+) -> dict[str, jax.Array]:
+    """Evaluate the enabled probes; returns ``{name: scalar}`` in
+    ``probes.names()`` order (dicts preserve insertion order).
+
+    Pure value computation -- safe inside scan bodies. Missing operands
+    for an enabled probe raise at trace time (a config error, not a
+    runtime one).
+    """
+    out: dict[str, jax.Array] = {}
+    for name in probes.names():
+        if name == "consensus":
+            if params_stack is None:
+                raise ValueError("consensus probe needs params_stack")
+            out[name] = consensus_sq(params_stack)
+        elif name == "grad_dev":
+            if grads_stack is None:
+                raise ValueError("grad_dev probe needs grads_stack")
+            out[name] = grad_deviation_sq(grads_stack)
+        elif name == "tau_bar":
+            if arrays is None or pi_hat is None:
+                raise ValueError(
+                    "tau_bar probe needs the in-carry ScheduleArrays and a "
+                    "pi_hat operand"
+                )
+            out[name] = tau_bar_arrays(arrays, pi_hat, probes.B, probes.sigma2)
+    return out
+
+
+__all__.append("compute_probes")

@@ -45,8 +45,14 @@ from repro.core.mixing import (
     truncate_schedule,
 )
 from repro.core.stl_fw import LMOSolver, STLFWResult, learn_topology
+from repro.obs.trace import Tracer
 
 from .streaming import DriftDetector, StreamingPiEstimator
+
+# instrumented paths take an always-on tracer; callers opt in with a
+# real one (the Tracer is thread-safe, so overlap-mode worker solves
+# record spans on their own tid against the shared clock origin)
+_NULL_TRACER = Tracer(enabled=False)
 
 __all__ = [
     "RefreshConfig",
@@ -138,8 +144,10 @@ class TopologyRefresher:
         initial: STLFWResult,
         config: RefreshConfig | None = None,
         lmo: "str | LMOSolver" = "auto",
+        tracer: "Tracer | None" = None,
     ):
         self.config = config or RefreshConfig()
+        self.tracer = tracer
         self.solver = lmo if isinstance(lmo, LMOSolver) else LMOSolver(lmo)
         self.solver.resolve(n=initial.W.shape[0], budget=None)
         sched = schedule_from_result(initial)
@@ -197,17 +205,19 @@ class TopologyRefresher:
         cfg = self.config
         stop_gap = None if self.gap_ref is None else self.gap_ref * cfg.gap_slack
         stop_tol = cfg.stop_tol if stop_gap is None else None
+        tr = self.tracer if self.tracer is not None else _NULL_TRACER
         t0 = time.perf_counter()
-        res = learn_topology(
-            Pi_hat,
-            cfg.budget,
-            lam=self.lam,
-            method=cfg.method,
-            lmo=self.solver,
-            init=self._atoms,
-            stop_tol=stop_tol,
-            stop_gap=stop_gap,
-        )
+        with tr.span("refresh.solve", n_refresh=self.n_refreshes):
+            res = learn_topology(
+                Pi_hat,
+                cfg.budget,
+                lam=self.lam,
+                method=cfg.method,
+                lmo=self.solver,
+                init=self._atoms,
+                stop_tol=stop_tol,
+                stop_gap=stop_gap,
+            )
         self.last_refresh_s = time.perf_counter() - t0
         self.last_iters = len(res.gamma_trace)
         sched = truncate_schedule(schedule_from_result(res), self.l_max)
@@ -306,8 +316,19 @@ class OnlineTopologyController:
         solve_retries: int = 0,
         retry_backoff_s: float = 0.05,
         solve_timeout_s: float | None = None,
+        tracer: "Tracer | None" = None,
     ):
         self.refresher = refresher
+        self.tracer = tracer if tracer is not None else _NULL_TRACER
+        if tracer is not None:
+            # propagate to the (possibly wrapped -- e.g. FlakyRefresher)
+            # refresher so its solves record "refresh.solve" spans; walk
+            # the _inner proxy chain to the object that actually solves
+            target = refresher
+            while hasattr(target, "_inner"):
+                target = target._inner
+            if getattr(target, "tracer", None) is None:
+                target.tracer = tracer
         n = refresher.W.shape[0]
         if estimator is None:
             if num_classes is None and Pi0 is None:
@@ -396,6 +417,7 @@ class OnlineTopologyController:
         # estimator while the solve runs (double-buffered handoff)
         snapshot = np.array(self.estimator.Pi_hat)
         if self.overlap:
+            self.tracer.instant("refresh.submit", t=int(t), proxy=float(value))
             fut = self._ensure_executor().submit(self._solve, snapshot)
             self._pending = (
                 fut,
@@ -425,6 +447,10 @@ class OnlineTopologyController:
             "attempts": self._last_attempts,
             "restaged": isinstance(swap, PoolSwap) and swap.restaged,
         })
+        self.tracer.instant(
+            "refresh.collect", t=int(t), t_submit=int(t),
+            solve_s=self.refresher.last_refresh_s,
+        )
         return swap
 
     def flush(self, t: int | None = None, timeout: float | None = None):
@@ -543,6 +569,10 @@ class OnlineTopologyController:
         """
         fut, meta = self._pending
         self._pending = None
+        self.tracer.instant(
+            "refresh.abandon", t=int(t), t_submit=meta["t_submit"],
+            wall_s=float(wall_s),
+        )
         if self._executor is not None:
             self._executor.shutdown(wait=False)
             self._executor = None
@@ -574,6 +604,10 @@ class OnlineTopologyController:
         })
         self.refresh_log[-1]["restaged"] = (
             isinstance(swap, PoolSwap) and swap.restaged
+        )
+        self.tracer.instant(
+            "refresh.collect", t=int(t), t_submit=meta["t_submit"],
+            solve_s=self.refresher.last_refresh_s,
         )
         self.events.append({
             "t": int(t), "collected": True,

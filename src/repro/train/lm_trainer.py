@@ -61,9 +61,14 @@ from repro.core.mixing import (
 )
 from repro.models import registry
 from repro.models.common import ModelConfig
+from repro.obs.probes import HealthProbes
+from repro.obs.trace import Tracer
 from .checkpoints import latest_step, restore_checkpoint, save_checkpoint
 from .metrics import CommMeter, mix_bytes_per_step, staleness_transfer_fracs
 from .sharding import make_param_specs
+
+# instrumented paths take an always-on tracer; callers opt in with a real one
+_NULL_TRACER = Tracer(enabled=False)
 
 PyTree = Any
 
@@ -106,6 +111,13 @@ class TrainSetup:
     # and the sender-side stale ring travels in the opt-state dict under
     # "stale" (build it with init_opt_state). None = fresh gossip.
     staleness: "StragglerPolicy | None" = None
+    # in-rollout health probes (repro.obs.HealthProbes; consensus /
+    # grad_dev only -- tau_bar is a simulator probe). When set, the
+    # step's loss output becomes the dict {"loss": ..., <probe>: ...}
+    # of replicated scalars, computed INSIDE the shard_map as pure
+    # collectives -- probe values per step, zero extra traces, and the
+    # loss trajectory bitwise the probes-off run's.
+    probes: "HealthProbes | None" = None
 
     def abstract_params(self) -> PyTree:
         return jax.eval_shape(self.init_params, jax.random.PRNGKey(0))
@@ -205,7 +217,12 @@ class TrainSetup:
                         params, momentum_state, batch_t, *extra
                     )
                     losses.append(loss)
-                return params, momentum_state, jnp.stack(losses)
+                # tree-stack, not jnp.stack: with probes the per-step
+                # output is the {"loss", <probe>...} dict
+                stacked = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *losses
+                )
+                return params, momentum_state, stacked
 
             return multi_step
         raise ValueError(f"unknown rollout {rollout!r}")
@@ -242,6 +259,8 @@ class TrainSetup:
         resume: bool = False,
         stop_after_segments: int | None = None,
         delays=None,
+        tracer: "Tracer | None" = None,
+        retrace_guard=None,
     ) -> dict:
         """Segmented online rollout with hot-swap handoff at boundaries.
 
@@ -300,6 +319,14 @@ class TrainSetup:
         The meter splits delivered bytes into on-time vs deferred per
         the closed form (``comm["deferred_bytes"]``).
 
+        Telemetry: ``tracer`` (a ``repro.obs.Tracer``) records
+        ``segment.rollout`` / ``segment.restage`` / ``segment.checkpoint``
+        spans; ``retrace_guard`` (a ``repro.obs.RetraceGuard``) counts
+        multi-step compiles under ``"run_segments.multi_step"``. On a
+        ``probes`` setup the per-step health series come back under
+        ``"health"`` (one ``(steps,)`` array per probe) while
+        ``"losses"`` stays the plain loss trajectory.
+
         Returns ``{"params", "opt_state", "losses", "n_traces",
         "swaps", "recompiles", "segment_s", "comm", "setup", "mix",
         "resumed_from", "stopped_at"}``
@@ -324,6 +351,7 @@ class TrainSetup:
             )
         steps = jax.tree_util.tree_leaves(batches)[0].shape[0]
         setup = self
+        tracer = _NULL_TRACER if tracer is None else tracer
         n_traces = 0
         if self.staleness is None:
             if delays is not None:
@@ -349,6 +377,8 @@ class TrainSetup:
             def counted(p, m, b, *w):
                 nonlocal n_traces
                 n_traces += 1
+                if retrace_guard is not None:
+                    retrace_guard.record("run_segments.multi_step")
                 return ms(p, m, b, *w)
 
             return jax.jit(counted)
@@ -376,6 +406,10 @@ class TrainSetup:
 
         meter = CommMeter(per_step_bytes=setup.comm_bytes_per_step or 0)
         losses, swaps, segment_s = [], [], []
+        probe_names = (
+            setup.probes.names() if setup.probes is not None else ()
+        )
+        health_l: dict[str, list] = {nm: [] for nm in probe_names}
         recompiles = 0
         t0 = 0
         resumed_from = None
@@ -390,27 +424,31 @@ class TrainSetup:
                 resumed_from = t0
 
         def save(t: int) -> None:
-            save_checkpoint(
-                checkpoint_dir,
-                t,
-                {"params": params, "opt": opt_state, "mix": mix},
-                metadata={"t": int(t)},
-            )
+            with tracer.span("segment.checkpoint", t=int(t)):
+                save_checkpoint(
+                    checkpoint_dir,
+                    t,
+                    {"params": params, "opt": opt_state, "mix": mix},
+                    metadata={"t": int(t)},
+                )
 
         seg_idx = 0
         while t0 < steps:
             k = min(segment_len, steps - t0)
             seg = jax.tree_util.tree_map(lambda x: x[t0 : t0 + k], batches)
             tic = time.perf_counter()
-            if setup.staleness is not None:
-                d_seg = delays[t0 : t0 + k]
-                w_stack, eff = stale_stream(mix, d_seg)
-                params, opt_state, loss = msj(
-                    params, opt_state, seg, w_stack, eff
-                )
-            else:
-                params, opt_state, loss = msj(params, opt_state, seg, mix)
-            loss.block_until_ready()  # segment wall time is the overlap probe
+            with tracer.span("segment.rollout", t0=t0, k=k):
+                if setup.staleness is not None:
+                    d_seg = delays[t0 : t0 + k]
+                    w_stack, eff = stale_stream(mix, d_seg)
+                    params, opt_state, loss = msj(
+                        params, opt_state, seg, w_stack, eff
+                    )
+                else:
+                    params, opt_state, loss = msj(params, opt_state, seg, mix)
+                # segment wall time is the overlap probe (loss may be the
+                # probes dict -- block on the whole tree)
+                loss = jax.block_until_ready(loss)
             segment_s.append(time.perf_counter() - tic)
             if setup.staleness is not None:
                 fates = [
@@ -426,7 +464,12 @@ class TrainSetup:
                 )
             else:
                 meter.tick(k)
-            losses.append(np.asarray(loss))
+            if probe_names:
+                losses.append(np.asarray(loss["loss"]))
+                for nm in probe_names:
+                    health_l[nm].append(np.asarray(loss[nm]))
+            else:
+                losses.append(np.asarray(loss))
             t0 += k
             seg_idx += 1
             # no hook after the final segment (nothing executes it)
@@ -440,8 +483,9 @@ class TrainSetup:
                             # pool miss: the new atoms are not compiled in
                             # -- rebuild the step around the restaged pool
                             # (the ONE counted recompile)
-                            setup = setup._rebuild(pool)
-                            msj = jit_counted(setup.multi_step_fn(rollout))
+                            with tracer.span("segment.restage", t=t0 - 1):
+                                setup = setup._rebuild(pool)
+                                msj = jit_counted(setup.multi_step_fn(rollout))
                             recompiles += 1
                             meter.set_rate(
                                 setup.comm_bytes_per_step or 0, step=t0
@@ -463,7 +507,7 @@ class TrainSetup:
                     save(t0)  # the crash drill must leave a resumable state
                 stopped_at = t0
                 break
-        return {
+        out = {
             "params": params,
             "opt_state": opt_state,
             "losses": np.concatenate(losses) if losses else np.zeros((0,)),
@@ -477,6 +521,13 @@ class TrainSetup:
             "resumed_from": resumed_from,
             "stopped_at": stopped_at,
         }
+        if probe_names:
+            empty = np.zeros((0,))
+            out["health"] = {
+                nm: (np.concatenate(v) if v else empty)
+                for nm, v in health_l.items()
+            }
+        return out
 
     # rebuilds this setup around a restaged PermPool (set by
     # make_train_setup; a manually constructed TrainSetup cannot restage)
@@ -589,6 +640,7 @@ def make_train_setup(
     pool: PermPool | None = None,
     compression: "Compressor | str | None" = None,
     staleness: "StragglerPolicy | None" = None,
+    probes: "HealthProbes | None" = None,
 ) -> TrainSetup:
     """Build the distributed train step for (cfg, mesh, mode).
 
@@ -661,8 +713,45 @@ def make_train_setup(
     rejected explicitly. Composes with ``compression``: the ring then
     stores the compressed wire payload and the EF memory stays local
     and fresh (see ``repro.core.compression``).
+
+    ``probes`` (a ``repro.obs.HealthProbes``; ``consensus`` and
+    ``grad_dev`` only) threads the paper's health quantities through
+    the shard_map as collective value computations (``pmean`` /
+    ``psum`` over the node axis -- same numbers as the stacked-host
+    probes, asserted in tests): the step's loss output becomes the
+    ``{"loss", <probe>...}`` dict of replicated scalars, per-step
+    series land in ``run_segments``' ``"health"``, and the loss
+    trajectory is BITWISE the probes-off run's. ``tau_bar`` is
+    rejected here -- the pool transport never materializes W's
+    coefficients in the carry; use the simulator drivers. Requires the
+    online_w dsgd step (fsdp has one global model, so consensus is
+    identically zero; dsgd_pod mixes by GSPMD einsum outside the
+    manual node axis).
     """
     compressor = make_compressor(compression)
+    if probes is not None:
+        if not isinstance(probes, HealthProbes):
+            raise TypeError(
+                f"probes must be a HealthProbes, got {type(probes).__name__}"
+            )
+        if probes.tau_bar:
+            raise ValueError(
+                "the tau_bar probe needs the in-carry ScheduleArrays of the "
+                "simulator drivers (run_mean_estimation / run_classification); "
+                "the mesh transports never carry W's coefficients"
+            )
+        if mode != "dsgd":
+            raise ValueError(
+                f"health probes are incompatible with mode={mode!r}: they "
+                "are collectives over the manual dsgd node axis (fsdp has "
+                "one global model -- consensus is identically 0; dsgd_pod "
+                "mixes by GSPMD einsum)"
+            )
+        if not online_w:
+            raise ValueError(
+                "health probes ride the online (retrace-free) step: build "
+                "with online_w=True"
+            )
     if staleness is not None:
         if not isinstance(staleness, StragglerPolicy):
             raise TypeError(
@@ -1023,6 +1112,28 @@ def make_train_setup(
             else:
                 mixed = do_mix(half)
             loss_mean = jax.lax.pmean(loss, node_axis)
+            if probes is not None:
+                # collective twins of the stacked-host probes: psum over
+                # nodes of this shard's squared distance to the pmean.
+                # Pure value computations on this step's mixed params /
+                # grads -- extra replicated outputs, zero extra traces.
+                def spread_sq(tree):
+                    tot = jnp.zeros((), jnp.float32)
+                    for x in jax.tree_util.tree_leaves(tree):
+                        xf = x.astype(jnp.float32)
+                        mu = jax.lax.pmean(xf, node_axis)
+                        tot = tot + jax.lax.psum(
+                            jnp.sum(jnp.square(xf - mu)), node_axis
+                        )
+                    return tot
+
+                loss_out = {"loss": loss_mean}
+                if probes.consensus:
+                    loss_out["consensus"] = spread_sq(mixed)
+                if probes.grad_dev:
+                    loss_out["grad_dev"] = spread_sq(grads) / n_nodes
+            else:
+                loss_out = loss_mean
             new_m_tree = unsqueeze(new_m) if momentum > 0.0 else m_tree
             if isinstance(m, dict):
                 new_m_out = {}
@@ -1042,7 +1153,7 @@ def make_train_setup(
                     )
             else:
                 new_m_out = new_m_tree
-            return unsqueeze(mixed), new_m_out, loss_mean
+            return unsqueeze(mixed), new_m_out, loss_out
 
         node_specs = jax.tree_util.tree_map(
             lambda s: P(node_axis), param_specs, is_leaf=lambda x: isinstance(x, P)
@@ -1074,11 +1185,16 @@ def make_train_setup(
                 # its own entry by axis_index inside the transport
                 in_specs = in_specs + (P(),)
                 args = args + (delays,)
+        loss_specs = (
+            {"loss": P(), **{nm: P() for nm in probes.names()}}
+            if probes is not None
+            else P()
+        )
         return shard_map(
             per_node,
             mesh=mesh,
             in_specs=in_specs,
-            out_specs=(node_specs, mom_specs, P()),
+            out_specs=(node_specs, mom_specs, loss_specs),
             axis_names={node_axis},
             check_vma=False,
         )(*args)
@@ -1100,7 +1216,7 @@ def make_train_setup(
             cfg, mesh, mode=mode, schedule=schedule, lr=lr, momentum=momentum,
             impl=impl, grad_accum=grad_accum, gossip_every=gossip_every,
             online_w=online_w, sharded_transport="pool", pool=new_pool,
-            compression=compressor, staleness=staleness,
+            compression=compressor, staleness=staleness, probes=probes,
         )
 
     def init_opt_state(params: PyTree):
@@ -1148,6 +1264,7 @@ def make_train_setup(
         comm_bytes_per_step=comm_bytes,
         compression=compressor,
         staleness=staleness,
+        probes=probes,
         _rebuild=rebuild,
         _init_opt_state=init_opt_state,
     )

@@ -207,7 +207,16 @@ class CommMeter:
         delivered = int(volume * delivered_frac)
         self.total_bytes += delivered
         self.dropped_bytes += volume - delivered
-        self.deferred_bytes += int(volume * deferred_frac)
+        # Derive deferred from the already-truncated delivered volume, not
+        # from a second independent int(volume * frac) truncation: the
+        # subset invariant (deferred <= delivered, per tick and hence
+        # cumulatively) must hold by CONSTRUCTION, not by both roundings
+        # happening to land the same way under fractional fates.
+        if delivered_frac > 0.0:
+            deferred = int(delivered * (deferred_frac / delivered_frac))
+        else:
+            deferred = 0
+        self.deferred_bytes += deferred
 
     def retransmit(self, nbytes: int) -> None:
         """Count a successful re-send (delivered, on top of the model)."""
@@ -246,6 +255,11 @@ def consensus_distance(params_stack: PyTree) -> jax.Array:
 def node_spread(values: jax.Array) -> dict[str, float]:
     """min/mean/max over the node axis (Fig. 1's solid + dashed lines)."""
     v = np.asarray(values)
+    if v.size == 0:
+        raise ValueError(
+            "node_spread: empty value array -- no nodes to aggregate (did "
+            "an eval produce zero rows?)"
+        )
     return {"min": float(v.min()), "mean": float(v.mean()), "max": float(v.max())}
 
 
@@ -266,8 +280,31 @@ class MetricLogger:
         row.update({k: float(v) for k, v in metrics.items()})
         self.history.append(row)
 
-    def column(self, key: str) -> np.ndarray:
+    def column(self, key: str, aligned: bool = False) -> np.ndarray:
+        """Values of ``key`` across the history.
+
+        By default rows missing the key are skipped (the historical
+        behavior -- fine when the key is logged every row, silently
+        misaligning otherwise). ``aligned=True`` returns one entry per
+        history row, ``nan`` where the key is absent, so two columns
+        with different logging cadences can be compared index-to-index.
+        """
+        if aligned:
+            return np.array(
+                [float(row.get(key, np.nan)) for row in self.history]
+            )
         return np.array([row[key] for row in self.history if key in row])
+
+    @staticmethod
+    def _cell(row: dict, key: str) -> str:
+        # explicit empty cell for BOTH missing keys and NaN values --
+        # previously a missing key wrote "" but a logged NaN wrote the
+        # bare token "nan", so the two kinds of absence were
+        # indistinguishable from a real column value in some readers
+        v = row.get(key)
+        if v is None or (isinstance(v, float) and np.isnan(v)):
+            return ""
+        return str(v)
 
     def to_csv(self, path: str) -> None:
         if not self.history:
@@ -276,4 +313,17 @@ class MetricLogger:
         with open(path, "w") as f:
             f.write(",".join(keys) + "\n")
             for row in self.history:
-                f.write(",".join(str(row.get(k, "")) for k in keys) + "\n")
+                f.write(",".join(self._cell(row, k) for k in keys) + "\n")
+
+    def to_jsonl(self, path: str) -> None:
+        """One JSON object per history row (the report pipeline's format:
+        ragged rows survive verbatim, no column alignment, NaN -> null)."""
+        import json
+
+        with open(path, "w") as f:
+            for row in self.history:
+                clean = {
+                    k: (None if isinstance(v, float) and np.isnan(v) else v)
+                    for k, v in row.items()
+                }
+                f.write(json.dumps(clean) + "\n")

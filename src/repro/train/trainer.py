@@ -46,6 +46,8 @@ from repro.core.mixing import (
     unravel_stack,
 )
 from repro.data.synthetic import MeanEstimationTask
+from repro.obs.probes import HealthProbes, compute_probes
+from repro.obs.trace import Tracer
 from .metrics import (
     CommMeter,
     MetricLogger,
@@ -53,6 +55,10 @@ from .metrics import (
     mix_bytes_per_step,
     staleness_transfer_fracs,
 )
+
+# instrumented code paths take an always-on tracer (span() bodies still
+# run); callers opt in by passing a real one
+_NULL_TRACER = Tracer(enabled=False)
 
 
 def _online_comm_meter(
@@ -123,6 +129,64 @@ def _check_staleness_args(staleness, delays, steps, n, online, rollout):
     return delays.astype(np.int32)
 
 
+def _check_probe_args(probes, pi_hat, n, online, rollout, staleness):
+    """Validate the (probes, pi_hat) pair shared by both simulator
+    drivers; returns pi_hat as a device f32 array (or None)."""
+    if probes is None:
+        if pi_hat is not None:
+            raise ValueError(
+                "pi_hat without probes: pass HealthProbes(tau_bar=True) to "
+                "say what the estimate is for"
+            )
+        return None
+    if not isinstance(probes, HealthProbes):
+        raise TypeError(
+            f"probes must be a HealthProbes, got {type(probes).__name__}"
+        )
+    if not online:
+        raise ValueError(
+            "health probes ride the retrace-free data plane: pass the "
+            "schedule as ScheduleArrays (probe values are per-step scan "
+            "outputs of the compiled rollout)"
+        )
+    if rollout != "scan":
+        raise ValueError(
+            "health probes need rollout='scan': per-step probe values come "
+            "back as scan outputs, not per-dispatch host reads"
+        )
+    if staleness is not None:
+        raise ValueError(
+            "health probes under bounded-delay gossip are not supported "
+            "yet: run probes on the fresh online path, or sample at eval "
+            "boundaries under staleness"
+        )
+    if probes.tau_bar:
+        if pi_hat is None:
+            raise ValueError(
+                "HealthProbes(tau_bar=True) needs pi_hat: the live (n, K) "
+                "label-histogram estimate the Prop. 2 proxy is evaluated at"
+            )
+        pi_hat = jnp.asarray(pi_hat, jnp.float32)
+        if pi_hat.ndim != 2 or pi_hat.shape[0] != n:
+            raise ValueError(
+                f"pi_hat must be (n={n}, K), got {tuple(pi_hat.shape)}"
+            )
+        return pi_hat
+    if pi_hat is not None:
+        raise ValueError("pi_hat given but probes.tau_bar is off")
+    return None
+
+
+def _live_pi_hat(on_segment, current):
+    """Snapshot the hook's live Pi estimate (an OnlineTopologyController
+    exposes ``.estimator.Pi_hat``), so the tau_bar probe tracks the
+    estimate as a per-segment VALUE change; hooks without an estimator
+    keep the caller-provided pi_hat."""
+    est = getattr(on_segment, "estimator", None)
+    live = getattr(est, "Pi_hat", None) if est is not None else None
+    return current if live is None else jnp.asarray(live, jnp.float32)
+
+
 def _staleness_meter_fracs(delays, staleness) -> tuple[float, float]:
     """Mean (delivered_frac, deferred_frac) over a (k, n) delay window --
     the :meth:`CommMeter.tick` pair, from the closed-form model."""
@@ -156,6 +220,10 @@ def run_mean_estimation(
     compression=None,
     staleness: StragglerPolicy | None = None,
     delays: np.ndarray | None = None,
+    probes: HealthProbes | None = None,
+    pi_hat: np.ndarray | None = None,
+    tracer: Tracer | None = None,
+    retrace_guard=None,
 ) -> dict:
     """D-SGD on ``F_i(theta, z) = (theta - z)^2``; returns error traces.
 
@@ -199,6 +267,19 @@ def run_mean_estimation(
     refreshed base is re-resolved from the next segment on). All-zero
     delays reproduce the fresh run BITWISE. Requires the online
     ``ScheduleArrays`` schedule and ``rollout="scan"``.
+
+    ``probes`` (a ``repro.obs.HealthProbes``) threads the paper's health
+    quantities -- consensus distance, gradient deviation, and (with
+    ``pi_hat``, the (n, K) live label-histogram estimate) Prop. 2's
+    ``tau_bar`` at the in-carry schedule -- into the compiled rollout's
+    per-step outputs as pure value computations: the returned dict gains
+    ``"health"`` (one (steps,) series per probe) and ``n_traces`` stays
+    1 across hot swaps. When ``on_segment`` is an
+    ``OnlineTopologyController``, ``pi_hat`` re-snapshots its live
+    estimator at every boundary. ``tracer`` (a ``repro.obs.Tracer``)
+    records a ``sim.segment`` span per rollout segment;
+    ``retrace_guard`` (a ``repro.obs.RetraceGuard``) counts rollout
+    compiles under ``"mean_estimation.roll"``.
     """
     if rollout not in ("scan", "loop"):
         raise ValueError(f"unknown rollout {rollout!r}")
@@ -236,6 +317,7 @@ def run_mean_estimation(
     delays_arr = _check_staleness_args(
         staleness, delays, steps, n, online, rollout
     )
+    pi_hat = _check_probe_args(probes, pi_hat, n, online, rollout, staleness)
     if staleness is not None:
         return _run_mean_estimation_stale(
             theta, zs, schedule,
@@ -244,7 +326,7 @@ def run_mean_estimation(
             delays=delays_arr, compressor=compressor,
         )
 
-    def make_step(sched):
+    def make_step(sched, ph=None):
         def step(carry, z):
             if compressor is not None:
                 theta, st, e = carry
@@ -265,7 +347,16 @@ def run_mean_estimation(
                 )
                 new_carry = (theta, st)
             err = jnp.square(theta[:, 0] - theta_star)
-            return new_carry, (jnp.mean(err), jnp.max(err), jnp.min(err))
+            outs = (jnp.mean(err), jnp.max(err), jnp.min(err))
+            if probes is not None:
+                # pure value computations on the post-mix params / this
+                # step's grads -- extra scan outputs, zero retraces
+                pv = compute_probes(
+                    probes, params_stack=theta, grads_stack=grads,
+                    arrays=sched, pi_hat=ph,
+                )
+                outs = outs + tuple(pv.values())
+            return new_carry, outs
         return step
 
     if online:
@@ -273,6 +364,8 @@ def run_mean_estimation(
             theta, state, zs, make_step, schedule,
             steps=steps, segment_len=segment_len, on_segment=on_segment,
             rollout=rollout, compressor=compressor,
+            probes=probes, pi_hat=pi_hat, tracer=tracer,
+            retrace_guard=retrace_guard,
         )
 
     step = make_step(schedule)
@@ -317,6 +410,10 @@ def _run_mean_estimation_online(
     on_segment,
     rollout: str,
     compressor=None,
+    probes=None,
+    pi_hat=None,
+    tracer=None,
+    retrace_guard=None,
 ) -> dict:
     """Mean-estimation driver with the schedule threaded as data.
 
@@ -327,32 +424,41 @@ def _run_mean_estimation_online(
     ``segment_len`` divides ``steps``), regardless of how many times
     the schedule was swapped. Under ``compressor`` the EF memory joins
     the carry (fixed shape, like the schedule itself), so the count
-    stays 1 in compressed runs too.
+    stays 1 in compressed runs too. ``pi_hat`` (tau_bar probe only)
+    enters the jitted rollout as an ordinary operand -- per-segment
+    estimator updates are value changes.
     """
+    tracer = _NULL_TRACER if tracer is None else tracer
     n_traces = 0
     if rollout == "scan":
-        def roll_impl(carry, zs_seg):
+        def roll_impl(carry, zs_seg, ph):
             nonlocal n_traces
             n_traces += 1
+            if retrace_guard is not None:
+                retrace_guard.record("mean_estimation.roll")
             inner, sa = carry[:-1], carry[-1]
-            inner, traces = jax.lax.scan(make_step(sa), inner, zs_seg)
+            inner, traces = jax.lax.scan(make_step(sa, ph), inner, zs_seg)
             return inner + (sa,), traces
         roll = jax.jit(roll_impl)
     else:
-        def step_impl(carry, z):
+        def step_impl(carry, z, ph):
             nonlocal n_traces
             n_traces += 1
+            if retrace_guard is not None:
+                retrace_guard.record("mean_estimation.roll")
             inner, sa = carry[:-1], carry[-1]
-            inner, out = make_step(sa)(inner, z)
+            inner, out = make_step(sa, ph)(inner, z)
             return inner + (sa,), out
         step_j = jax.jit(step_impl)
 
-        def roll(carry, zs_seg):
+        def roll(carry, zs_seg, ph):
             outs = []
             for t in range(zs_seg.shape[0]):
-                carry, out = step_j(carry, zs_seg[t])
+                carry, out = step_j(carry, zs_seg[t], ph)
                 outs.append(out)
-            stacked = [jnp.stack([o[i] for o in outs]) for i in range(3)]
+            stacked = [
+                jnp.stack([o[i] for o in outs]) for i in range(len(outs[0]))
+            ]
             return carry, tuple(stacked)
 
     # NB: `is None`, not truthiness -- segment_len=0 must hit the
@@ -365,17 +471,25 @@ def _run_mean_estimation_online(
     else:
         carry = (theta, state, sched0)
     mse_l, mx_l, mn_l = [], [], []
+    probe_names = probes.names() if probes is not None else ()
+    health_l: dict[str, list] = {nm: [] for nm in probe_names}
     swaps: list[int] = []
     meter = _online_comm_meter(
         theta.shape[0], int(np.prod(theta.shape[1:])), compression=compressor
     )
+    ph = pi_hat  # None is a valid (empty-pytree) jit operand when tau_bar off
     t0 = 0
     while t0 < steps:
         length = min(seg, steps - t0)
-        carry, (e_mean, e_max, e_min) = roll(carry, zs[t0 : t0 + length])
+        with tracer.span("sim.segment", t0=t0, k=length):
+            carry, traces = roll(carry, zs[t0 : t0 + length], ph)
+            traces = jax.block_until_ready(traces)
+        e_mean, e_max, e_min = traces[:3]
         mse_l.append(np.asarray(e_mean))
         mx_l.append(np.asarray(e_max))
         mn_l.append(np.asarray(e_min))
+        for nm, series in zip(probe_names, traces[3:]):
+            health_l[nm].append(np.asarray(series))
         meter.tick(length)
         t0 += length
         if on_segment is not None and t0 < steps:
@@ -385,9 +499,12 @@ def _run_mean_estimation_online(
             if new_sa is not None:
                 carry = carry[:-1] + (new_sa,)
                 swaps.append(t0 - 1)
+            if ph is not None:
+                # tau_bar tracks the hook's live estimator as a VALUE
+                ph = _live_pi_hat(on_segment, ph)
     theta = carry[0]
     empty = np.zeros((0,))
-    return {
+    out = {
         "mean_sq_error": np.concatenate(mse_l) if mse_l else empty,
         "max_sq_error": np.concatenate(mx_l) if mx_l else empty,
         "min_sq_error": np.concatenate(mn_l) if mn_l else empty,
@@ -397,6 +514,11 @@ def _run_mean_estimation_online(
         "comm": meter.summary(),
         "compression": compressor.label if compressor is not None else None,
     }
+    if probes is not None:
+        out["health"] = {
+            nm: (np.concatenate(v) if v else empty) for nm, v in health_l.items()
+        }
+    return out
 
 
 def _run_mean_estimation_stale(
@@ -614,6 +736,10 @@ def run_classification(
     compression=None,
     staleness: StragglerPolicy | None = None,
     delays: np.ndarray | None = None,
+    probes: HealthProbes | None = None,
+    pi_hat: np.ndarray | None = None,
+    tracer: Tracer | None = None,
+    retrace_guard=None,
 ) -> MetricLogger:
     """D-SGD classification with per-node local data (Algorithm 1).
 
@@ -643,6 +769,13 @@ def run_classification(
     memory and stale ring in ONE carry) and ``on_segment`` hot swaps;
     all-zero delays are bitwise the fresh run. Scan rollout + online
     ``ScheduleArrays`` required.
+
+    ``probes`` / ``pi_hat`` / ``tracer`` / ``retrace_guard`` work as in
+    :func:`run_mean_estimation`: per-step health series land in
+    ``logger.aux["health"]``, segments get ``sim.segment`` spans, and
+    rollout compiles are counted under ``"classification.roll"``.
+    Requires the online scan rollout; probe outputs are extra scan ys,
+    so the loss trajectory is BITWISE the probes-off run's.
     """
     if rollout not in ("scan", "loop"):
         raise ValueError(f"unknown rollout {rollout!r}")
@@ -662,6 +795,8 @@ def run_classification(
     delays_arr = _check_staleness_args(
         staleness, delays, steps, n, online, rollout
     )
+    pi_hat = _check_probe_args(probes, pi_hat, n, online, rollout, staleness)
+    tracer = _NULL_TRACER if tracer is None else tracer
     num_classes = int(y.max()) + 1
     dim = X.shape[1]
     data = _stack_node_data(X, y, indices_per_node)
@@ -686,7 +821,7 @@ def run_classification(
         loss = classifier_loss(p, xb, yb)
         return grad_fn(p, xb, yb), loss
 
-    def step(carry, _):
+    def step(carry, _, ph=None):
         if online and compressor is not None:
             params, state, key, e, sa = carry
             sched_t = sa
@@ -716,7 +851,14 @@ def run_classification(
                 if online
                 else (new_params, new_state, key)
             )
-        return out_carry, losses.mean()
+        if probes is None:
+            return out_carry, losses.mean()
+        # extra scan ys only -- the loss trajectory is bitwise unchanged
+        pv = compute_probes(
+            probes, params_stack=new_params, grads_stack=grads,
+            arrays=sched_t, pi_hat=ph,
+        )
+        return out_carry, (losses.mean(),) + tuple(pv.values())
 
     @jax.jit
     def eval_fn(params, X_t, y_t):
@@ -747,6 +889,9 @@ def run_classification(
 
     n_traces = 0
     swaps: list[int] = []
+    probe_names = probes.names() if probes is not None else ()
+    health_l: dict[str, list] = {nm: [] for nm in probe_names}
+    ph = pi_hat  # None is a valid (empty-pytree) jit operand when tau_bar off
 
     def maybe_swap(t: int, carry):
         """Hot-swap the carried schedule if the hook hands back a new one."""
@@ -805,6 +950,8 @@ def run_classification(
         def roll_stale_impl(carry, xs):
             nonlocal n_traces
             n_traces += 1
+            if retrace_guard is not None:
+                retrace_guard.record("classification.roll")
             return jax.lax.scan(stale_step, carry, xs)
 
         roll_stale = jax.jit(roll_stale_impl)
@@ -818,7 +965,9 @@ def run_classification(
             xs = straggler_stream(
                 staleness, base_sa, delays_arr[t0 : t0 + seg_len]
             )
-            carry, losses = roll_stale(carry, xs)
+            with tracer.span("sim.segment", t0=t0, k=seg_len):
+                carry, losses = roll_stale(carry, xs)
+                losses = jax.block_until_ready(losses)
             log_segment(t0, np.asarray(losses), carry[0], evaluate and do_eval)
             t0 += seg_len
             if t0 < steps and on_segment is not None:
@@ -828,10 +977,14 @@ def run_classification(
                     swaps.append(t0 - 1)
     elif rollout == "scan":
         @functools.partial(jax.jit, static_argnames=("length",))
-        def roll(carry, length: int):
+        def roll(carry, length: int, ph=None):
             nonlocal n_traces
             n_traces += 1
-            return jax.lax.scan(step, carry, None, length=length)
+            if retrace_guard is not None:
+                retrace_guard.record("classification.roll")
+            return jax.lax.scan(
+                lambda c, x: step(c, x, ph), carry, None, length=length
+            )
 
         if online and compressor is not None:
             carry = (params, state, key, ef_init(params), schedule)
@@ -841,15 +994,28 @@ def run_classification(
             carry = (params, state, key)
         t0 = 0
         for seg_len, evaluate in _eval_segments(steps, eval_every, segmented):
-            carry, losses = roll(carry, seg_len)
+            with tracer.span("sim.segment", t0=t0, k=seg_len):
+                carry, traces = roll(carry, seg_len, ph)
+                traces = jax.block_until_ready(traces)
+            if probes is not None:
+                losses = traces[0]
+                for nm, series in zip(probe_names, traces[1:]):
+                    health_l[nm].append(np.asarray(series))
+            else:
+                losses = traces
             log_segment(t0, np.asarray(losses), carry[0], evaluate and do_eval)
             t0 += seg_len
             if t0 < steps:  # no hook after the final segment (see above)
                 carry = maybe_swap(t0 - 1, carry)
+                if ph is not None:
+                    # tau_bar tracks the hook's live estimator as a VALUE
+                    ph = _live_pi_hat(on_segment, ph)
     else:
         def step_impl(carry, x):
             nonlocal n_traces
             n_traces += 1
+            if retrace_guard is not None:
+                retrace_guard.record("classification.roll")
             return step(carry, x)
 
         step_j = jax.jit(step_impl)
@@ -869,6 +1035,12 @@ def run_classification(
                 carry = maybe_swap(t, carry)
     logger.aux["n_traces"] = n_traces
     logger.aux["swaps"] = swaps
+    if probes is not None:
+        empty = np.zeros((0,))
+        logger.aux["health"] = {
+            nm: (np.concatenate(v) if v else empty)
+            for nm, v in health_l.items()
+        }
     if online:
         meter = _online_comm_meter(
             n,
