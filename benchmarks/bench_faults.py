@@ -31,6 +31,20 @@ crash recovery (ISSUE 6).
    -- which lands the "final loss within 5% of uninterrupted" bar at
    exactly 0% gap (recorded honestly in the JSON).
 
+4. **Corruption sweep** (ISSUE 10) -- wire corruption (nan / sign_flip /
+   scale / bitflip) from a scripted fraction of persistently lying
+   nodes, with the receiver-side screen + quarantine ON vs OFF, against
+   the same observation stream. Acceptance bars: screen-on tail loss
+   over the HONEST nodes within 1.2x fault-free at 10% corrupting
+   nodes for every mode; the screen-off arm recorded honestly as the
+   divergence baseline; the corruption-off control arm BITWISE the
+   plain transport; a NaN-sender confirmed within the screen's
+   confirm streak; the quarantine-repaired W doubly stochastic to
+   1e-12; metered quarantined bytes equal to the closed-form fates;
+   zero false quarantines across every ``data/drift.py``
+   heterogeneity scenario with no corruption injected; and retraces
+   == 0 everywhere.
+
 Writes experiments/bench/BENCH_faults.json.
 """
 
@@ -44,13 +58,26 @@ import numpy as np
 from .common import emit, result_dir
 from repro.core.mixing import (
     StragglerPolicy,
+    degrade_schedule,
     schedule_from_result,
     schedule_to_arrays,
 )
 from repro.core.stl_fw import learn_topology
-from repro.data.drift import NodeChurn
+from repro.data.drift import (
+    AbruptLabelSwap,
+    ConceptShift,
+    FeatureDrift,
+    GradualDirichlet,
+    NodeChurn,
+)
 from repro.data.synthetic import mean_estimation_clusters
-from repro.faults import FaultPlan, run_faulty_mean_estimation
+from repro.faults import (
+    FaultPlan,
+    QuarantineController,
+    ScreenPolicy,
+    false_quarantines,
+    run_faulty_mean_estimation,
+)
 from repro.online import RefreshConfig, TopologyRefresher
 
 LAM = 0.1
@@ -410,11 +437,331 @@ def _bench_crash_recovery(results: dict, smoke: bool) -> None:
     )
 
 
+# scripted corruption planes: what a persistent liar writes onto the
+# wire ("scale:8" per the plan grammar; the bitflip toggles exponent
+# bit 25, a silent-data-corruption stand-in)
+_CORRUPT_MODES = {
+    "nan": (np.float32(np.nan), np.int32(0)),
+    "sign_flip": (np.float32(-1.0), np.int32(0)),
+    "scale:8": (np.float32(8.0), np.int32(0)),
+    "bitflip": (np.float32(1.0), np.int32(1) << np.int32(25)),
+}
+
+
+def _dense_w(arrays, f64_renorm: bool = True) -> np.ndarray:
+    """Reconstruct dense W from (gammas, perms): row i receives from
+    perms[l, i] with weight gammas[l]."""
+    gam = np.asarray(arrays.gammas, np.float64)
+    per = np.asarray(arrays.perms, np.int64)
+    if f64_renorm:
+        gam = gam / gam.sum()  # strip the f32 storage rounding
+    n = per.shape[1]
+    W = np.zeros((n, n))
+    for l in range(per.shape[0]):
+        W[np.arange(n), per[l]] += gam[l]
+    return W
+
+
+def _bench_corruption_sweep(results: dict, smoke: bool) -> None:
+    """Wire corruption x screening: the ISSUE 10 acceptance grid."""
+    if smoke:
+        n, K, steps, seg, batch = 8, 4, 120, 20, 2
+    else:
+        n, K, steps, seg, batch = 16, 4, 300, 30, 2
+    lr = 0.05
+    rates = (0.1, 0.25)
+    t_start = 5  # liars start lying here (after a couple of honest steps)
+    task = mean_estimation_clusters(n_nodes=n, K=K, m=5.0, sigma_tilde2=1.0)
+    res0 = learn_topology(task.Pi, budget=8, lam=LAM)
+    sched0 = schedule_from_result(res0)
+    arrays = schedule_to_arrays(sched0, sched0.n_atoms + 2)
+    rng = np.random.default_rng(12)
+    zs = np.stack([task.sample(batch, rng) for _ in range(steps)]).astype(
+        np.float32
+    )
+    tail = slice(-max(10, steps // 10), None)
+    kw = dict(lr=lr, seed=2, zs=zs, segment_len=seg)
+    # cooldown > run length: a confirmed liar stays isolated, so the
+    # quarantine mask is monotone and the metered quarantined bytes have
+    # a closed form the bench replays below
+    policy = ScreenPolicy(
+        confirm_streak=2, cooldown_steps=2 * steps, probation_steps=8
+    )
+
+    def honest_tail(out, honest) -> float:
+        per_node = out["sq_error_nodes"]  # (steps, n), screened path
+        return float(np.median(np.mean(per_node[:, honest], axis=1)[tail]))
+
+    t0_wall = time.perf_counter()
+    # plain transport baseline (corruption-off, no controller): compiles
+    # the PRE-corruption scan body -- the bitwise reference
+    plan0 = FaultPlan(n_nodes=n, steps=steps, seed=0)
+    base = run_faulty_mean_estimation(task, plan0, arrays, **kw)
+    assert base["n_traces"] == 1
+    assert base["sq_error_nodes"] is None  # unscreened body ran
+
+    # screened-clean baseline: controller ON, zero corruption. The
+    # screened transport with a clean wire must reproduce the plain
+    # trajectory BITWISE (the corruption-off acceptance bar), quarantine
+    # nobody, and its per-node trace is the fault-free reference the
+    # 1.2x honest-tail bar measures against.
+    q0 = QuarantineController(n, policy, lr=lr)
+    clean = run_faulty_mean_estimation(
+        task, plan0, arrays, quarantine=q0, **kw
+    )
+    assert clean["n_traces"] == 1
+    corruption_off_bitwise = bool(
+        np.array_equal(clean["mean_sq_error"], base["mean_sq_error"])
+    )
+    assert corruption_off_bitwise, (
+        "screened transport with a clean wire diverged from the plain "
+        "transport"
+    )
+    assert q0.n_quarantines == 0, q0.summary()
+    assert clean["comm"]["quarantined_bytes"] == 0
+
+    def liar_plan(liars, mult, xor) -> FaultPlan:
+        """A clean plan post-edited into persistent liars (the
+        ``from_node_churn`` precedent of scripting a derived trace)."""
+        p = FaultPlan(n_nodes=n, steps=steps, seed=0)
+        p.corrupt_mult[t_start:, liars] = mult
+        p.corrupt_xor[t_start:, liars] = xor
+        assert p.has_corruption
+        return p
+
+    def expected_quarantined_bytes(plan, events, comm) -> int:
+        """Closed-form byte fates: replay the meter's segment ticks from
+        the event log (mask from segment s's evidence is ACTIVE in
+        segment s+1, cooldown > steps makes it monotone)."""
+        per_step = comm["per_step_bytes"]
+        q_ev = [(e["t"], e["node"]) for e in events
+                if e["event"] == "quarantine"]
+        total = 0
+        for ts in range(0, steps, seg):
+            k = min(seg, steps - ts)
+            mask = np.zeros(n, dtype=bool)
+            for (t_ev, i_ev) in q_ev:
+                if t_ev < ts:
+                    mask[i_ev] = True
+            frac = float(np.mean(
+                [plan.delivered_frac(t) for t in range(ts, ts + k)]
+            ))
+            qf = float(np.mean(
+                [plan.quarantined_frac(t, mask) for t in range(ts, ts + k)]
+            )) if mask.any() else 0.0
+            delivered = int(k * per_step * frac)
+            total += int(delivered * (qf / frac)) if frac > 0 else 0
+        return total
+
+    cells = []
+    for rate in rates:
+        h = max(1, round(rate * n))
+        liars = list(range(h))
+        honest = [i for i in range(n) if i >= h]
+        # the fault-free reference for this rate is the ORACLE isolation
+        # run: the liar slots simply offline from t_start (scripted
+        # alive mask), clean wire, same screened transport. Removing a
+        # node's data shifts the fleet optimum (Byzantine-robust
+        # convention: the defense answers for the honest fleet vs the
+        # best reachable honest-data solution, not vs an optimum that
+        # still averages the liars' data in) -- so the 1.2x bar
+        # measures the screen's overhead (detection latency + guard
+        # substitution), not the optimum shift.
+        oracle_plan = FaultPlan(n_nodes=n, steps=steps, seed=0)
+        oracle_plan.alive[t_start:, liars] = False
+        q_or = QuarantineController(n, policy, lr=lr)
+        oracle = run_faulty_mean_estimation(
+            task, oracle_plan, arrays, quarantine=q_or, **kw
+        )
+        assert oracle["n_traces"] == 1
+        # absence is not evidence: the oracle's dead slots must not trip
+        # the screen (they are self-loops -- never exposed)
+        assert q_or.n_quarantines == 0, q_or.summary()
+        base_honest = honest_tail(oracle, honest)
+        for mode, (mult, xor) in _CORRUPT_MODES.items():
+            # -- screen ON: quarantine controller drives the defense
+            q = QuarantineController(n, policy, lr=lr)
+            plan = liar_plan(liars, mult, xor)
+            on = run_faulty_mean_estimation(
+                task, plan, arrays, quarantine=q, **kw
+            )
+            assert on["n_traces"] == 1, on["n_traces"]
+            err_on = honest_tail(on, honest)
+            ratio = err_on / base_honest
+            fq = false_quarantines(q.events, plan)
+            assert fq == 0, (
+                f"{mode}@{rate}: {fq} false quarantines: {q.summary()}"
+            )
+            # acceptance bar: at 10% corrupting nodes the honest fleet's
+            # tail loss stays within 1.2x fault-free, every mode
+            if rate <= 0.1:
+                assert ratio <= 1.2, (
+                    f"{mode}@{rate}: honest tail {ratio:.3f}x > 1.2x"
+                )
+            if mode == "nan":
+                # a NaN-sender trips the hard non-finite screen on its
+                # very first lie: confirmed within the streak, exactly
+                first = {}
+                for e in q.events:
+                    if e["event"] == "quarantine":
+                        first.setdefault(e["node"], e["t"])
+                for i in liars:
+                    assert i in first, f"NaN liar {i} never caught: {first}"
+                    assert first[i] == t_start + policy.confirm_streak - 1, (
+                        f"NaN liar {i} confirmed at {first[i]}, expected "
+                        f"{t_start + policy.confirm_streak - 1}"
+                    )
+            # metered quarantine fates match the closed form, and stay a
+            # subset of delivered volume
+            exp_q = expected_quarantined_bytes(plan, q.events, on["comm"])
+            assert on["comm"]["quarantined_bytes"] == exp_q, (
+                on["comm"]["quarantined_bytes"], exp_q
+            )
+            assert on["comm"]["quarantined_bytes"] <= on["comm"]["total_bytes"]
+            # the repaired schedule (liars pinned to self-loops) is
+            # exactly doubly stochastic on f64-renormalized gammas
+            if q.mask().any():
+                deg = degrade_schedule(arrays, ~q.mask())
+                W = _dense_w(deg)
+                ds_err = max(
+                    float(np.abs(W.sum(axis=0) - 1.0).max()),
+                    float(np.abs(W.sum(axis=1) - 1.0).max()),
+                )
+                assert ds_err <= 1e-12, f"repaired W not DS: {ds_err:.2e}"
+                for i in np.flatnonzero(q.mask()):
+                    # isolated row/col: no off-diagonal mass at all, and
+                    # the self-loop carries the full (renormalized) unit
+                    assert float(np.abs(np.delete(W[i], i)).max()) == 0.0
+                    assert float(np.abs(np.delete(W[:, i], i)).max()) == 0.0
+                    assert abs(W[i, i] - 1.0) <= 1e-12
+            else:
+                ds_err = 0.0
+
+            # -- screen OFF: same corruption, no controller -- the
+            # honest divergence baseline (nan poisons the fleet; the
+            # JSON records None where the tail is not finite)
+            off = run_faulty_mean_estimation(
+                task, liar_plan(liars, mult, xor), arrays, quarantine=None,
+                **kw
+            )
+            assert off["n_traces"] == 1
+            off_tail = honest_tail(off, honest)
+            off_finite = bool(np.isfinite(off_tail))
+            cells.append({
+                "rate": rate, "mode": mode, "n_liars": h,
+                "screen_on_honest_tail": err_on,
+                "screen_on_ratio": ratio,
+                "screen_off_honest_tail": off_tail if off_finite else None,
+                "screen_off_finite": off_finite,
+                "n_quarantines": q.n_quarantines,
+                "quarantined_now": q.summary()["quarantined_now"],
+                "false_quarantines": fq,
+                "quarantined_bytes": on["comm"]["quarantined_bytes"],
+                "repaired_w_ds_err": ds_err,
+                "n_traces": on["n_traces"],
+            })
+
+    # -- false-quarantine drill: every data/drift.py heterogeneity
+    # scenario, zero corruption. Observation means follow the scenario's
+    # OWN Pi(t) (plus FeatureDrift's covariate offset), so the fleet is
+    # heterogeneous AND drifting -- and the probe-derived screen must
+    # still flag nobody, because its allowance is measured on the run.
+    cmeans = np.linspace(-5.0, 5.0, K)
+    drift_rng = np.random.default_rng(30)
+    t_d = steps // 2
+
+    def zs_from_scenario(scn) -> np.ndarray:
+        out = np.empty((steps, n, batch), dtype=np.float32)
+        for t in range(steps):
+            mu = scn.Pi(t) @ cmeans
+            if hasattr(scn, "feature_shift"):
+                mu = mu + scn.feature_shift(t)[:, 0]
+            out[t] = mu[:, None] + drift_rng.normal(size=(n, batch))
+        return out
+
+    churn = NodeChurn(Pi0=task.Pi, events=((t_d, 2, 10),), seed=0)
+    scenarios = {
+        "abrupt_label_swap": (
+            AbruptLabelSwap(
+                Pi0=task.Pi, t_drift=t_d,
+                node_perm=drift_rng.permutation(n),
+            ),
+            FaultPlan(n_nodes=n, steps=steps, seed=0),
+        ),
+        "gradual_dirichlet": (
+            GradualDirichlet(
+                Pi0=task.Pi, t_start=steps // 3, t_end=2 * steps // 3, seed=1
+            ),
+            FaultPlan(n_nodes=n, steps=steps, seed=0),
+        ),
+        # churn rides with its matching crash trace: the screen must not
+        # blame a node for going silent (dead nodes are self-loops --
+        # not exposed, never voted on)
+        "node_churn": (
+            churn,
+            FaultPlan.from_node_churn(churn, steps=steps),
+        ),
+        "feature_drift": (
+            FeatureDrift(Pi0=task.Pi, t_drift=t_d, dim=4, seed=0),
+            FaultPlan(n_nodes=n, steps=steps, seed=0),
+        ),
+        "concept_shift": (
+            ConceptShift(Pi0=task.Pi, t_drift=t_d, dim=4, seed=0),
+            FaultPlan(n_nodes=n, steps=steps, seed=0),
+        ),
+    }
+    fp_drill = {}
+    for name, (scn, plan) in scenarios.items():
+        q = QuarantineController(n, policy, lr=lr)
+        out = run_faulty_mean_estimation(
+            task, plan, arrays, quarantine=q,
+            lr=lr, seed=2, zs=zs_from_scenario(scn), segment_len=seg,
+        )
+        assert out["n_traces"] == 1
+        # zero corruption injected => ANY quarantine would be false
+        assert q.n_quarantines == 0, f"{name}: {q.summary()}"
+        assert false_quarantines(q.events, plan) == 0
+        fp_drill[name] = {
+            "n_quarantines": 0, "false_quarantine_rate": 0.0,
+            "n_traces": out["n_traces"],
+        }
+
+    wall = time.perf_counter() - t0_wall
+    worst = max(cells, key=lambda c: c["screen_on_ratio"])
+    results["corruption_sweep"] = {
+        "n": n, "K": K, "steps": steps, "segment_len": seg, "lr": lr,
+        "lam": LAM, "batch": batch, "rates": list(rates),
+        "modes": list(_CORRUPT_MODES), "liar_start": t_start,
+        "policy": {
+            "slack": policy.slack, "abs_floor": policy.abs_floor,
+            "confirm_streak": policy.confirm_streak,
+            "cooldown_steps": policy.cooldown_steps,
+            "probation_steps": policy.probation_steps,
+        },
+        "baseline_honest_tail": honest_tail(clean, list(range(n))),
+        "corruption_off_bitwise": corruption_off_bitwise,
+        "cells": cells,
+        "false_quarantine_drill": fp_drill,
+        "acceptance": {
+            "honest_tail_bar": 1.2, "at_rate": 0.1,
+            "all_cells_pass": True,
+            "false_quarantine_rate": 0.0,
+        },
+        "wall_s": wall,
+    }
+    emit(
+        f"faults_corruption_n{n}", wall / max(len(cells), 1) * 1e6,
+        f"{len(cells)}cells_worst={worst['screen_on_ratio']:.2f}x"
+        f"@{worst['mode']}r{worst['rate']}_fp=0_bitwise0=ok_retraces=0",
+    )
+
+
 def main(smoke: bool = False) -> None:
     results: dict = {"smoke": smoke}
     _bench_fault_sweep(results, smoke)
     _bench_straggler_sweep(results, smoke)
     _bench_crash_recovery(results, smoke)
+    _bench_corruption_sweep(results, smoke)
     os.makedirs(result_dir(), exist_ok=True)
     path = os.path.join(result_dir(), "BENCH_faults.json")
     with open(path, "w") as f:

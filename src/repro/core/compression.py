@@ -53,13 +53,17 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .mixing import (
     PermPool,
     ScheduleArrays,
     ShardStaleState,
     StaleBuffer,
+    WireCorruption,
+    _corrupt_own,
     _mix_arrays_flat,
+    _mix_arrays_flat_corrupt,
     _stale_slot,
     mix_arrays_sharded,
     mix_arrays_sharded_stale,
@@ -344,6 +348,7 @@ def ef_mix_schedule_arrays(
     ef: PyTree,
     arrays: ScheduleArrays,
     compressor: Compressor,
+    corrupt: "WireCorruption | None" = None,
 ) -> tuple[PyTree, PyTree]:
     """EF-compressed ``ScheduleArrays`` mixing on stacked parameters.
 
@@ -354,11 +359,15 @@ def ef_mix_schedule_arrays(
     rollout scan -- fixed shape, so swaps stay value changes.
 
     With the identity wire this routes to the plain arrays transport
-    (bitwise) and returns ``ef`` untouched.
+    (bitwise) and returns ``ef`` untouched. ``corrupt`` poisons each
+    sender's COMPRESSED wire view ``c_j`` (the value that actually
+    crosses the network); the node's own fresh ``c_i`` in the CHOCO
+    combine and its EF memory stay clean -- a liar corrupts what it
+    ships, not its local state.
     """
     compressor = _require_wire(compressor)
     if compressor.routes_to_plain:
-        return mix_schedule_arrays(params_stack, arrays), ef
+        return mix_schedule_arrays(params_stack, arrays, corrupt=corrupt), ef
     g = compressor.gamma
     x_leaves, treedef = jax.tree_util.tree_flatten(params_stack)
     e_leaves = jax.tree_util.tree_leaves(ef)
@@ -369,7 +378,11 @@ def ef_mix_schedule_arrays(
         to_send = x + e.astype(x.dtype)
         c = _apply_stacked(compressor, to_send)
         new_es.append((to_send - c).astype(e.dtype))
-        mc = _mix_arrays_flat(c, arrays)
+        mc = (
+            _mix_arrays_flat(c, arrays)
+            if corrupt is None
+            else _mix_arrays_flat_corrupt(c, arrays, corrupt)
+        )
         outs.append(x + mc - c if g == 1.0 else x + g * (mc - c))
     return (
         jax.tree_util.tree_unflatten(treedef, outs),
@@ -384,6 +397,7 @@ def ef_stale_mix_flat(
     arrays: ScheduleArrays,
     delays: jax.Array,
     compressor: Compressor,
+    corrupt: "WireCorruption | None" = None,
 ) -> tuple[jax.Array, jax.Array, StaleBuffer]:
     """EF-compressed bounded-delay mixing on the flat (n, P) convention.
 
@@ -408,14 +422,19 @@ def ef_stale_mix_flat(
     compressor = _require_wire(compressor)
     if compressor.routes_to_plain:
         buffer = stale_push(buffer, flat_half)
-        mixed = mix_schedule_arrays_stale(buffer, arrays, delays)
+        mixed = mix_schedule_arrays_stale(buffer, arrays, delays, corrupt)
         return mixed, ef_flat, buffer
     g = compressor.gamma
     to_send = flat_half + ef_flat.astype(flat_half.dtype)
     c = _apply_stacked(compressor, to_send)
     new_ef = (to_send - c).astype(ef_flat.dtype)
     buffer = stale_push(buffer, c)
-    acc = _mix_arrays_flat(stale_view(buffer, delays), arrays)
+    view = stale_view(buffer, delays)
+    acc = (
+        _mix_arrays_flat(view, arrays)
+        if corrupt is None
+        else _mix_arrays_flat_corrupt(view, arrays, corrupt)
+    )
     mixed = flat_half + acc - c if g == 1.0 else flat_half + g * (acc - c)
     return mixed, new_ef, buffer
 
@@ -451,6 +470,7 @@ def mix_arrays_sharded_ef(
     compressor: Compressor,
     *,
     serialize: bool = True,
+    corrupt: "WireCorruption | None" = None,
 ) -> tuple[PyTree, PyTree]:
     """EF-compressed ``mix_arrays_sharded`` (inside shard_map).
 
@@ -460,11 +480,15 @@ def mix_arrays_sharded_ef(
     :func:`mix_ppermute_pool_ef` op-for-op -- so the two compressed
     transports agree bitwise on the same schedule, exactly like their
     uncompressed twins. Identity wire routes to the plain transport.
+    ``corrupt`` poisons this node's outgoing compressed view (own row
+    restored clean after the gather; local ``c``/EF stay clean).
     """
     compressor = _require_wire(compressor)
     if compressor.routes_to_plain:
         return (
-            mix_arrays_sharded(params, arrays, axis_name, serialize=serialize),
+            mix_arrays_sharded(
+                params, arrays, axis_name, serialize=serialize, corrupt=corrupt
+            ),
             ef,
         )
     step = compressor.gamma
@@ -476,7 +500,10 @@ def mix_arrays_sharded_ef(
         to_send = x32 + e.astype(jnp.float32)
         c = compressor(to_send)
         new_e = to_send - c
-        g = jax.lax.all_gather(c, axis_name)
+        wire = c if corrupt is None else _corrupt_own(c, corrupt, i)
+        g = jax.lax.all_gather(wire, axis_name)
+        if corrupt is not None:
+            g = jax.lax.dynamic_update_index_in_dim(g, c, i, axis=0)
 
         def body(acc, gs):
             gamma, src = gs
@@ -498,17 +525,21 @@ def mix_dense_sharded_ef(
     compressor: Compressor,
     *,
     serialize: bool = True,
+    corrupt: "WireCorruption | None" = None,
 ) -> tuple[PyTree, PyTree]:
     """EF-compressed ``mix_dense_sharded``: CHOCO gossip on any dense W.
 
     ``theta_i + sum_j W_ij c_j - c_i`` with the row contraction over the
     gathered COMPRESSED views. Identity wire routes to the plain
-    transport (bitwise).
+    transport (bitwise). ``corrupt`` poisons this node's outgoing
+    compressed view (own row restored clean after the gather).
     """
     compressor = _require_wire(compressor)
     if compressor.routes_to_plain:
         return (
-            mix_dense_sharded(params, W, axis_name, serialize=serialize),
+            mix_dense_sharded(
+                params, W, axis_name, serialize=serialize, corrupt=corrupt
+            ),
             ef,
         )
     step = compressor.gamma
@@ -520,7 +551,10 @@ def mix_dense_sharded_ef(
         to_send = x32 + e.astype(jnp.float32)
         c = compressor(to_send)
         new_e = to_send - c
-        g = jax.lax.all_gather(c, axis_name)
+        wire = c if corrupt is None else _corrupt_own(c, corrupt, i)
+        g = jax.lax.all_gather(wire, axis_name)
+        if corrupt is not None:
+            g = jax.lax.dynamic_update_index_in_dim(g, c, i, axis=0)
         acc = jnp.tensordot(row, g, axes=([0], [0]))
         out = x32 + acc - c if step == 1.0 else x32 + step * (acc - c)
         return out.astype(x.dtype), new_e.astype(e.dtype)
@@ -535,6 +569,7 @@ def mix_ppermute_pool_ef(
     pool: PermPool,
     axis_name: str,
     compressor: Compressor,
+    corrupt: "WireCorruption | None" = None,
 ) -> tuple[PyTree, PyTree]:
     """EF-compressed staged-pool mixing: the ppermutes ship compressed
     payloads.
@@ -557,7 +592,7 @@ def mix_ppermute_pool_ef(
     """
     compressor = _require_wire(compressor)
     if compressor.routes_to_plain:
-        return mix_ppermute_pool(params, gammas, pool, axis_name), ef
+        return mix_ppermute_pool(params, gammas, pool, axis_name, corrupt), ef
     step = compressor.gamma
     n = pool.n_nodes
     ident = pool.identity
@@ -566,19 +601,28 @@ def mix_ppermute_pool_ef(
             f"gammas must be ({pool.capacity},) to match the pool, "
             f"got {gammas.shape}"
         )
+    i = jax.lax.axis_index(axis_name) if corrupt is not None else None
 
     def leaf(x, e):
         x32 = x.astype(jnp.float32)
         to_send = x32 + e.astype(jnp.float32)
         c = compressor(to_send)
         new_e = to_send - c
+        wire = c if corrupt is None else _corrupt_own(c, corrupt, i)
         acc = jnp.zeros_like(x32)
         for l, perm in enumerate(pool.perms):
             if perm == ident:
                 contrib = c
             else:
-                pairs = [(int(perm[i]), i) for i in range(n)]
-                contrib = jax.lax.ppermute(c, axis_name, pairs)
+                pairs = [(int(perm[q]), q) for q in range(n)]
+                contrib = jax.lax.ppermute(wire, axis_name, pairs)
+                if corrupt is not None:
+                    fixed = np.array([perm[q] == q for q in range(n)])
+                    if fixed.any():
+                        sel = jax.lax.dynamic_index_in_dim(
+                            jnp.asarray(fixed), i, axis=0, keepdims=False
+                        )
+                        contrib = jnp.where(sel, c, contrib)
             acc = acc + gammas[l].astype(jnp.float32) * contrib
         out = x32 + acc - c if step == 1.0 else x32 + step * (acc - c)
         return out.astype(x.dtype), new_e.astype(e.dtype)
@@ -620,6 +664,7 @@ def mix_arrays_sharded_stale_ef(
     compressor: Compressor,
     *,
     serialize: bool = True,
+    corrupt: "WireCorruption | None" = None,
 ) -> tuple[PyTree, PyTree, ShardStaleState]:
     """EF-compressed bounded-delay ``mix_arrays_sharded`` (in shard_map).
 
@@ -628,12 +673,14 @@ def mix_arrays_sharded_stale_ef(
     the delayed views, and the CHOCO combine subtracts the node's own
     fresh ``c``. Identity wire routes to the plain stale transport;
     ``delays == 0`` is bitwise :func:`mix_arrays_sharded_ef`. Returns
-    ``(mixed, new_ef, new_state)``.
+    ``(mixed, new_ef, new_state)``. ``corrupt`` poisons this node's
+    outgoing delayed view (own gathered row restored clean).
     """
     compressor = _require_wire(compressor)
     if compressor.routes_to_plain:
         mixed, state = mix_arrays_sharded_stale(
-            params, state, arrays, delays, axis_name, serialize=serialize
+            params, state, arrays, delays, axis_name, serialize=serialize,
+            corrupt=corrupt,
         )
         return mixed, ef, state
     step = compressor.gamma
@@ -650,7 +697,10 @@ def mix_arrays_sharded_stale_ef(
         if serialize and token is not None:
             ring, _ = jax.lax.optimization_barrier((ring, token))
         d32 = jax.lax.dynamic_index_in_dim(ring, slot, axis=0, keepdims=False)
-        g = jax.lax.all_gather(d32, axis_name)
+        wire = d32 if corrupt is None else _corrupt_own(d32, corrupt, i)
+        g = jax.lax.all_gather(wire, axis_name)
+        if corrupt is not None:
+            g = jax.lax.dynamic_update_index_in_dim(g, d32, i, axis=0)
 
         def body(acc, gs):
             gamma, src = gs
@@ -675,6 +725,7 @@ def mix_ppermute_pool_stale_ef(
     delays: jax.Array,
     axis_name: str,
     compressor: Compressor,
+    corrupt: "WireCorruption | None" = None,
 ) -> tuple[PyTree, PyTree, ShardStaleState]:
     """EF-compressed bounded-delay staged-pool mixing.
 
@@ -683,12 +734,13 @@ def mix_ppermute_pool_stale_ef(
     in-pool swap under compression AND staleness is still a pure value
     change. Identity wire routes to :func:`mix_ppermute_pool_stale`;
     ``delays == 0`` is bitwise :func:`mix_ppermute_pool_ef`. Returns
-    ``(mixed, new_ef, new_state)``.
+    ``(mixed, new_ef, new_state)``. ``corrupt`` poisons the delayed
+    payload each non-identity ppermute ships (fixed points stay clean).
     """
     compressor = _require_wire(compressor)
     if compressor.routes_to_plain:
         mixed, state = mix_ppermute_pool_stale(
-            params, state, gammas, pool, delays, axis_name
+            params, state, gammas, pool, delays, axis_name, corrupt
         )
         return mixed, ef, state
     step = compressor.gamma
@@ -702,18 +754,27 @@ def mix_ppermute_pool_stale_ef(
     x_leaves, treedef, c_tree, new_ef = _ef_stale_prepare(params, ef, compressor)
     state = shard_stale_push(state, c_tree)
     slot = _stale_slot(state, delays, axis_name)
+    i = jax.lax.axis_index(axis_name) if corrupt is not None else None
     c_leaves = jax.tree_util.tree_leaves(c_tree)
     r_leaves = treedef.flatten_up_to(state.rings)
     outs = []
     for x, c, ring in zip(x_leaves, c_leaves, r_leaves):
         d32 = jax.lax.dynamic_index_in_dim(ring, slot, axis=0, keepdims=False)
+        wire = d32 if corrupt is None else _corrupt_own(d32, corrupt, i)
         acc = jnp.zeros_like(d32)
         for l, perm in enumerate(pool.perms):
             if perm == ident:
                 contrib = d32
             else:
-                pairs = [(int(perm[i]), i) for i in range(n)]
-                contrib = jax.lax.ppermute(d32, axis_name, pairs)
+                pairs = [(int(perm[q]), q) for q in range(n)]
+                contrib = jax.lax.ppermute(wire, axis_name, pairs)
+                if corrupt is not None:
+                    fixed = np.array([perm[q] == q for q in range(n)])
+                    if fixed.any():
+                        sel = jax.lax.dynamic_index_in_dim(
+                            jnp.asarray(fixed), i, axis=0, keepdims=False
+                        )
+                        contrib = jnp.where(sel, d32, contrib)
             acc = acc + gammas[l].astype(jnp.float32) * contrib
         x32 = x.astype(jnp.float32)
         out = x32 + acc - c if step == 1.0 else x32 + step * (acc - c)

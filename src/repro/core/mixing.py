@@ -84,6 +84,10 @@ __all__ = [
     "straggler_stream",
     "straggler_pool_stream",
     "degrade_pool_gammas",
+    "WireCorruption",
+    "corrupt_wire",
+    "ScreenStats",
+    "mix_schedule_arrays_screened",
     "ShardStaleState",
     "shard_stale_init",
     "shard_stale_push",
@@ -365,6 +369,7 @@ def mix_schedule_arrays(
     single_buffer: bool = False,
     use_kernel: bool = False,
     block_p: int | None = None,
+    corrupt: "WireCorruption | None" = None,
 ) -> PyTree:
     """Data-plane Birkhoff mixing: ``l_max`` gathers + AXPYs, schedule as
     runtime arrays (the online hot-swap transport).
@@ -376,7 +381,30 @@ def mix_schedule_arrays(
     (implies single_buffer) -- its coefficient/permutation operands are
     ordinary arrays, so the kernel path hot-swaps as freely as the XLA
     one.
+
+    ``corrupt`` (a :class:`WireCorruption`) poisons each sender's
+    outgoing payload at the wire; ``None`` routes to the untouched
+    transport at trace time, so corruption-off arms are trivially
+    bitwise. Self-loops move no bytes and stay clean.
     """
+    if corrupt is not None:
+        if use_kernel:
+            raise ValueError(
+                "corrupt is not supported on the kernel path: corrupt the "
+                "flat wire buffer before the kernel call instead"
+            )
+        if single_buffer:
+            flat, spec = ravel_stack(params_stack, pad_to=block_p)
+            flat = jax.lax.optimization_barrier(flat)
+            return unravel_stack(
+                _mix_arrays_flat_corrupt(flat, arrays, corrupt), spec
+            )
+        return jax.tree_util.tree_map(
+            lambda x: _mix_arrays_flat_corrupt(
+                x.reshape(x.shape[0], -1), arrays, corrupt
+            ).reshape(x.shape),
+            params_stack,
+        )
     if use_kernel:
         from repro.kernels.gossip_mix import ops as gossip_ops
         from repro.kernels.gossip_mix.gossip_schedule import DEFAULT_BLOCK_P
@@ -567,16 +595,25 @@ def stale_view(buffer: StaleBuffer, delays: jax.Array) -> jax.Array:
 
 
 def mix_schedule_arrays_stale(
-    buffer: StaleBuffer, arrays: ScheduleArrays, delays: jax.Array
+    buffer: StaleBuffer,
+    arrays: ScheduleArrays,
+    delays: jax.Array,
+    corrupt: "WireCorruption | None" = None,
 ) -> jax.Array:
     """Bounded-delay data-plane mixing on the flat (n, P) convention.
 
     ``out = sum_l gammas[l] theta_stale[perms[l]]`` where
     ``theta_stale`` is the delayed view of the ring buffer. Accumulation
     order matches :func:`_mix_arrays_flat` op-for-op, so zero delays
-    reproduce the fault-free mixing bitwise.
+    reproduce the fault-free mixing bitwise. ``corrupt`` poisons each
+    sender's delivered payload at the wire (a node corrupt at step t
+    poisons everything it delivers at t, buffered re-sends included;
+    self-loops stay clean); ``None`` is the untouched transport.
     """
-    return _mix_arrays_flat(stale_view(buffer, delays), arrays)
+    view = stale_view(buffer, delays)
+    if corrupt is not None:
+        return _mix_arrays_flat_corrupt(view, arrays, corrupt)
+    return _mix_arrays_flat(view, arrays)
 
 
 # ---------------------------------------------------------------------------
@@ -737,14 +774,6 @@ def degrade_pool_gammas(pool: "PermPool", gammas, offline_mask) -> np.ndarray:
     if not off.any():
         return g.astype(np.float32)
     ident = pool.identity
-    try:
-        id_slot = pool.perms.index(ident)
-    except ValueError:
-        raise ValueError(
-            "degrade_pool_gammas needs an identity slot to absorb the "
-            "dropped mass; stage the pool with headroom "
-            "(PermPool.from_schedule pads with identities)"
-        ) from None
     moved = 0.0
     for l, p in enumerate(pool.perms):
         if p == ident:
@@ -755,7 +784,23 @@ def degrade_pool_gammas(pool: "PermPool", gammas, offline_mask) -> np.ndarray:
         if touches:
             moved += g[l]
             g[l] = 0.0
-    g[id_slot] += moved
+    # the identity slot is only needed when there is mass to absorb: a
+    # pool whose staged atoms all survive (e.g. every offline node was
+    # already a fixed point of every slot) repairs to itself. The moved
+    # mass is ADDED to the identity coefficient, never renormalized --
+    # the total stays exactly the input's, so a node whose every
+    # neighbor slot was zeroed ends up with its full row mass on the
+    # identity atom: row exactly e_i, no empty-mass division anywhere.
+    if moved != 0.0:
+        try:
+            id_slot = pool.perms.index(ident)
+        except ValueError:
+            raise ValueError(
+                "degrade_pool_gammas needs an identity slot to absorb the "
+                "dropped mass; stage the pool with headroom "
+                "(PermPool.from_schedule pads with identities)"
+            ) from None
+        g[id_slot] += moved
     return g.astype(np.float32)
 
 
@@ -800,6 +845,176 @@ def straggler_pool_stream(
                 degrade_pool_gammas(pool, base, late) if late.any() else base
             )
     return jnp.asarray(g_out), jnp.asarray(e_out)
+
+
+# ---------------------------------------------------------------------------
+# Wire corruption and receiver-side screening (Byzantine-ish senders)
+# ---------------------------------------------------------------------------
+#
+# The fault layer above models nodes that DISAPPEAR; the ops below model
+# nodes that LIE. Corruption applies to the SENT payload at the wire --
+# a per-sender multiplicative factor (nan / -1 / scale k) plus a
+# per-sender XOR mask on the f32 bit pattern (bitflip) -- and never to
+# the sender's own local state: self-loops move no bytes, so every
+# transport keeps the self-contribution clean. Both planes are pure
+# value ops on (n,)-vectors that ride a ``lax.scan`` as data, so a node
+# turning corrupt (or recovering) never retraces, exactly like a crash.
+#
+# Screening is receiver-side and split across the trace boundary: the
+# only IN-GRAPH defense is the hard non-finite guard (a NaN payload is
+# substituted by the receiver's own payload -- a row-convex repair, the
+# single survival path before the host confirms a quarantine), while the
+# norm/cosine screens are computed as per-edge STATISTICS (``sq_own``,
+# ``sq_recv``, ``dot``, ``finite``) that come back as scan outputs for
+# the host-side ``repro.faults.quarantine`` controller to threshold
+# against the live heterogeneity probes. Thresholding in-graph would
+# bake a policy constant into the trace; thresholding on the host keeps
+# the screen a control-plane decision, like the topology refreshes.
+
+
+class WireCorruption(NamedTuple):
+    """Per-sender wire corruption for one mixing step (scan data).
+
+    ``mult`` (n,) f32 multiplies the sender's outgoing payload (1.0 =
+    honest, ``nan`` poisons, ``-1`` sign-flips, ``k`` rescales);
+    ``xor`` (n,) int32 is XOR-ed into the f32 bit pattern afterwards
+    (0 = honest; a single exponent-bit flip models memory corruption).
+    Senders with ``mult == 1 and xor == 0`` are delivered BITWISE
+    verbatim -- the corrupted path selects the untouched payload rather
+    than trusting ``x * 1.0`` round-trips.
+    """
+
+    mult: jax.Array  # (n,) float32
+    xor: jax.Array  # (n,) int32
+
+
+def corrupt_wire(wire: jax.Array, corrupt: WireCorruption) -> jax.Array:
+    """Apply per-sender corruption to an (n, P) f32 wire buffer.
+
+    Pure value op: honest rows are selected bitwise-untouched, corrupt
+    rows are ``bitcast(bitcast(x * mult) ^ xor)``. The payload must be
+    f32 (the wire dtype of every transport here; the bitcast plane is
+    only defined against a fixed bit layout).
+    """
+    if wire.dtype != jnp.float32:
+        raise ValueError(
+            f"corrupt_wire needs an f32 wire payload, got {wire.dtype}"
+        )
+    bcast = (wire.shape[0],) + (1,) * (wire.ndim - 1)
+    mult = corrupt.mult.astype(jnp.float32).reshape(bcast)
+    xor = corrupt.xor.astype(jnp.int32).reshape(bcast)
+    bent = jax.lax.bitcast_convert_type(wire * mult, jnp.int32)
+    bent = jax.lax.bitcast_convert_type(bent ^ xor, jnp.float32)
+    # nan != 1.0 is True, so the nan mode lands in the corrupt branch
+    dirty = (mult != jnp.float32(1.0)) | (xor != 0)
+    return jnp.where(dirty, bent, wire)
+
+
+def _corrupt_own(x32: jax.Array, corrupt: "WireCorruption", i: jax.Array) -> jax.Array:
+    """Shard-side twin of :func:`corrupt_wire`: node ``i`` corrupts its
+    OWN outgoing leaf payload (scalar mult/xor picked by axis index)."""
+    m = jax.lax.dynamic_index_in_dim(
+        corrupt.mult.astype(jnp.float32), i, axis=0, keepdims=False
+    )
+    b = jax.lax.dynamic_index_in_dim(
+        corrupt.xor.astype(jnp.int32), i, axis=0, keepdims=False
+    )
+    bent = jax.lax.bitcast_convert_type(x32 * m, jnp.int32)
+    bent = jax.lax.bitcast_convert_type(bent ^ b, jnp.float32)
+    return jnp.where((m != jnp.float32(1.0)) | (b != 0), bent, x32)
+
+
+def _mix_arrays_flat_corrupt(
+    flat: jax.Array, arrays: ScheduleArrays, corrupt: WireCorruption
+) -> jax.Array:
+    """:func:`_mix_arrays_flat` with the non-self contributions routed
+    through the corrupted wire (self-loops move no bytes: a corrupt
+    node's own contribution to itself stays clean)."""
+    if flat.shape[0] != arrays.n_nodes:
+        raise ValueError(
+            f"schedule arrays are for {arrays.n_nodes} nodes but the stacked "
+            f"parameters have leading axis {flat.shape[0]}"
+        )
+    wire = corrupt_wire(flat, corrupt)
+    rows = jnp.arange(flat.shape[0])
+    bcast = (flat.shape[0],) + (1,) * (flat.ndim - 1)
+
+    def body(acc, gp):
+        g, perm = gp
+        recv = jnp.where(
+            (perm == rows).reshape(bcast), flat, jnp.take(wire, perm, axis=0)
+        )
+        return acc + g.astype(flat.dtype) * recv, None
+
+    acc, _ = jax.lax.scan(
+        body, jnp.zeros_like(flat), (arrays.gammas, arrays.perms)
+    )
+    return acc
+
+
+class ScreenStats(NamedTuple):
+    """Per-edge screening statistics from one screened mixing step.
+
+    For atom ``l`` and receiver ``i`` the sender is ``perms[l, i]``;
+    entries where ``perms[l, i] == i`` are self-loops (no wire payload
+    -- the host-side screen skips them). All four planes are cheap
+    reductions of values the mix already touches, so screening rides
+    the scan as outputs instead of a second pass.
+    """
+
+    sq_own: jax.Array  # (n,)        ||own payload||^2 per receiver
+    sq_recv: jax.Array  # (l_max, n)  ||received payload||^2 per edge
+    dot: jax.Array  # (l_max, n)  <received, own> per edge
+    finite: jax.Array  # (l_max, n)  all-finite flag per edge
+
+
+def mix_schedule_arrays_screened(
+    buffer: StaleBuffer,
+    arrays: ScheduleArrays,
+    delays: jax.Array,
+    own: jax.Array,
+    corrupt: WireCorruption | None = None,
+    *,
+    guard: bool = True,
+) -> tuple[jax.Array, ScreenStats]:
+    """Screened bounded-delay mixing: corrupted wire in, stats out.
+
+    The screened twin of :func:`mix_schedule_arrays_stale`: non-self
+    contributions come off the (optionally corrupted) wire, and every
+    edge emits its norm/inner-product/finiteness statistics for the
+    host-side screen. ``own`` is the receiver's reference payload --
+    its fresh half-step, the exact value it pushed this step.
+
+    ``guard=True`` substitutes the receiver's OWN payload for any
+    non-finite contribution (each repaired row stays a convex
+    combination -- the receiver's weight absorbs the poisoned edge's
+    mass -- though W is no longer column-stochastic on that edge until
+    the host quarantine lands, which is why the guard is a detection-
+    window bridge, not the repair). With ``guard=False`` the poison
+    propagates -- the honest screen-off baseline arm. With no
+    corruption and all-finite payloads the mixed output is bitwise
+    :func:`mix_schedule_arrays_stale` (asserted in tests).
+    """
+    view = stale_view(buffer, delays)
+    wire = view if corrupt is None else corrupt_wire(view, corrupt)
+    rows = jnp.arange(view.shape[0])
+    sq_own = jnp.sum(own * own, axis=1)
+
+    def body(acc, gp):
+        g, perm = gp
+        recv = jnp.where(
+            (perm == rows)[:, None], view, jnp.take(wire, perm, axis=0)
+        )
+        ok = jnp.all(jnp.isfinite(recv), axis=1)
+        sq = jnp.sum(recv * recv, axis=1)
+        dt = jnp.sum(recv * own, axis=1)
+        safe = jnp.where(ok[:, None], recv, own) if guard else recv
+        return acc + g.astype(view.dtype) * safe, (sq, dt, ok)
+
+    acc, (sqs, dots, oks) = jax.lax.scan(
+        body, jnp.zeros_like(view), (arrays.gammas, arrays.perms)
+    )
+    return acc, ScreenStats(sq_own=sq_own, sq_recv=sqs, dot=dots, finite=oks)
 
 
 # ---------------------------------------------------------------------------
@@ -898,6 +1113,7 @@ def mix_arrays_sharded_stale(
     axis_name: str,
     *,
     serialize: bool = True,
+    corrupt: "WireCorruption | None" = None,
 ) -> tuple[PyTree, ShardStaleState]:
     """Bounded-delay :func:`mix_arrays_sharded`: all-gather of DELAYED
     payloads, schedule and delays as data.
@@ -908,7 +1124,9 @@ def mix_arrays_sharded_stale(
     transport does -- with ``delays == 0`` the slot read returns the
     value just pushed, so the result is bitwise the fresh mix. Returns
     ``(mixed, new_state)``; the caller threads the ring through its
-    carry (fixed shape: hot swaps stay value changes).
+    carry (fixed shape: hot swaps stay value changes). ``corrupt``
+    poisons this node's outgoing gathered payload (the receiver's own
+    row is restored clean after the gather: self-loops move no bytes).
     """
     state = shard_stale_push(state, params)
     slot = _stale_slot(state, delays, axis_name)
@@ -917,7 +1135,10 @@ def mix_arrays_sharded_stale(
 
     def mix_leaf(x, ring):
         d32 = jax.lax.dynamic_index_in_dim(ring, slot, axis=0, keepdims=False)
-        g = jax.lax.all_gather(d32, axis_name)
+        wire = d32 if corrupt is None else _corrupt_own(d32, corrupt, i)
+        g = jax.lax.all_gather(wire, axis_name)
+        if corrupt is not None:
+            g = jax.lax.dynamic_update_index_in_dim(g, d32, i, axis=0)
 
         def body(acc, gs):
             gamma, src = gs
@@ -940,6 +1161,7 @@ def mix_ppermute_pool_stale(
     pool: "PermPool",
     delays: jax.Array,
     axis_name: str,
+    corrupt: "WireCorruption | None" = None,
 ) -> tuple[PyTree, ShardStaleState]:
     """Bounded-delay :func:`mix_ppermute_pool`: each staged ppermute
     moves the DELAYED payload; gammas and delays are data.
@@ -949,7 +1171,10 @@ def mix_ppermute_pool_stale(
     :func:`stale_view` semantics), non-identity slots ppermute it.
     Accumulation (f32, slot order, zeros init) mirrors the fresh pool
     transport op-for-op, so ``delays == 0`` reproduces it bitwise.
-    Returns ``(mixed, new_state)``.
+    Returns ``(mixed, new_state)``. ``corrupt`` poisons the payload
+    each non-identity ppermute moves; identity slots and the fixed
+    points of staged atoms are self-deliveries (no bytes) and stay
+    clean.
     """
     n = pool.n_nodes
     ident = pool.identity
@@ -960,16 +1185,25 @@ def mix_ppermute_pool_stale(
         )
     state = shard_stale_push(state, params)
     slot = _stale_slot(state, delays, axis_name)
+    i = jax.lax.axis_index(axis_name)
 
     def mix_leaf(x, ring):
         d32 = jax.lax.dynamic_index_in_dim(ring, slot, axis=0, keepdims=False)
+        wire = d32 if corrupt is None else _corrupt_own(d32, corrupt, i)
         acc = jnp.zeros_like(d32)
         for l, perm in enumerate(pool.perms):
             if perm == ident:
                 contrib = d32
             else:
-                pairs = [(int(perm[i]), i) for i in range(n)]
-                contrib = jax.lax.ppermute(d32, axis_name, pairs)
+                pairs = [(int(perm[q]), q) for q in range(n)]
+                contrib = jax.lax.ppermute(wire, axis_name, pairs)
+                if corrupt is not None:
+                    fixed = np.array([perm[q] == q for q in range(n)])
+                    if fixed.any():
+                        sel = jax.lax.dynamic_index_in_dim(
+                            jnp.asarray(fixed), i, axis=0, keepdims=False
+                        )
+                        contrib = jnp.where(sel, d32, contrib)
             acc = acc + gammas[l].astype(jnp.float32) * contrib
         return acc.astype(x.dtype)
 
@@ -1005,7 +1239,12 @@ def _serialized_leaf_map(params: PyTree, mix_leaf, serialize: bool) -> PyTree:
 
 
 def mix_dense_sharded(
-    params: PyTree, W: jax.Array, axis_name: str, *, serialize: bool = True
+    params: PyTree,
+    W: jax.Array,
+    axis_name: str,
+    *,
+    serialize: bool = True,
+    corrupt: "WireCorruption | None" = None,
 ) -> PyTree:
     """Dense mixing *inside* ``shard_map`` with W as data (traced).
 
@@ -1028,19 +1267,30 @@ def mix_dense_sharded(
     unordered behavior (A/B + the memory regression test).
 
     The contraction runs in f32 (same rationale as ``mix_allreduce``).
+    ``corrupt`` poisons this node's outgoing gathered payload (own row
+    restored clean after the gather -- self-loops move no bytes).
     """
     i = jax.lax.axis_index(axis_name)
     row = W[i].astype(jnp.float32)
 
     def mix_leaf(x):
-        g = jax.lax.all_gather(x.astype(jnp.float32), axis_name)
+        x32 = x.astype(jnp.float32)
+        wire = x32 if corrupt is None else _corrupt_own(x32, corrupt, i)
+        g = jax.lax.all_gather(wire, axis_name)
+        if corrupt is not None:
+            g = jax.lax.dynamic_update_index_in_dim(g, x32, i, axis=0)
         return jnp.tensordot(row, g, axes=([0], [0])).astype(x.dtype)
 
     return _serialized_leaf_map(params, mix_leaf, serialize)
 
 
 def mix_arrays_sharded(
-    params: PyTree, arrays: ScheduleArrays, axis_name: str, *, serialize: bool = True
+    params: PyTree,
+    arrays: ScheduleArrays,
+    axis_name: str,
+    *,
+    serialize: bool = True,
+    corrupt: "WireCorruption | None" = None,
 ) -> PyTree:
     """``ScheduleArrays`` mixing *inside* ``shard_map`` via all-gather.
 
@@ -1056,13 +1306,20 @@ def mix_arrays_sharded(
     CPU mesh in tests/test_distributed.py) -- the property that lets a
     trainer fall back from the staged pool to all-gather mid-run
     without perturbing the trajectory.
+
+    ``corrupt`` poisons this node's outgoing gathered payload; the
+    receiver's own row is restored clean after the gather (self-loops
+    move no bytes).
     """
     i = jax.lax.axis_index(axis_name)
     srcs = arrays.perms[:, i]  # (l_max,) rows this node receives, per atom
 
     def mix_leaf(x):
         x32 = x.astype(jnp.float32)
-        g = jax.lax.all_gather(x32, axis_name)
+        wire = x32 if corrupt is None else _corrupt_own(x32, corrupt, i)
+        g = jax.lax.all_gather(wire, axis_name)
+        if corrupt is not None:
+            g = jax.lax.dynamic_update_index_in_dim(g, x32, i, axis=0)
 
         def body(acc, gs):
             gamma, src = gs
@@ -1253,7 +1510,11 @@ class PoolSwap:
 
 
 def mix_ppermute_pool(
-    params: PyTree, gammas: jax.Array, pool: PermPool, axis_name: str
+    params: PyTree,
+    gammas: jax.Array,
+    pool: PermPool,
+    axis_name: str,
+    corrupt: "WireCorruption | None" = None,
 ) -> PyTree:
     """Staged-pool sharded mixing: K compiled ppermutes, gammas as data.
 
@@ -1273,6 +1534,10 @@ def mix_ppermute_pool(
     The accumulation (f32, slot order, zeros init) mirrors
     :func:`mix_arrays_sharded` op-for-op so the two transports agree
     bitwise on the same schedule.
+
+    ``corrupt`` poisons the payload each non-identity ppermute moves;
+    identity slots and the fixed points of staged atoms are
+    self-deliveries (no bytes) and stay clean.
     """
     n = pool.n_nodes
     ident = pool.identity
@@ -1281,16 +1546,25 @@ def mix_ppermute_pool(
             f"gammas must be ({pool.capacity},) to match the pool, "
             f"got {gammas.shape}"
         )
+    i = jax.lax.axis_index(axis_name) if corrupt is not None else None
 
     def mix_leaf(x):
         x32 = x.astype(jnp.float32)
+        wire = x32 if corrupt is None else _corrupt_own(x32, corrupt, i)
         acc = jnp.zeros_like(x32)
         for l, perm in enumerate(pool.perms):
             if perm == ident:
                 contrib = x32
             else:
-                pairs = [(int(perm[i]), i) for i in range(n)]
-                contrib = jax.lax.ppermute(x32, axis_name, pairs)
+                pairs = [(int(perm[q]), q) for q in range(n)]
+                contrib = jax.lax.ppermute(wire, axis_name, pairs)
+                if corrupt is not None:
+                    fixed = np.array([perm[q] == q for q in range(n)])
+                    if fixed.any():
+                        sel = jax.lax.dynamic_index_in_dim(
+                            jnp.asarray(fixed), i, axis=0, keepdims=False
+                        )
+                        contrib = jnp.where(sel, x32, contrib)
             acc = acc + gammas[l].astype(jnp.float32) * contrib
         return acc.astype(x.dtype)
 

@@ -11,23 +11,33 @@ makes each failure a first-class, seeded, reproducible scenario:
   across processes and across checkpoint resumes.
 * :class:`FlakyRefresher` -- wraps a ``TopologyRefresher`` so its
   solves raise or hang per the plan (the controller-hardening drill).
+* :class:`ScreenPolicy` / :class:`QuarantineController` -- the defense
+  against nodes that LIE rather than disappear: receiver-side screens
+  thresholded from the run's own heterogeneity probes, streak-confirmed
+  quarantine with a doubly-stochastic repair, and probation-based
+  self-healing re-admission.
 * :func:`run_faulty_mean_estimation` -- the mean-estimation simulator
   under faults: degraded doubly-stochastic mixing
   (:func:`repro.core.mixing.degrade_schedule`), stale-theta mixing via
-  the staleness ring buffer, and crash-recovery via
-  ``repro.train.checkpoints`` -- all zero-retrace.
+  the staleness ring buffer, wire corruption + screening, and
+  crash-recovery via ``repro.train.checkpoints`` -- all zero-retrace.
 
-Layering: ``faults`` imports core + data + train (for checkpoints);
-nothing imports ``faults`` back -- the production modules only grow
-fault-*tolerant* paths, never fault-*aware* ones.
+Layering: ``faults`` imports core + data + train (for checkpoints) +
+online (for the estimator-absence plumbing); nothing imports ``faults``
+back -- the production modules only grow fault-*tolerant* paths, never
+fault-*aware* ones.
 """
 
 from .plan import FaultInjector, FaultPlan, FlakyRefresher
+from .quarantine import QuarantineController, ScreenPolicy, false_quarantines
 from .runner import run_faulty_mean_estimation
 
 __all__ = [
     "FaultPlan",
     "FaultInjector",
     "FlakyRefresher",
+    "ScreenPolicy",
+    "QuarantineController",
+    "false_quarantines",
     "run_faulty_mean_estimation",
 ]

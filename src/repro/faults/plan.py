@@ -30,6 +30,43 @@ _STREAM_ALIVE = 1
 _STREAM_DELAYS = 2
 _STREAM_EDGES = 3
 _STREAM_SOLVES = 4
+_STREAM_CORRUPT = 5
+
+# bitflip corruption draws one exponent bit in [24, 28): flipping it
+# rescales the payload by a large-but-FINITE power of two (a low
+# mantissa flip would be indistinguishable from honest noise, bit 30
+# overflows straight to inf -- which the nan mode already covers)
+_BITFLIP_LO, _BITFLIP_HI = 24, 28
+
+
+def _parse_corrupt_mode(mode: str) -> tuple[float | None, bool]:
+    """``mode`` -> ``(mult, is_bitflip)``.
+
+    ``mult`` is the multiplicative plane value (``nan`` / ``-1`` /
+    ``k``); ``None`` with ``is_bitflip=True`` means the XOR plane draws
+    an exponent bit instead.
+    """
+    if mode == "nan":
+        return float("nan"), False
+    if mode == "sign_flip":
+        return -1.0, False
+    if mode == "bitflip":
+        return None, True
+    if mode.startswith("scale:"):
+        try:
+            k = float(mode[len("scale:"):])
+        except ValueError:
+            raise ValueError(
+                f"unknown corruption mode {mode!r}: the scale factor in "
+                "'scale:<k>' must be a number"
+            ) from None
+        if not np.isfinite(k):
+            raise ValueError(f"scale factor must be finite, got {mode!r}")
+        return k, False
+    raise ValueError(
+        f"unknown corruption mode {mode!r}: expected 'nan', 'sign_flip', "
+        "'bitflip', or 'scale:<k>'"
+    )
 
 
 @dataclasses.dataclass
@@ -54,12 +91,27 @@ class FaultPlan:
       solve_failure_rate / solve_hang_rate: per-refresh probabilities
         that the k-th topology solve raises / hangs (consumed by
         :class:`FlakyRefresher`).
+      corrupt_rate: per-node per-step probability that an honest node
+        turns CORRUPT (starts lying on the wire -- start of a
+        corruption window).
+      mean_corruption: expected corruption-window length in steps; a
+        corrupt node recovers each step with probability
+        ``1 / mean_corruption`` (geometric windows, like outages --
+        finite windows are what make self-healing re-admission a
+        testable event rather than a hypothetical).
+      corrupt_modes: the palette a corruption window draws its mode
+        from (uniformly, once per window): ``"nan"``, ``"sign_flip"``,
+        ``"scale:<k>"``, ``"bitflip"``.
 
     Derived (precomputed, deterministic):
       alive: (steps, n) bool -- the crash/rejoin Markov trace.
       delays: (steps, n) int32 in [0, tau_max] -- the straggler trace
         (crashed nodes carry delay 0; their transfers are cut by the
         alive mask, not by staleness).
+      corrupt_mult / corrupt_xor: (steps, n) f32 / int32 -- the wire
+        corruption trace in the two planes
+        :class:`repro.core.mixing.WireCorruption` consumes (1.0 / 0 =
+        honest; dead nodes are forced honest -- they send nothing).
     """
 
     n_nodes: int
@@ -72,24 +124,40 @@ class FaultPlan:
     edge_drop_rate: float = 0.0
     solve_failure_rate: float = 0.0
     solve_hang_rate: float = 0.0
+    corrupt_rate: float = 0.0
+    mean_corruption: float = 8.0
+    corrupt_modes: tuple = ("nan", "sign_flip", "scale:8", "bitflip")
     alive: np.ndarray = dataclasses.field(init=False, repr=False)
     delays: np.ndarray = dataclasses.field(init=False, repr=False)
+    corrupt_mult: np.ndarray = dataclasses.field(init=False, repr=False)
+    corrupt_xor: np.ndarray = dataclasses.field(init=False, repr=False)
 
     def __post_init__(self) -> None:
         if self.n_nodes < 1 or self.steps < 0:
             raise ValueError(f"bad n_nodes={self.n_nodes} / steps={self.steps}")
-        for name in ("crash_rate", "straggler_rate", "edge_drop_rate"):
+        for name in ("crash_rate", "straggler_rate", "edge_drop_rate",
+                     "corrupt_rate"):
             v = getattr(self, name)
             if not 0.0 <= v <= 1.0:
                 raise ValueError(f"{name} must be in [0, 1], got {v}")
         if self.mean_outage < 1.0:
             raise ValueError(f"mean_outage must be >= 1, got {self.mean_outage}")
+        if self.mean_corruption < 1.0:
+            raise ValueError(
+                f"mean_corruption must be >= 1, got {self.mean_corruption}"
+            )
         if self.tau_max < 0:
             raise ValueError(f"tau_max must be >= 0, got {self.tau_max}")
         if self.solve_failure_rate + self.solve_hang_rate > 1.0:
             raise ValueError("solve_failure_rate + solve_hang_rate must be <= 1")
+        self.corrupt_modes = tuple(self.corrupt_modes)
+        if not self.corrupt_modes:
+            raise ValueError("corrupt_modes must not be empty")
+        for mode in self.corrupt_modes:
+            _parse_corrupt_mode(mode)  # validates
         self.alive = self._gen_alive()
         self.delays = self._gen_delays()
+        self.corrupt_mult, self.corrupt_xor = self._gen_corruption()
 
     # -- trace generation ---------------------------------------------------
 
@@ -131,6 +199,61 @@ class FaultPlan:
         # transfers are cut by schedule repair), not staleness
         delays[~self.alive] = 0
         return delays
+
+    def _gen_corruption(self) -> tuple[np.ndarray, np.ndarray]:
+        n, T = self.n_nodes, self.steps
+        mult = np.ones((T, n), dtype=np.float32)
+        xor = np.zeros((T, n), dtype=np.int32)
+        if self.corrupt_rate == 0.0 or T == 0:
+            return mult, xor
+        rng = np.random.default_rng([self.seed, _STREAM_CORRUPT])
+        recover_p = 1.0 / self.mean_corruption
+        # per-node window state: honest (mult 1 / xor 0) or one drawn
+        # mode held for the whole window -- a corrupted node lies the
+        # same WAY until it recovers, so streak-based confirmation sees
+        # a consistent signature
+        cur_mult = np.ones(n, dtype=np.float32)
+        cur_xor = np.zeros(n, dtype=np.int32)
+        corrupt = np.zeros(n, dtype=bool)
+        for t in range(T):
+            u = rng.random(n)
+            start = ~corrupt & (u < self.corrupt_rate)
+            stop = corrupt & (u < recover_p)
+            for i in np.flatnonzero(start):
+                mode = self.corrupt_modes[
+                    int(rng.integers(len(self.corrupt_modes)))
+                ]
+                m, is_bitflip = _parse_corrupt_mode(mode)
+                if is_bitflip:
+                    cur_mult[i] = 1.0
+                    cur_xor[i] = np.int32(1) << np.int32(
+                        rng.integers(_BITFLIP_LO, _BITFLIP_HI)
+                    )
+                else:
+                    cur_mult[i] = np.float32(m)
+                    cur_xor[i] = 0
+            corrupt = (corrupt | start) & ~stop
+            cur_mult[~corrupt] = 1.0
+            cur_xor[~corrupt] = 0
+            # dead nodes send nothing: force their wire planes honest so
+            # the corruption trace never claims bytes that never moved
+            row_ok = corrupt & self.alive[t]
+            mult[t] = np.where(row_ok, cur_mult, np.float32(1.0))
+            xor[t] = np.where(row_ok, cur_xor, 0)
+        return mult, xor
+
+    @property
+    def has_corruption(self) -> bool:
+        """True iff any (node, step) actually lies on the wire.
+
+        Checked on the DERIVED arrays, not the config: a scripted plan
+        (arrays edited in place, like :meth:`from_node_churn` does for
+        ``alive``) still reports -- and fingerprints -- its corruption.
+        """
+        return bool(
+            (self.corrupt_mult != np.float32(1.0)).any()
+            or (self.corrupt_xor != 0).any()
+        )
 
     @property
     def ring_depth(self) -> int:
@@ -237,6 +360,43 @@ class FaultPlan:
         on_time = delivered - deferred
         return on_time / total, deferred / total, (total - delivered) / total
 
+    def quarantined_frac(
+        self,
+        t: int,
+        quarantined: np.ndarray,
+        deadline: int | None = None,
+        mode: str = "wait",
+    ) -> float:
+        """Fraction of step ``t``'s n(n-1) directed transfers that were
+        DELIVERED but touch a quarantined endpoint.
+
+        Quarantine isolation is bidirectional (the repaired W pins the
+        node to ``e_i`` symmetrically), so a transfer is quarantined iff
+        it would otherwise deliver AND either endpoint is quarantined.
+        Always a subset of ``delivered`` = ``on_time + deferred`` from
+        :meth:`transfer_fracs` -- the meter's ``quarantined_bytes``
+        honesty invariant.
+        """
+        if mode not in ("wait", "degrade"):
+            raise ValueError(f"mode must be 'wait' or 'degrade', got {mode!r}")
+        n = self.n_nodes
+        q = np.asarray(quarantined, bool)
+        if q.shape != (n,):
+            raise ValueError(f"quarantined must be ({n},), got {q.shape}")
+        if n < 2 or not q.any():
+            return 0.0
+        a = np.asarray(self.alive[t], bool).copy()
+        d = np.asarray(self.delays[t])
+        if mode == "degrade" and deadline is not None:
+            a &= ~(d > deadline)
+        ok = np.outer(a, a)
+        np.fill_diagonal(ok, False)
+        edges = self.dropped_edges(t)
+        if edges.size:
+            ok[edges[:, 0], edges[:, 1]] = False
+        touched = q[:, None] | q[None, :]
+        return float((ok & touched).sum()) / (n * (n - 1))
+
     def fingerprint(self) -> str:
         """sha256 over the full derived trace (the cross-process
         determinism witness: two processes with the same config must
@@ -252,6 +412,14 @@ class FaultPlan:
             h.update(self.dropped_edges(t).tobytes())
         for k in range(self.steps):
             h.update(self.solve_fault(k).encode())
+        # corruption joins the hash ONLY when the derived trace actually
+        # lies somewhere: plans that don't use it keep their pre-existing
+        # fingerprints byte-for-byte (pinned by a regression test)
+        if self.has_corruption:
+            h.update(repr((self.corrupt_rate, self.mean_corruption,
+                           self.corrupt_modes)).encode())
+            h.update(self.corrupt_mult.tobytes())
+            h.update(self.corrupt_xor.tobytes())
         return h.hexdigest()
 
     @classmethod
@@ -284,6 +452,12 @@ class FaultInjector:
     effective (clamped / zeroed) delays. ``policy=None`` keeps the
     PR 6 behavior: repair on crashes/drops only, raw delays passed
     through.
+
+    ``set_quarantine`` folds a host-decided quarantine mask into the
+    SAME single repair call (``alive_eff = alive & ~quarantined``): a
+    quarantined node is isolated to ``e_i`` symmetrically, so W stays
+    exactly doubly stochastic on the trusted support with zero extra
+    repair passes -- and zero retraces, since the swap is pure values.
     """
 
     def __init__(self, plan: FaultPlan, base: ScheduleArrays, policy=None,
@@ -298,6 +472,22 @@ class FaultInjector:
         # a repro.obs.Tracer (duck-typed; this module stays importable
         # without obs loaded) -- stream() records "faults.stream" spans
         self.tracer = tracer
+        self.quarantined = np.zeros(plan.n_nodes, dtype=bool)
+
+    def set_quarantine(self, mask: np.ndarray) -> None:
+        """Replace the quarantine mask (applies from the next streamed
+        step on -- the controller calls this at segment boundaries)."""
+        m = np.asarray(mask, bool)
+        if m.shape != (self.plan.n_nodes,):
+            raise ValueError(
+                f"mask must be ({self.plan.n_nodes},), got {m.shape}"
+            )
+        self.quarantined = m.copy()
+
+    def _alive_eff(self, t: int) -> np.ndarray:
+        if not self.quarantined.any():
+            return self.plan.alive[t]
+        return self.plan.alive[t] & ~self.quarantined
 
     def rebind(self, base: ScheduleArrays) -> None:
         if base.n_nodes != self.plan.n_nodes or base.l_max != self.base.l_max:
@@ -311,7 +501,7 @@ class FaultInjector:
     def arrays_at(self, t: int) -> ScheduleArrays:
         """Degraded schedule for step ``t`` (host-side value change)."""
         return degrade_schedule(
-            self.base, self.plan.alive[t], self.plan.dropped_edges(t)
+            self.base, self._alive_eff(t), self.plan.dropped_edges(t)
         )
 
     def delays_at(self, t: int) -> np.ndarray:
@@ -340,12 +530,26 @@ class FaultInjector:
                 arrays_t, delays[j] = self.policy.apply(
                     self.base,
                     self.plan.delays[t],
-                    alive_mask=self.plan.alive[t],
+                    alive_mask=self._alive_eff(t),
                     dropped_edges=self.plan.dropped_edges(t),
                 )
             gammas[j] = np.asarray(arrays_t.gammas)
             perms[j] = np.asarray(arrays_t.perms)
         return gammas, perms, delays
+
+    def corrupt_stream(self, t0: int, k: int) -> tuple[np.ndarray, np.ndarray]:
+        """Wire-corruption planes for steps [t0, t0 + k), stacked for a
+        ``lax.scan``: ``(mult (k, n) f32, xor (k, n) int32)``. Slices of
+        the precomputed trace -- same fixed-shape/zero-retrace contract
+        as :meth:`stream`."""
+        if not 0 <= t0 <= t0 + k <= self.plan.steps:
+            raise ValueError(
+                f"window [{t0}, {t0 + k}) outside [0, {self.plan.steps})"
+            )
+        return (
+            np.ascontiguousarray(self.plan.corrupt_mult[t0 : t0 + k]),
+            np.ascontiguousarray(self.plan.corrupt_xor[t0 : t0 + k]),
+        )
 
 
 class FlakyRefresher:

@@ -35,6 +35,8 @@ import numpy as np
 from repro.core.mixing import (
     ScheduleArrays,
     StragglerPolicy,
+    WireCorruption,
+    mix_schedule_arrays_screened,
     mix_schedule_arrays_stale,
     stale_buffer_init,
     stale_push,
@@ -66,6 +68,7 @@ def run_faulty_mean_estimation(
     resume: bool = False,
     stop_after_segments: int | None = None,
     staleness: StragglerPolicy | None = None,
+    quarantine=None,
     tracer: "Tracer | None" = None,
     retrace_guard=None,
 ) -> dict:
@@ -100,6 +103,16 @@ def run_faulty_mean_estimation(
         POLICY's ``ring_depth`` and the meter splits delivered bytes
         into on-time vs deferred (``comm["deferred_bytes"]``). ``None``
         keeps the PR 6 behavior: raw delays, ring sized by the plan.
+      quarantine: a :class:`repro.faults.quarantine.QuarantineController`
+        -- enables the screened transport (non-finite guard in-graph,
+        norm/deviation screens host-side), folds the controller's mask
+        into the injector's schedule repair at every segment boundary,
+        and meters ``quarantined_bytes``. Routing is decided at TRACE
+        time: with ``quarantine=None`` and a corruption-free plan the
+        original unscreened scan body runs, so corruption-off arms are
+        bitwise-identical to prior releases. A corrupting plan with
+        ``quarantine=None`` runs the screened transport with the guard
+        OFF -- the honest screen-off divergence baseline.
       tracer: a ``repro.obs.Tracer`` -- records ``sim.segment`` spans
         per rollout segment and ``faults.stream`` spans for the
         host-side fault resolution (via the injector).
@@ -143,6 +156,11 @@ def run_faulty_mean_estimation(
     lr = float(lr)
 
     n_traces = 0
+    # trace-time routing: the screened body only exists when the plan
+    # corrupts or a quarantine controller screens -- a corruption-off
+    # run compiles the EXACT prior scan, so its trajectory is bitwise
+    screened = plan.has_corruption or quarantine is not None
+    guard = quarantine is not None
 
     def roll_impl(carry, xs):
         nonlocal n_traces
@@ -164,7 +182,44 @@ def run_faulty_mean_estimation(
 
         return jax.lax.scan(step, carry, xs)
 
-    roll = jax.jit(roll_impl)
+    def roll_screened_impl(carry, xs):
+        nonlocal n_traces
+        n_traces += 1
+        if retrace_guard is not None:
+            retrace_guard.record("faults.roll")
+
+        def step(c, x):
+            th, buf = c
+            z, g_t, p_t, d_t, m_t, x_t = x
+            grads = 2.0 * (th - z.mean(axis=1, keepdims=True))
+            half = th - lr * grads
+            buf = stale_push(buf, half)
+            th, stats = mix_schedule_arrays_screened(
+                buf,
+                ScheduleArrays(gammas=g_t, perms=p_t),
+                d_t,
+                half,
+                corrupt=WireCorruption(mult=m_t, xor=x_t),
+                guard=guard,
+            )
+            err = jnp.square(th[:, 0] - theta_star)
+            # live probes the host-side screen derives its honest-
+            # deviation allowance from (max over nodes, not mean: the
+            # zero-false-positive bound is a triangle inequality
+            # against the worst honest node)
+            hbar = jnp.mean(half, axis=0, keepdims=True)
+            cons = jnp.max(jnp.sum(jnp.square(half - hbar), axis=1))
+            gbar = jnp.mean(grads, axis=0, keepdims=True)
+            gdev = jnp.max(jnp.sum(jnp.square(grads - gbar), axis=1))
+            gbar_sq = jnp.sum(jnp.square(gbar))
+            return (th, buf), (
+                jnp.mean(err), jnp.max(err), jnp.min(err), err,
+                stats, cons, gdev, gbar_sq,
+            )
+
+        return jax.lax.scan(step, carry, xs)
+
+    roll = jax.jit(roll_screened_impl if screened else roll_impl)
 
     t0 = 0
     resumed_from = None
@@ -208,6 +263,7 @@ def run_faulty_mean_estimation(
         "allgather", n_nodes=n, p_total=1,
     ))
     mse_l, mx_l, mn_l = [], [], []
+    nodes_l: list[np.ndarray] = []
     swaps: list[int] = []
     stopped_at = None
     seg_idx = 0
@@ -215,16 +271,32 @@ def run_faulty_mean_estimation(
     while t0 < steps:
         k = min(seg, steps - t0)
         gammas_k, perms_k, delays_k = injector.stream(t0, k)
+        # the mask ACTIVE during this segment (transitions from ingest
+        # below only land on the next one) -- also the honest basis for
+        # this segment's quarantined-byte fate
+        qmask = injector.quarantined.copy()
         with tracer.span("sim.segment", t0=t0, k=k):
-            carry, (e_mean, e_max, e_min) = roll(
-                carry,
-                (zs[t0 : t0 + k], jnp.asarray(gammas_k), jnp.asarray(perms_k),
-                 jnp.asarray(delays_k)),
-            )
+            if screened:
+                mult_k, xor_k = injector.corrupt_stream(t0, k)
+                carry, (e_mean, e_max, e_min, e_nodes, stats, cons, gdev,
+                        gbars) = roll(
+                    carry,
+                    (zs[t0 : t0 + k], jnp.asarray(gammas_k),
+                     jnp.asarray(perms_k), jnp.asarray(delays_k),
+                     jnp.asarray(mult_k), jnp.asarray(xor_k)),
+                )
+            else:
+                carry, (e_mean, e_max, e_min) = roll(
+                    carry,
+                    (zs[t0 : t0 + k], jnp.asarray(gammas_k),
+                     jnp.asarray(perms_k), jnp.asarray(delays_k)),
+                )
             jax.block_until_ready(e_mean)
         mse_l.append(np.asarray(e_mean))
         mx_l.append(np.asarray(e_max))
         mn_l.append(np.asarray(e_min))
+        if screened:
+            nodes_l.append(np.asarray(e_nodes))
         if staleness is not None:
             fates = [
                 plan.transfer_fracs(
@@ -234,14 +306,32 @@ def run_faulty_mean_estimation(
             ]
             on_time = float(np.mean([f[0] for f in fates]))
             deferred = float(np.mean([f[1] for f in fates]))
+            q_frac = float(np.mean([
+                plan.quarantined_frac(
+                    t, qmask, deadline=staleness.tau_max, mode=staleness.mode
+                )
+                for t in range(t0, t0 + k)
+            ])) if qmask.any() else 0.0
             meter.tick(
-                k, delivered_frac=on_time + deferred, deferred_frac=deferred
+                k, delivered_frac=on_time + deferred, deferred_frac=deferred,
+                quarantined_frac=q_frac,
             )
         else:
             frac = float(
                 np.mean([plan.delivered_frac(t) for t in range(t0, t0 + k)])
             )
-            meter.tick(k, delivered_frac=frac)
+            q_frac = float(np.mean([
+                plan.quarantined_frac(t, qmask) for t in range(t0, t0 + k)
+            ])) if qmask.any() else 0.0
+            meter.tick(k, delivered_frac=frac, quarantined_frac=q_frac)
+        if quarantine is not None:
+            new_mask = quarantine.ingest(
+                t0, stats, gammas_k, perms_k,
+                {"consensus_sq": np.asarray(cons),
+                 "gdev_sq": np.asarray(gdev),
+                 "gbar_sq": np.asarray(gbars)},
+            )
+            injector.set_quarantine(new_mask)
         t0 += k
         seg_idx += 1
         theta, buffer = carry
@@ -272,4 +362,10 @@ def run_faulty_mean_estimation(
         "resumed_from": resumed_from,
         "stopped_at": stopped_at,
         "alive_frac": plan.alive_frac(),
+        "quarantine": None if quarantine is None else quarantine.summary(),
+        # per-node (steps, n) error trace, screened path only: the bench
+        # separates honest-node tail loss from the quarantined nodes'
+        # solo-SGD error (the Byzantine-robust convention -- a liar's
+        # own loss is not the defense's responsibility)
+        "sq_error_nodes": np.concatenate(nodes_l) if nodes_l else None,
     }

@@ -140,6 +140,7 @@ class RunReport:
         self._health: dict[str, list] = {}
         self._spans: dict | None = None
         self._retraces: dict | None = None
+        self._quarantine: dict | None = None
 
     # -- ingestion (each accepts the repo's native object OR plain data) ----
 
@@ -177,10 +178,29 @@ class RunReport:
         self._retraces = guard.snapshot()
         return self
 
+    def add_quarantine(self, summary: dict) -> "RunReport":
+        """A ``QuarantineController.summary()`` dict (or plain data).
+
+        Stored as its own versioned block: the section is OPTIONAL in
+        the ``repro.run_report/v1`` document (absent = the run had no
+        corruption defense -- every pre-existing report stays valid),
+        and when present it carries its own ``version`` tag so the
+        block can evolve without bumping the whole report schema.
+        """
+        s = _scrub(dict(summary))
+        self._quarantine = {
+            "version": 1,
+            "n_quarantines": int(s.get("n_quarantines", 0)),
+            "n_readmissions": int(s.get("n_readmissions", 0)),
+            "quarantined_now": list(s.get("quarantined_now", [])),
+            "events": list(s.get("events", [])),
+        }
+        return self
+
     # -- emission -----------------------------------------------------------
 
     def to_dict(self) -> dict:
-        return {
+        doc = {
             "schema": REPORT_SCHEMA,
             "name": self.name,
             "meta": self.meta,
@@ -191,6 +211,11 @@ class RunReport:
             "spans": self._spans,
             "retraces": self._retraces,
         }
+        # optional block: only emitted when a defense actually ran, so
+        # documents round-trip byte-compatibly with pre-quarantine readers
+        if self._quarantine is not None:
+            doc["quarantine"] = self._quarantine
+        return doc
 
     def to_json(self, indent: int = 2) -> str:
         return json.dumps(self.to_dict(), indent=indent, allow_nan=False)
@@ -225,6 +250,8 @@ class RunReport:
                 f"| dropped | {c.get('dropped_bytes', 0)} |",
                 f"| deferred (late, subset of delivered) | "
                 f"{c.get('deferred_bytes', 0)} |",
+                f"| quarantined (isolated, subset of delivered) | "
+                f"{c.get('quarantined_bytes', 0)} |",
                 f"| retransmitted | {c.get('retransmit_bytes', 0)} |",
                 "",
                 f"{c.get('steps', 0)} steps at {c.get('per_step_bytes', 0)} "
@@ -254,6 +281,16 @@ class RunReport:
                     f"| `{k}` | {by[k]['count']} | {by[k]['total_s']:.4f} |"
                 )
             lines.append("")
+        if self._quarantine is not None:
+            q = self._quarantine
+            lines += [
+                "## Quarantine",
+                f"- quarantines: {q['n_quarantines']}  |  re-admissions: "
+                f"{q['n_readmissions']}  |  isolated at end: "
+                f"{q['quarantined_now'] or 'none'}",
+                f"- {len(q['events'])} lifecycle events",
+                "",
+            ]
         if self._events:
             lines.append("## Events")
             for kind in sorted(self._events):
@@ -327,6 +364,18 @@ def validate_report(doc: dict) -> None:
                 "report.comm: deferred_bytes exceeds total_bytes (deferred "
                 "is a subset of delivered)"
             )
+        # optional fate -- absent in pre-quarantine reports
+        qb = comm.get("quarantined_bytes")
+        if qb is not None:
+            if not isinstance(qb, int) or qb < 0:
+                raise ValueError(
+                    "report.comm['quarantined_bytes'] must be a non-neg int"
+                )
+            if qb > comm["total_bytes"]:
+                raise ValueError(
+                    "report.comm: quarantined_bytes exceeds total_bytes "
+                    "(quarantined is a subset of delivered)"
+                )
     spans = doc.get("spans")
     if spans is not None:
         if not isinstance(spans.get("by_name"), dict):
@@ -352,6 +401,28 @@ def validate_report(doc: dict) -> None:
         )
         if rt.get("excess") != excess:
             raise ValueError("report.retraces.excess inconsistent")
+    # OPTIONAL versioned block: absent in every pre-quarantine report
+    # (PR 9 documents validate unchanged); when present, checked fully
+    q = doc.get("quarantine")
+    if q is not None:
+        if not isinstance(q, dict):
+            raise ValueError("report.quarantine must be a dict")
+        if not isinstance(q.get("version"), int) or q["version"] < 1:
+            raise ValueError("report.quarantine.version must be an int >= 1")
+        for k in ("n_quarantines", "n_readmissions"):
+            if not isinstance(q.get(k), int) or q[k] < 0:
+                raise ValueError(f"report.quarantine[{k!r}] must be a non-neg int")
+        if not isinstance(q.get("events"), list):
+            raise ValueError("report.quarantine.events must be a list")
+        for ev in q["events"]:
+            if not isinstance(ev, dict) or "t" not in ev or "node" not in ev:
+                raise ValueError(
+                    "report.quarantine.events entries need 't' and 'node'"
+                )
+            if ev.get("event") not in ("quarantine", "probation", "readmitted"):
+                raise ValueError(
+                    f"report.quarantine.events: unknown event {ev.get('event')!r}"
+                )
 
 
 def load_report(path: str) -> dict:

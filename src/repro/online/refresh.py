@@ -364,6 +364,7 @@ class OnlineTopologyController:
         self._executor: concurrent.futures.ThreadPoolExecutor | None = None
         self._pending: tuple[concurrent.futures.Future, dict] | None = None
         self._manual_request = False
+        self._manual_reason: str | None = None
         self._last_attempts = 0
 
     def observe(self, labels: np.ndarray) -> None:
@@ -376,10 +377,14 @@ class OnlineTopologyController:
             self._W, self.estimator.Pi_hat, self.proxy_B, self.proxy_sigma2
         )
 
-    def request_refresh(self) -> None:
+    def request_refresh(self, reason: str | None = None) -> None:
         """Force a refresh at the next ``on_segment`` (scripted drills /
-        external schedulers), bypassing the detector."""
+        external schedulers, quarantine membership changes), bypassing
+        the detector. ``reason`` is recorded on the trigger event, so
+        the event log says WHY a refresh happened off-detector."""
         self._manual_request = True
+        if reason is not None:
+            self._manual_reason = str(reason)
 
     @property
     def refresh_pending(self) -> bool:
@@ -407,9 +412,13 @@ class OnlineTopologyController:
                 return None
             return self._collect(t, blocked_s=0.0)
         value = self.proxy()
-        triggered = self.detector.update(value) or self._manual_request
+        manual = self._manual_request
+        triggered = self.detector.update(value) or manual
         self._manual_request = False
+        reason, self._manual_reason = self._manual_reason, None
         event = {"t": int(t), "proxy": float(value), "triggered": bool(triggered)}
+        if manual and reason is not None:
+            event["reason"] = reason
         if not triggered:
             self.events.append(event)
             return None

@@ -33,7 +33,31 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["StreamingPiEstimator", "DriftDetector"]
+__all__ = ["StreamingPiEstimator", "DriftDetector", "mask_absent"]
+
+
+def mask_absent(labels: np.ndarray, absent: np.ndarray) -> np.ndarray:
+    """Mark whole node rows of a label batch absent (all entries -> -1).
+
+    The one blessed way to hide a node from the streaming estimator for
+    a step -- churn drivers and the quarantine controller both use it,
+    so "absent" means exactly one thing: the row is held (no decay),
+    ``absent_streak`` counts, and ``rejoin_beta`` snaps on return.
+    Returns a copy when any row is masked; the original array otherwise.
+    """
+    labels = np.asarray(labels)
+    if labels.ndim == 1:
+        labels = labels[:, None]
+    absent = np.asarray(absent, bool)
+    if absent.shape != (labels.shape[0],):
+        raise ValueError(
+            f"absent mask must be ({labels.shape[0]},), got {absent.shape}"
+        )
+    if not absent.any():
+        return labels
+    out = labels.copy()
+    out[absent] = -1
+    return out
 
 
 class StreamingPiEstimator:

@@ -259,6 +259,7 @@ class TrainSetup:
         resume: bool = False,
         stop_after_segments: int | None = None,
         delays=None,
+        quarantine=None,
         tracer: "Tracer | None" = None,
         retrace_guard=None,
     ) -> dict:
@@ -318,6 +319,18 @@ class TrainSetup:
         resumed run re-resolves the same delays from ``t0``, bitwise.
         The meter splits delivered bytes into on-time vs deferred per
         the closed form (``comm["deferred_bytes"]``).
+
+        Quarantine accounting: ``quarantine`` (duck-typed -- any object
+        with ``mask() -> (n,) bool`` and ``summary() -> dict``, e.g. a
+        :class:`repro.faults.quarantine.QuarantineController` whose
+        screens run elsewhere) makes the meter charge the
+        ``quarantined_bytes`` fate per segment from the all-gather
+        closed form ``1 - (n-h)(n-h-1) / (n(n-1))`` for ``h`` isolated
+        nodes (scaled into the delivered volume under staleness -- the
+        model treats delay fates as independent of quarantine status),
+        and the controller's lifecycle summary lands in the result
+        under ``"quarantine"``. Typically the same controller also
+        chains the topology hook: pass ``on_segment=qc.on_segment``.
 
         Telemetry: ``tracer`` (a ``repro.obs.Tracer``) records
         ``segment.rollout`` / ``segment.restage`` / ``segment.checkpoint``
@@ -450,6 +463,15 @@ class TrainSetup:
                 # probes dict -- block on the whole tree)
                 loss = jax.block_until_ready(loss)
             segment_s.append(time.perf_counter() - tic)
+            if quarantine is not None:
+                h = int(np.asarray(quarantine.mask(), bool).sum())
+                n = setup.n_nodes
+                q_share = (
+                    1.0 - (n - h) * (n - h - 1) / (n * (n - 1))
+                    if n > 1 and h > 0 else 0.0
+                )
+            else:
+                q_share = 0.0
             if setup.staleness is not None:
                 fates = [
                     staleness_transfer_fracs(
@@ -459,11 +481,13 @@ class TrainSetup:
                 ]
                 on_time = float(np.mean([f[0] for f in fates]))
                 deferred = float(np.mean([f[1] for f in fates]))
+                delivered = on_time + deferred
                 meter.tick(
-                    k, delivered_frac=on_time + deferred, deferred_frac=deferred
+                    k, delivered_frac=delivered, deferred_frac=deferred,
+                    quarantined_frac=delivered * q_share,
                 )
             else:
-                meter.tick(k)
+                meter.tick(k, quarantined_frac=q_share)
             if probe_names:
                 losses.append(np.asarray(loss["loss"]))
                 for nm in probe_names:
@@ -521,6 +545,8 @@ class TrainSetup:
             "resumed_from": resumed_from,
             "stopped_at": stopped_at,
         }
+        if quarantine is not None:
+            out["quarantine"] = quarantine.summary()
         if probe_names:
             empty = np.zeros((0,))
             out["health"] = {

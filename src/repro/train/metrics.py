@@ -176,6 +176,15 @@ class CommMeter:
     would-be-deferred transfers into dropped ones (the repaired
     schedule self-loops them), so the deferred/dropped split is exactly
     the wait-vs-degrade policy decision, metered.
+
+    Quarantine adds a fourth fate, also a SUBSET of delivered:
+    ``tick(k, ..., quarantined_frac=q)`` records that ``q`` of the
+    step's volume crossed the wire touching a quarantined endpoint --
+    bytes that were moved but then excluded from consensus by the
+    quarantine repair (the repaired W self-loops the node). They are
+    the honest cost of the detection window and of keeping a suspect
+    isolated; the screen's value proposition (bytes protected vs bytes
+    forfeited) is read directly off this counter.
     """
 
     per_step_bytes: int = 0
@@ -183,6 +192,7 @@ class CommMeter:
     total_bytes: int = 0
     dropped_bytes: int = 0
     deferred_bytes: int = 0
+    quarantined_bytes: int = 0
     retransmit_bytes: int = 0
     events: list = dataclasses.field(default_factory=list)
 
@@ -191,6 +201,7 @@ class CommMeter:
         k: int = 1,
         delivered_frac: float = 1.0,
         deferred_frac: float = 0.0,
+        quarantined_frac: float = 0.0,
     ) -> None:
         if not 0.0 <= delivered_frac <= 1.0:
             raise ValueError(
@@ -201,6 +212,12 @@ class CommMeter:
                 f"deferred_frac must be in [0, delivered_frac="
                 f"{delivered_frac}], got {deferred_frac} (deferred bytes "
                 f"are a subset of delivered bytes)"
+            )
+        if not 0.0 <= quarantined_frac <= delivered_frac:
+            raise ValueError(
+                f"quarantined_frac must be in [0, delivered_frac="
+                f"{delivered_frac}], got {quarantined_frac} (quarantined "
+                f"bytes are a subset of delivered bytes)"
             )
         self.steps += int(k)
         volume = int(k) * self.per_step_bytes
@@ -214,9 +231,12 @@ class CommMeter:
         # happening to land the same way under fractional fates.
         if delivered_frac > 0.0:
             deferred = int(delivered * (deferred_frac / delivered_frac))
+            quarantined = int(delivered * (quarantined_frac / delivered_frac))
         else:
             deferred = 0
+            quarantined = 0
         self.deferred_bytes += deferred
+        self.quarantined_bytes += quarantined
 
     def retransmit(self, nbytes: int) -> None:
         """Count a successful re-send (delivered, on top of the model)."""
@@ -238,6 +258,7 @@ class CommMeter:
             "total_bytes": self.total_bytes,
             "dropped_bytes": self.dropped_bytes,
             "deferred_bytes": self.deferred_bytes,
+            "quarantined_bytes": self.quarantined_bytes,
             "retransmit_bytes": self.retransmit_bytes,
             "rate_changes": list(self.events),
         }

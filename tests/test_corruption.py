@@ -1,0 +1,896 @@
+"""Corruption-tolerant gossip: injection, screening, quarantine (ISSUE 10).
+
+The invariants under test:
+
+* ``corrupt_wire`` applies corruption at DELIVERY time only: honest
+  senders are bitwise untouched, the corrupting sender's own state stays
+  clean (self-loops move no bytes), dead nodes are forced honest.
+* ``mix_schedule_arrays_screened`` with a clean wire is bitwise the
+  unscreened stale transport; the in-graph guard substitutes the
+  receiver's own payload for non-finite arrivals (and propagates the
+  poison with ``guard=False`` -- the honest screen-off baseline).
+* The host-side screen never flags an honest same-step edge, whatever
+  the heterogeneity: the allowance is derived from the run's own
+  consensus probe, which bounds honest deviations by the triangle
+  inequality (zero false positives by construction, audited by
+  ``false_quarantines`` against the plan's ground truth).
+* ``QuarantineController`` walks trusted -> quarantined -> probation ->
+  readmitted, doubling the cooldown on probation relapse, and chains
+  the Pi-estimator absence masking + refresh requests.
+* The quarantine repair is ONE ``degrade_schedule`` call: W stays
+  exactly doubly stochastic with isolated rows pinned to e_i (the
+  single-survivor / no-identity-slot edge cases of the repair helpers
+  are the satellite regressions).
+* ``FaultPlan.fingerprint()`` is unchanged for every plan that does not
+  corrupt (pinned hashes from the pre-corruption release).
+* The runner routes at trace time: corruption-off arms compile the
+  prior scan body (bitwise), and quarantine/re-admission mask swaps
+  keep ``n_traces == 1``.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import topology as T
+from repro.core.compression import Compressor, ef_mix_schedule_arrays
+from repro.core.mixing import (
+    PermPool,
+    ScheduleArrays,
+    ScreenStats,
+    WireCorruption,
+    corrupt_wire,
+    degrade_pool_gammas,
+    degrade_schedule,
+    mix_schedule_arrays,
+    mix_schedule_arrays_stale,
+    mix_schedule_arrays_screened,
+    schedule_from_matrix,
+    schedule_to_arrays,
+    stale_buffer_init,
+    stale_push,
+)
+from repro.data.synthetic import mean_estimation_clusters
+from repro.faults import (
+    FaultInjector,
+    FaultPlan,
+    QuarantineController,
+    ScreenPolicy,
+    false_quarantines,
+    run_faulty_mean_estimation,
+)
+from repro.obs.report import RunReport, load_report, validate_report
+from repro.online.streaming import StreamingPiEstimator, mask_absent
+from repro.train.metrics import CommMeter
+from repro.train.trainer import run_mean_estimation
+
+
+def _arrays(n: int, l_max: int = 6) -> ScheduleArrays:
+    sched = schedule_from_matrix(0.6 * T.ring(n) + 0.4 * np.eye(n))
+    return schedule_to_arrays(sched, l_max)
+
+
+def _dense(arrays: ScheduleArrays) -> np.ndarray:
+    g = np.asarray(arrays.gammas, np.float64)
+    g = g / g.sum()
+    P = np.asarray(arrays.perms)
+    n = P.shape[1]
+    W = np.zeros((n, n))
+    for l in range(len(g)):
+        W[np.arange(n), P[l]] += g[l]
+    return W
+
+
+def _honest(n: int) -> WireCorruption:
+    return WireCorruption(
+        mult=jnp.ones(n, jnp.float32), xor=jnp.zeros(n, jnp.int32)
+    )
+
+
+# ------------------------------------------------------------ corrupt_wire
+
+
+def test_corrupt_wire_modes_and_honest_bitwise():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(4, 3)).astype(np.float32)
+    mult = jnp.asarray([1.0, -1.0, 8.0, np.nan], jnp.float32)
+    xor = jnp.zeros(4, jnp.int32)
+    out = np.asarray(corrupt_wire(jnp.asarray(x), WireCorruption(mult, xor)))
+    assert np.array_equal(out[0], x[0])  # honest row: BITWISE untouched
+    np.testing.assert_array_equal(out[1], -x[1])
+    np.testing.assert_allclose(out[2], 8.0 * x[2], rtol=1e-6)
+    assert np.isnan(out[3]).all()
+
+
+def test_corrupt_wire_bitflip_is_involutive_xor():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(3, 5)).astype(np.float32)
+    bit = np.int32(1) << np.int32(25)
+    c = WireCorruption(
+        mult=jnp.ones(3, jnp.float32),
+        xor=jnp.asarray([0, bit, 0], jnp.int32),
+    )
+    out = np.asarray(corrupt_wire(jnp.asarray(x), c))
+    assert np.array_equal(out[0], x[0]) and np.array_equal(out[2], x[2])
+    assert not np.array_equal(out[1], x[1])
+    # XOR is an involution: corrupting the corrupted row restores it
+    back = np.asarray(corrupt_wire(jnp.asarray(out), c))
+    np.testing.assert_array_equal(back[1], x[1])
+
+
+def test_corrupt_wire_rejects_non_f32():
+    with pytest.raises(ValueError, match="f32"):
+        corrupt_wire(jnp.zeros((2, 2), jnp.float16), _honest(2))
+
+
+def test_plain_transport_honest_corruption_is_bitwise():
+    """An all-honest WireCorruption selects the untouched wire -- the
+    corrupt= path must be bitwise the corrupt=None path."""
+    n = 6
+    arrays = _arrays(n)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(n, 4)).astype(np.float32))
+    base = mix_schedule_arrays(x, arrays)
+    hon = mix_schedule_arrays(x, arrays, corrupt=_honest(n))
+    assert np.array_equal(np.asarray(base), np.asarray(hon))
+    # and through the EF-compressed wire (identity compressor routes to
+    # the plain transport)
+    ef = jnp.zeros_like(x)
+    b2, _ = ef_mix_schedule_arrays(x, ef, arrays, Compressor("identity"))
+    h2, _ = ef_mix_schedule_arrays(
+        x, ef, arrays, Compressor("identity"), corrupt=_honest(n)
+    )
+    assert np.array_equal(np.asarray(b2), np.asarray(h2))
+
+
+# ------------------------------------------------------- screened transport
+
+
+def _screened_setup(n=6, p=4, seed=3):
+    arrays = _arrays(n)
+    rng = np.random.default_rng(seed)
+    own = jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+    buf = stale_push(stale_buffer_init(own, 1), own)
+    delays = jnp.zeros(n, jnp.int32)
+    return arrays, own, buf, delays
+
+
+def test_screened_clean_wire_bitwise_vs_stale():
+    arrays, own, buf, delays = _screened_setup()
+    base = mix_schedule_arrays_stale(buf, arrays, delays)
+    mixed, stats = mix_schedule_arrays_screened(buf, arrays, delays, own)
+    assert np.array_equal(np.asarray(base), np.asarray(mixed))
+    assert np.asarray(stats.finite).all()
+    np.testing.assert_allclose(
+        np.asarray(stats.sq_own),
+        np.sum(np.asarray(own) ** 2, axis=1),
+        rtol=1e-6,
+    )
+
+
+def test_screened_stats_identify_the_sent_payload():
+    """sq_recv / dot on a corrupted edge describe the CORRUPTED payload
+    (what crossed the wire), keyed by sender through the perm table."""
+    arrays, own, buf, delays = _screened_setup()
+    n = own.shape[0]
+    mult = np.ones(n, np.float32)
+    mult[2] = -1.0  # node 2 sign-flips
+    c = WireCorruption(jnp.asarray(mult), jnp.zeros(n, jnp.int32))
+    _, stats = mix_schedule_arrays_screened(buf, arrays, delays, own, c)
+    per = np.asarray(arrays.perms)
+    gam = np.asarray(arrays.gammas)
+    o = np.asarray(own)
+    sq = np.asarray(stats.sq_recv)
+    dt = np.asarray(stats.dot)
+    for l in range(per.shape[0]):
+        if gam[l] == 0.0:
+            continue
+        for i in range(n):
+            j = per[l, i]
+            if j == i:
+                continue
+            sent = -o[j] if j == 2 else o[j]
+            np.testing.assert_allclose(sq[l, i], (sent**2).sum(), rtol=1e-5)
+            np.testing.assert_allclose(
+                dt[l, i], (sent * o[i]).sum(), rtol=1e-5, atol=1e-5
+            )
+
+
+def test_screened_guard_contains_nan_and_off_propagates():
+    arrays, own, buf, delays = _screened_setup()
+    n = own.shape[0]
+    mult = np.ones(n, np.float32)
+    mult[0] = np.nan
+    c = WireCorruption(jnp.asarray(mult), jnp.zeros(n, jnp.int32))
+    guarded, stats = mix_schedule_arrays_screened(
+        buf, arrays, delays, own, c, guard=True
+    )
+    assert np.isfinite(np.asarray(guarded)).all()
+    # the finite plane marks exactly the edges that carried node 0
+    per = np.asarray(arrays.perms)
+    gam = np.asarray(arrays.gammas)
+    fin = np.asarray(stats.finite)
+    for l in range(per.shape[0]):
+        for i in range(n):
+            expect_bad = gam[l] != 0 and per[l, i] == 0 and i != 0
+            if gam[l] != 0:
+                assert fin[l, i] == (not expect_bad)
+    # node 0's own row never sees its own wire (self-loops are clean)
+    unguarded, _ = mix_schedule_arrays_screened(
+        buf, arrays, delays, own, c, guard=False
+    )
+    u = np.asarray(unguarded)
+    receivers = set()
+    for l in range(per.shape[0]):
+        if gam[l] == 0:
+            continue
+        for i in range(n):
+            if per[l, i] == 0 and i != 0:
+                receivers.add(i)
+    for i in range(n):
+        if i in receivers:
+            assert np.isnan(u[i]).all()
+        else:
+            assert np.isfinite(u[i]).all()
+
+
+# ------------------------------------- satellite 1: degrade edge cases
+
+
+def test_degrade_schedule_single_survivor_exact_identity():
+    n = 6
+    arrays = _arrays(n)
+    for survivor in (0, 3, n - 1):
+        alive = np.zeros(n, dtype=bool)
+        alive[survivor] = True
+        deg = degrade_schedule(arrays, alive)
+        W = _dense(deg)
+        np.testing.assert_array_equal(W, np.eye(n))
+        assert np.array_equal(
+            np.asarray(deg.gammas), np.asarray(arrays.gammas)
+        )
+
+
+def test_degrade_schedule_all_offline_exact_identity():
+    n = 5
+    arrays = _arrays(n)
+    W = _dense(degrade_schedule(arrays, np.zeros(n, dtype=bool)))
+    np.testing.assert_array_equal(W, np.eye(n))
+
+
+def test_degrade_pool_gammas_single_survivor_identity_mass():
+    sched = schedule_from_matrix(0.6 * T.ring(6) + 0.4 * np.eye(6))
+    pool = PermPool.from_schedule(sched, capacity=sched.n_atoms + 2)
+    g, _dropped = pool.project(sched)
+    off = np.ones(6, dtype=bool)
+    off[2] = False  # a single survivor
+    g2 = degrade_pool_gammas(pool, g, off)
+    # every non-identity slot zeroed; total mass exactly preserved
+    ident = pool.identity
+    for l, p in enumerate(pool.perms):
+        if p != ident:
+            assert g2[l] == 0.0
+    np.testing.assert_allclose(
+        float(np.asarray(g2, np.float64).sum()),
+        float(np.asarray(g, np.float64).sum()),
+        rtol=1e-6,
+    )
+
+
+def test_degrade_pool_gammas_no_identity_slot_noop_repair():
+    """The satellite-1 regression: a pool WITHOUT an identity slot must
+    repair fine when no mass needs moving (the offline node is already a
+    fixed point of every slot) -- and raise only when mass must move."""
+    # one swap atom (0<->1), nodes 2,3 fixed; no identity slot staged
+    pool = PermPool(perms=(((1, 0, 2, 3)),))
+    g = np.asarray([1.0], np.float32)
+    off = np.array([False, False, True, False])
+    out = degrade_pool_gammas(pool, g, off)  # pre-fix: raised ValueError
+    np.testing.assert_array_equal(out, g)
+    with pytest.raises(ValueError, match="identity slot"):
+        degrade_pool_gammas(pool, g, np.array([True, False, False, False]))
+
+
+# ------------------------------------- satellite 2: fingerprint back-compat
+
+
+_PINNED_FINGERPRINTS = [
+    (
+        dict(n_nodes=8, steps=40, seed=0, crash_rate=0.05, mean_outage=6.0),
+        "6b4eb458c910a293c2d68835cd690d8a74e09db43ed67ad3649501a57e4382cd",
+    ),
+    (
+        dict(n_nodes=6, steps=25, seed=3, edge_drop_rate=0.1),
+        "9ba9601a7e68e271b31595239e521c899339670178392c6e472ca09b35276eb8",
+    ),
+    (
+        dict(n_nodes=8, steps=60, seed=7, crash_rate=0.03, mean_outage=5.0,
+             straggler_rate=0.2, tau_max=3, edge_drop_rate=0.05,
+             solve_failure_rate=0.1, solve_hang_rate=0.05),
+        "919b405cd86e52d5eeecccba6f13b44d9f85e36e6e44c5a511fd991075def5af",
+    ),
+    (
+        dict(n_nodes=4, steps=10, seed=42),
+        "7877cb996d82253d34936f67b37484b3cb439122ef88a2cc857f6bdf79f9de8c",
+    ),
+]
+
+
+@pytest.mark.parametrize("kwargs,expected", _PINNED_FINGERPRINTS)
+def test_fingerprint_backcompat_pinned(kwargs, expected):
+    """Corruption-free plans fingerprint exactly as the pre-corruption
+    release did -- the corruption planes only hash when present."""
+    plan = FaultPlan(**kwargs)
+    assert not plan.has_corruption
+    assert plan.fingerprint() == expected
+
+
+def test_fingerprint_changes_only_with_corruption():
+    base = FaultPlan(n_nodes=6, steps=30, seed=1).fingerprint()
+    assert FaultPlan(n_nodes=6, steps=30, seed=1).fingerprint() == base
+    hot = FaultPlan(
+        n_nodes=6, steps=30, seed=1, corrupt_rate=0.3, mean_corruption=4.0
+    )
+    assert hot.has_corruption
+    assert hot.fingerprint() != base
+    # scripted (post-edited) corruption is covered too -- has_corruption
+    # checks the derived planes, not the config
+    scripted = FaultPlan(n_nodes=6, steps=30, seed=1)
+    scripted.corrupt_mult[10:, 2] = np.float32(-1.0)
+    assert scripted.has_corruption
+    assert scripted.fingerprint() != base
+    assert scripted.fingerprint() != hot.fingerprint()
+
+
+# --------------------------------------------- plan corruption generation
+
+
+def test_corruption_trace_deterministic_and_mode_held_per_window():
+    kw = dict(n_nodes=8, steps=200, seed=9, corrupt_rate=0.05,
+              mean_corruption=6.0)
+    a, b = FaultPlan(**kw), FaultPlan(**kw)
+    assert np.array_equal(a.corrupt_mult, b.corrupt_mult, equal_nan=True)
+    assert np.array_equal(a.corrupt_xor, b.corrupt_xor)
+    assert a.has_corruption  # 8 nodes x 200 steps at 5% start rate
+    bad = (a.corrupt_mult != np.float32(1.0)) | (a.corrupt_xor != 0)
+    for i in range(8):
+        t = 0
+        while t < 200:
+            if not bad[t, i]:
+                t += 1
+                continue
+            # a contiguous window carries ONE (mult, xor) signature
+            t0 = t
+            while t < 200 and bad[t, i]:
+                t += 1
+            win_m = a.corrupt_mult[t0:t, i]
+            win_x = a.corrupt_xor[t0:t, i]
+            assert np.all(win_x == win_x[0])
+            if np.isnan(win_m[0]):
+                assert np.isnan(win_m).all()
+            else:
+                assert np.all(win_m == win_m[0])
+
+
+def test_corruption_dead_nodes_forced_honest():
+    plan = FaultPlan(
+        n_nodes=8, steps=300, seed=4, crash_rate=0.1, mean_outage=8.0,
+        corrupt_rate=0.5, mean_corruption=20.0,
+    )
+    dead = ~plan.alive
+    assert dead.any()  # the scenario actually exercises the rule
+    assert np.all(plan.corrupt_mult[dead] == np.float32(1.0))
+    assert np.all(plan.corrupt_xor[dead] == 0)
+
+
+def test_corruption_validation():
+    with pytest.raises(ValueError, match="corrupt_rate"):
+        FaultPlan(n_nodes=4, steps=10, seed=0, corrupt_rate=1.5)
+    with pytest.raises(ValueError, match="mean_corruption"):
+        FaultPlan(n_nodes=4, steps=10, seed=0, corrupt_rate=0.1,
+                  mean_corruption=0.5)
+    with pytest.raises(ValueError, match="corrupt_modes"):
+        FaultPlan(n_nodes=4, steps=10, seed=0, corrupt_rate=0.1,
+                  corrupt_modes=())
+    with pytest.raises(ValueError, match="mode"):
+        FaultPlan(n_nodes=4, steps=10, seed=0, corrupt_rate=0.1,
+                  corrupt_modes=("scale:x",))
+
+
+def test_quarantined_frac_closed_form_and_subset():
+    n = 8
+    plan = FaultPlan(n_nodes=n, steps=20, seed=0)
+    none = np.zeros(n, dtype=bool)
+    assert plan.quarantined_frac(3, none) == 0.0
+    for h in (1, 2, 5):
+        mask = np.zeros(n, dtype=bool)
+        mask[:h] = True
+        expect = 1.0 - (n - h) * (n - h - 1) / (n * (n - 1))
+        np.testing.assert_allclose(
+            plan.quarantined_frac(3, mask), expect, rtol=1e-12
+        )
+    # under edge drops the quarantined share can never exceed delivered
+    drop = FaultPlan(n_nodes=n, steps=20, seed=1, edge_drop_rate=0.3)
+    mask = np.zeros(n, dtype=bool)
+    mask[:2] = True
+    for t in range(20):
+        assert drop.quarantined_frac(t, mask) <= drop.delivered_frac(t)
+    with pytest.raises(ValueError):
+        plan.quarantined_frac(0, np.zeros(n - 1, dtype=bool))
+
+
+def test_injector_set_quarantine_isolates_and_streams_corruption():
+    n = 6
+    arrays = _arrays(n)
+    plan = FaultPlan(n_nodes=n, steps=10, seed=0)
+    plan.corrupt_mult[4:, 1] = np.float32(np.nan)
+    inj = FaultInjector(plan, arrays)
+    mask = np.zeros(n, dtype=bool)
+    mask[1] = True
+    inj.set_quarantine(mask)
+    gam, per, _ = inj.stream(0, 10)
+    for t in range(10):
+        W = _dense(ScheduleArrays(
+            gammas=jnp.asarray(gam[t]), perms=jnp.asarray(per[t])
+        ))
+        assert abs(W[1, 1] - 1.0) <= 1e-12
+        assert np.abs(np.delete(W[1], 1)).max() == 0.0
+        assert np.abs(np.delete(W[:, 1], 1)).max() == 0.0
+        # doubly stochastic on the trusted support too
+        assert np.abs(W.sum(axis=0) - 1.0).max() <= 1e-12
+        assert np.abs(W.sum(axis=1) - 1.0).max() <= 1e-12
+    mult, xor = inj.corrupt_stream(2, 5)
+    assert np.array_equal(
+        mult, plan.corrupt_mult[2:7], equal_nan=True
+    )
+    assert np.array_equal(xor, plan.corrupt_xor[2:7])
+    with pytest.raises(ValueError):
+        inj.set_quarantine(np.zeros(n - 1, dtype=bool))
+    with pytest.raises(ValueError):
+        inj.corrupt_stream(8, 5)  # past the end of the plan
+
+
+# ------------------------------------------------- screen policy + screens
+
+
+def test_screen_policy_validation():
+    with pytest.raises(ValueError, match="slack"):
+        ScreenPolicy(slack=0.5)
+    with pytest.raises(ValueError, match="confirm_streak"):
+        ScreenPolicy(confirm_streak=0)
+    with pytest.raises(ValueError, match="cooldown"):
+        ScreenPolicy(cooldown_steps=0)
+    with pytest.raises(ValueError, match="abs_floor"):
+        ScreenPolicy(abs_floor=-1.0)
+    with pytest.raises(ValueError, match="tau_term"):
+        ScreenPolicy(tau_term=-0.1)
+
+
+def test_dev_allow_honest_bound_and_staleness_term():
+    p = ScreenPolicy(slack=1.0, abs_floor=0.0)
+    # fresh: exactly the triangle-inequality bound 2 sqrt(C)
+    np.testing.assert_allclose(
+        p.dev_allow(4.0, 0.0, 0.0, lr=0.1), 4.0, rtol=1e-12
+    )
+    # staleness widens the allowance by the mean-drift term
+    stale = p.dev_allow(4.0, 1.0, 9.0, lr=0.1, tau_max=2)
+    np.testing.assert_allclose(stale, 4.0 + 0.1 * 4 * (3.0 + 1.0),
+                               rtol=1e-12)
+    # tau_term is an operator knob on top
+    wide = ScreenPolicy(slack=1.0, abs_floor=0.0, tau_term=2.0)
+    np.testing.assert_allclose(
+        wide.dev_allow(4.0, 0.0, 0.0, lr=0.1, tau_bar=1.5), 7.0, rtol=1e-12
+    )
+
+
+def _ring_tables(k: int, n: int):
+    """k steps of a single ring atom at gamma 0.5 (every node exposed)."""
+    gam = np.full((k, 1), 0.5, np.float32)
+    per = np.tile(np.roll(np.arange(n), -1)[None, None, :], (k, 1, 1))
+    return gam, per
+
+
+def _stats_from_payloads(pay: np.ndarray, per: np.ndarray) -> ScreenStats:
+    """Host-built ScreenStats for payloads (k, n, p) under tables per."""
+    k, n, _ = pay.shape
+    sq_own = np.sum(pay**2, axis=2)
+    l_max = per.shape[1]
+    sq_recv = np.zeros((k, l_max, n), np.float32)
+    dot = np.zeros((k, l_max, n), np.float32)
+    finite = np.ones((k, l_max, n), bool)
+    for t in range(k):
+        for l in range(l_max):
+            src = per[t, l]
+            sq_recv[t, l] = np.sum(pay[t, src] ** 2, axis=1)
+            dot[t, l] = np.sum(pay[t, src] * pay[t], axis=1)
+            finite[t, l] = np.isfinite(pay[t, src]).all(axis=1)
+    return ScreenStats(sq_own=sq_own, sq_recv=sq_recv, dot=dot,
+                       finite=finite)
+
+
+def _probes_from_payloads(pay: np.ndarray) -> dict:
+    dev = pay - pay.mean(axis=1, keepdims=True)
+    cons = np.max(np.sum(dev**2, axis=2), axis=1)
+    return {
+        "consensus_sq": cons,
+        "gdev_sq": np.zeros_like(cons),
+        "gbar_sq": np.zeros_like(cons),
+    }
+
+
+def test_screen_zero_false_positives_on_heterogeneous_honest_payloads():
+    """Any honest payload set, however skewed, stays under the
+    probe-derived allowance -- the triangle-inequality guarantee."""
+    n, p = 8, 3
+    for seed in range(10):
+        rng = np.random.default_rng(seed)
+        # wildly heterogeneous: per-node offsets up to 100x the noise
+        pay = (rng.normal(size=(5, n, p))
+               * rng.uniform(0.01, 10.0, size=(1, n, 1))
+               + rng.uniform(-50, 50, size=(1, n, 1))).astype(np.float32)
+        gam, per = _ring_tables(5, n)
+        qc = QuarantineController(n, ScreenPolicy(), lr=0.1)
+        qc.ingest(0, _stats_from_payloads(pay, per), gam, per,
+                  _probes_from_payloads(pay))
+        assert qc.n_quarantines == 0, (seed, qc.summary())
+        assert not qc.quarantined.any()
+
+
+def test_quarantine_lifecycle_confirm_cooldown_probation_readmit():
+    n = 4
+    policy = ScreenPolicy(confirm_streak=3, cooldown_steps=4,
+                          probation_steps=2)
+    qc = QuarantineController(n, policy, lr=0.1)
+    rng = np.random.default_rng(0)
+
+    def seg(t0, k, liar=None):
+        pay = rng.normal(size=(k, n, 2)).astype(np.float32)
+        gam, per = _ring_tables(k, n)
+        stats = _stats_from_payloads(pay, per)
+        if liar is not None:
+            fin = np.asarray(stats.finite).copy()
+            src = per[0, 0]
+            fin[:, 0, src == liar] = False  # liar's edges go non-finite
+            stats = stats._replace(finite=fin)
+        return qc.ingest(t0, stats, gam, per, _probes_from_payloads(pay))
+
+    # 2 flagged steps < confirm_streak=3: still trusted
+    seg(0, 2, liar=1)
+    assert not qc.quarantined.any() and qc._streak[1] == 2
+    # a clean exposed step resets the streak (one glitch never confirms)
+    seg(2, 1)
+    assert qc._streak[1] == 0
+    # 3 consecutive flags: quarantined at t = 3 + 2
+    mask = seg(3, 3, liar=1)
+    assert mask[1] and qc.n_quarantines == 1
+    assert qc.events[-1] == {
+        "t": 5, "node": 1, "event": "quarantine", "reason": "confirmed",
+        "cooldown": 4,
+    }
+    # cooldown ticks per STEP; the 4th clean step (t=9) releases node 1
+    # to probation and, being itself clean and exposed, burns the first
+    # of the 2 probation steps
+    seg(6, 4)
+    assert not qc.quarantined[1] and qc._probation[1] == 1
+    assert qc.events[-1] == {"t": 9, "node": 1, "event": "probation"}
+    seg(10, 2)
+    assert qc.n_readmissions == 1
+    assert qc.events[-1]["event"] == "readmitted"
+    assert qc._cooldown_len[1] == 4  # backoff reset on clean re-admission
+
+
+def test_quarantine_probation_relapse_doubles_cooldown():
+    n = 4
+    policy = ScreenPolicy(confirm_streak=1, cooldown_steps=2,
+                          probation_steps=3)
+    qc = QuarantineController(n, policy, lr=0.1)
+    rng = np.random.default_rng(1)
+
+    def seg(t0, k, liar=None):
+        pay = rng.normal(size=(k, n, 2)).astype(np.float32)
+        gam, per = _ring_tables(k, n)
+        stats = _stats_from_payloads(pay, per)
+        if liar is not None:
+            fin = np.asarray(stats.finite).copy()
+            fin[:, 0, per[0, 0] == liar] = False
+            stats = stats._replace(finite=fin)
+        return qc.ingest(t0, stats, gam, per, _probes_from_payloads(pay))
+
+    seg(0, 1, liar=2)  # confirm_streak=1: instant quarantine, cooldown 2
+    assert qc.quarantined[2]
+    seg(1, 2)  # cooldown burns; node 2 released to probation
+    assert not qc.quarantined[2] and qc._probation[2] > 0
+    seg(3, 1, liar=2)  # relapse ON probation: cooldown doubled
+    assert qc.quarantined[2]
+    assert qc.events[-1]["reason"] == "probation_flag"
+    assert qc.events[-1]["cooldown"] == 4
+    assert qc._cooldown_len[2] == 4
+
+
+def test_quarantine_chains_inner_controller():
+    """observe() masks quarantined rows; transitions request refreshes
+    with a recorded reason (duck-typed inner)."""
+
+    class Inner:
+        def __init__(self):
+            self.reasons, self.batches = [], []
+
+        def observe(self, labels):
+            self.batches.append(np.asarray(labels).copy())
+
+        def request_refresh(self, reason=None):
+            self.reasons.append(reason)
+
+        def on_segment(self, t):
+            return None
+
+    n = 4
+    inner = Inner()
+    policy = ScreenPolicy(confirm_streak=1, cooldown_steps=1,
+                          probation_steps=1)
+    qc = QuarantineController(n, policy, lr=0.1, inner=inner)
+    labels = np.arange(n * 3).reshape(n, 3) % 4
+    qc.observe(labels)
+    assert np.array_equal(inner.batches[-1], labels)  # nobody masked
+    rng = np.random.default_rng(2)
+    gam, per = _ring_tables(1, n)
+    pay = rng.normal(size=(1, n, 2)).astype(np.float32)
+    stats = _stats_from_payloads(pay, per)
+    fin = np.asarray(stats.finite).copy()
+    fin[:, 0, per[0, 0] == 3] = False
+    qc.ingest(0, stats._replace(finite=fin), gam, per,
+              _probes_from_payloads(pay))
+    assert inner.reasons == ["quarantine"]
+    qc.observe(labels)
+    assert np.all(inner.batches[-1][3] == -1)  # quarantined row absent
+    assert np.array_equal(inner.batches[-1][:3], labels[:3])
+    # cooldown 1 -> probation, 1 clean exposed step -> readmitted
+    pay = rng.normal(size=(2, n, 2)).astype(np.float32)
+    gam, per = _ring_tables(2, n)
+    qc.ingest(1, _stats_from_payloads(pay, per), gam, per,
+              _probes_from_payloads(pay))
+    assert inner.reasons == ["quarantine", "readmitted"]
+    assert qc.on_segment(0) is None  # delegation is a no-op passthrough
+
+
+def test_false_quarantines_audit():
+    plan = FaultPlan(n_nodes=4, steps=50, seed=0)
+    plan.corrupt_mult[10:20, 1] = np.float32(np.nan)
+    events = [
+        {"t": 12, "node": 1, "event": "quarantine"},  # true positive
+        {"t": 22, "node": 1, "event": "quarantine"},  # lookback: still TP
+        {"t": 12, "node": 2, "event": "quarantine"},  # node 2 was honest
+        {"t": 30, "node": 1, "event": "probation"},   # not a quarantine
+    ]
+    assert false_quarantines(events, plan) == 1
+
+
+# -------------------------- satellite 3: estimator re-admission plumbing
+
+
+def test_mask_absent_shapes_and_passthrough():
+    labels = np.arange(8).reshape(4, 2) % 3
+    none = np.zeros(4, dtype=bool)
+    assert mask_absent(labels, none) is labels  # no copy when untouched
+    mask = np.array([False, True, False, False])
+    out = mask_absent(labels, mask)
+    assert np.all(out[1] == -1) and np.array_equal(out[[0, 2, 3]],
+                                                   labels[[0, 2, 3]])
+    assert np.array_equal(labels[1], np.array([2, 0]))  # input untouched
+    with pytest.raises(ValueError):
+        mask_absent(labels, np.zeros(3, dtype=bool))
+    # 1-D labels promote to a column
+    assert mask_absent(np.array([0, 1, 2]), np.zeros(3, bool)).shape == (3, 1)
+
+
+def test_estimator_holds_quarantined_row_and_snaps_on_rejoin():
+    rng = np.random.default_rng(5)
+    n, K = 4, 3
+    est = StreamingPiEstimator(n, K, beta=0.05, rejoin_beta=0.9)
+    for _ in range(20):
+        est.update(rng.integers(0, K, size=(n, 8)))
+    held = est.Pi_hat[2].copy()
+    mask = np.array([False, False, True, False])
+    # quarantined: the masked row is held EXACTLY, absent_streak counts
+    for j in range(6):
+        est.update(mask_absent(rng.integers(0, K, size=(n, 8)), mask))
+        assert np.array_equal(est.Pi_hat[2], held)
+        assert est.absent_streak[2] == j + 1
+    others = est.Pi_hat[[0, 1, 3]].copy()
+    # re-admitted: rejoin_beta snaps the stale row toward the fresh
+    # batch in ONE update; the honest rows keep their slow beta
+    batch = rng.integers(0, K, size=(n, 8))
+    est.update(batch)
+    freq2 = np.bincount(batch[2], minlength=K) / batch.shape[1]
+    np.testing.assert_allclose(
+        est.Pi_hat[2], 0.1 * held + 0.9 * freq2, atol=1e-12
+    )
+    assert est.absent_streak[2] == 0
+    for r, i in zip(others, (0, 1, 3)):
+        freq = np.bincount(batch[i], minlength=K) / batch.shape[1]
+        np.testing.assert_allclose(
+            est.Pi_hat[i], 0.95 * r + 0.05 * freq, atol=1e-12
+        )
+
+
+# ---------------------------------------------------- meter + report
+
+
+def test_comm_meter_quarantined_fate():
+    m = CommMeter(per_step_bytes=1000)
+    m.tick(4, delivered_frac=0.8, quarantined_frac=0.2)
+    s = m.summary()
+    assert s["total_bytes"] == 3200
+    # derived from the truncated delivered volume: subset by construction
+    assert s["quarantined_bytes"] == int(3200 * (0.2 / 0.8))
+    m.tick(2, delivered_frac=1.0)  # default: no quarantine share
+    assert m.summary()["quarantined_bytes"] == s["quarantined_bytes"]
+    with pytest.raises(ValueError):
+        m.tick(1, delivered_frac=0.5, quarantined_frac=0.6)
+    with pytest.raises(ValueError):
+        m.tick(1, delivered_frac=1.0, quarantined_frac=-0.1)
+
+
+def test_report_quarantine_block_roundtrip(tmp_path):
+    rep = RunReport("q")
+    m = CommMeter(per_step_bytes=10)
+    m.tick(10, delivered_frac=1.0, quarantined_frac=0.3)
+    rep.add_comm(m)
+    rep.add_quarantine({
+        "n_quarantines": 2, "n_readmissions": 1, "quarantined_now": [3],
+        "events": [
+            {"t": 5, "node": 3, "event": "quarantine",
+             "reason": "confirmed", "cooldown": 32},
+            {"t": 40, "node": 3, "event": "probation"},
+            {"t": 44, "node": 3, "event": "readmitted"},
+        ],
+    })
+    doc = rep.to_dict()
+    validate_report(doc)
+    assert doc["quarantine"]["version"] == 1
+    paths = rep.write(str(tmp_path), stem="report")
+    loaded = load_report(paths["json"])
+    assert loaded["quarantine"] == doc["quarantine"]
+    assert loaded["comm"]["quarantined_bytes"] == 30
+    md = rep.to_markdown()
+    assert "quarantined" in md
+    # the block stays optional: a PR 9-era report still validates
+    old = RunReport("old")
+    assert "quarantine" not in old.to_dict()
+    validate_report(old.to_dict())
+    # and a malformed block is rejected
+    bad = dict(doc)
+    bad["quarantine"] = dict(doc["quarantine"])
+    bad["quarantine"]["events"] = [{"t": 1, "node": 0, "event": "exiled"}]
+    with pytest.raises(ValueError):
+        validate_report(bad)
+    bad["quarantine"] = {"version": 1, "n_quarantines": -1,
+                         "n_readmissions": 0, "quarantined_now": [],
+                         "events": []}
+    with pytest.raises(ValueError):
+        validate_report(bad)
+
+
+# ------------------------------------------------------ runner integration
+
+
+@pytest.fixture(scope="module")
+def corr_problem():
+    n, K, steps = 6, 3, 60
+    task = mean_estimation_clusters(n_nodes=n, K=K, m=3.0, sigma_tilde2=0.5)
+    arrays = _arrays(n)
+    rng = np.random.default_rng(8)
+    zs = np.stack([task.sample(2, rng) for _ in range(steps)]).astype(
+        np.float32
+    )
+    return task, arrays, zs, steps
+
+
+def test_runner_corruption_off_routes_to_plain_scan(corr_problem):
+    """Clean plan + no controller: the PRIOR scan body compiles and the
+    trajectory is bitwise the fault-free driver's. Clean plan + a
+    controller: the screened body runs, quarantines nobody, and the
+    trajectory is STILL bitwise."""
+    task, arrays, zs, steps = corr_problem
+    plan = FaultPlan(n_nodes=task.n_nodes, steps=steps, seed=0)
+    kw = dict(lr=0.05, seed=2, zs=zs, segment_len=15)
+    base = run_faulty_mean_estimation(task, plan, arrays, **kw)
+    assert base["n_traces"] == 1
+    assert base["sq_error_nodes"] is None  # unscreened body: no per-node
+    assert base["quarantine"] is None
+    qc = QuarantineController(task.n_nodes, ScreenPolicy(), lr=0.05)
+    screened = run_faulty_mean_estimation(
+        task, plan, arrays, quarantine=qc, **kw
+    )
+    assert screened["n_traces"] == 1
+    assert np.array_equal(
+        screened["mean_sq_error"], base["mean_sq_error"]
+    )
+    assert qc.n_quarantines == 0
+    assert screened["sq_error_nodes"].shape == (steps, task.n_nodes)
+    assert screened["comm"]["quarantined_bytes"] == 0
+    assert screened["quarantine"]["n_quarantines"] == 0
+
+
+def test_runner_quarantines_nan_sender_single_trace(corr_problem):
+    task, arrays, zs, steps = corr_problem
+    n = task.n_nodes
+    plan = FaultPlan(n_nodes=n, steps=steps, seed=0)
+    plan.corrupt_mult[4:, 2] = np.float32(np.nan)
+    policy = ScreenPolicy(confirm_streak=2, cooldown_steps=2 * steps)
+    qc = QuarantineController(n, policy, lr=0.05)
+    out = run_faulty_mean_estimation(
+        task, plan, arrays, quarantine=qc, lr=0.05, seed=2, zs=zs,
+        segment_len=15,
+    )
+    assert out["n_traces"] == 1  # quarantine mask swaps never retrace
+    ev = [e for e in qc.events if e["event"] == "quarantine"]
+    assert ev and ev[0]["node"] == 2
+    assert ev[0]["t"] == 4 + policy.confirm_streak - 1
+    assert false_quarantines(qc.events, plan) == 0
+    assert qc.quarantined[2]
+    comm = out["comm"]
+    assert 0 < comm["quarantined_bytes"] <= comm["total_bytes"]
+    # the mask lands on the segment AFTER confirmation (trace-immutable):
+    # replaying the meter with the closed-form per-segment shares --
+    # zero for segment 0, the h=1 pair count afterwards -- reproduces
+    # the charged bytes exactly
+    mask = np.zeros(n, dtype=bool)
+    mask[2] = True
+    replay = CommMeter(per_step_bytes=comm["per_step_bytes"])
+    for ts in range(0, steps, 15):
+        qf = float(np.mean([
+            plan.quarantined_frac(t, mask) for t in range(ts, ts + 15)
+        ])) if ts >= 15 else 0.0
+        frac = float(np.mean([
+            plan.delivered_frac(t) for t in range(ts, ts + 15)
+        ]))
+        replay.tick(15, delivered_frac=frac, quarantined_frac=qf)
+    assert comm["quarantined_bytes"] == replay.summary()["quarantined_bytes"]
+    # honest trajectory stays finite under the guard
+    assert np.isfinite(out["mean_sq_error"]).all()
+
+
+def test_runner_self_heals_after_corruption_window(corr_problem):
+    """A liar that STOPS lying is re-admitted within the run and stays
+    trusted afterwards."""
+    task, arrays, zs, steps = corr_problem
+    n = task.n_nodes
+    plan = FaultPlan(n_nodes=n, steps=steps, seed=0)
+    plan.corrupt_mult[5:12, 1] = np.float32(np.nan)
+    policy = ScreenPolicy(confirm_streak=2, cooldown_steps=10,
+                          probation_steps=4)
+    qc = QuarantineController(n, policy, lr=0.05)
+    out = run_faulty_mean_estimation(
+        task, plan, arrays, quarantine=qc, lr=0.05, seed=2, zs=zs,
+        segment_len=10,
+    )
+    assert out["n_traces"] == 1
+    kinds = [e["event"] for e in qc.events if e["node"] == 1]
+    assert kinds[:3] == ["quarantine", "probation", "readmitted"]
+    assert qc.n_readmissions == 1
+    assert not qc.quarantined.any()  # fully healed by the end
+    assert false_quarantines(qc.events, plan) == 0
+    summary = out["quarantine"]
+    assert summary["n_readmissions"] == 1
+    assert summary["quarantined_now"] == []
+
+
+def test_runner_corrupting_plan_without_controller_is_screen_off(
+    corr_problem,
+):
+    """plan.has_corruption alone routes to the screened body with the
+    guard OFF: the NaN propagates (the honest divergence baseline) and
+    nothing is quarantined or metered."""
+    task, arrays, zs, steps = corr_problem
+    plan = FaultPlan(n_nodes=task.n_nodes, steps=steps, seed=0)
+    plan.corrupt_mult[4:, 2] = np.float32(np.nan)
+    out = run_faulty_mean_estimation(
+        task, plan, arrays, lr=0.05, seed=2, zs=zs, segment_len=15,
+    )
+    assert out["n_traces"] == 1
+    assert out["quarantine"] is None
+    assert out["comm"]["quarantined_bytes"] == 0
+    assert np.isnan(out["mean_sq_error"][-1])  # poison spread unchecked
+    assert out["sq_error_nodes"] is not None  # screened body ran
